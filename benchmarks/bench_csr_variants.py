@@ -1,0 +1,62 @@
+"""Paper Fig. 2 CSR curve + §III-B7: scatter-CSR cost grows super-linearly
+(random access), sorted-merge CSR stays linear.  Measured two ways:
+
+  device  — wall time of build_csr_scatter vs build_csr_sorted across scales
+  host    — the out-of-core generator's I/O ledger: random vs sequential
+            block transfers for the two variants (the paper's actual cost
+            model, measured rather than argued)
+"""
+
+from __future__ import annotations
+
+import tempfile
+
+from repro.core.csr import build_csr_scatter, build_csr_sorted
+from repro.core.external import StreamingGenerator
+from repro.core.pipeline import generate_edges
+from repro.core.redistribute import redistribute, redistribute_sorted
+from repro.core.relabel import relabel_ring
+from repro.core.shuffle import distributed_shuffle
+from repro.core.types import GraphConfig
+from repro.distributed.collectives import flat_mesh
+
+from .common import normalized, print_table, save_json, time_fn
+
+
+def run(scales=(10, 12, 14), host_scale=10):
+    mesh = flat_mesh(1)
+    rows = []
+    for s in scales:
+        cfg = GraphConfig(scale=s, nb=1, capacity_factor=3.0)
+        pv = distributed_shuffle(cfg, mesh)
+        src, dst = generate_edges(cfg, mesh)
+        ns, nd = relabel_ring(cfg, mesh, src, dst, pv)
+        owned_s = redistribute_sorted(cfg, mesh, ns, nd)
+        owned_u = redistribute(cfg, mesh, ns, nd)
+        rows.append({
+            "scale": s,
+            "sorted_norm": normalized(
+                time_fn(lambda: build_csr_sorted(cfg, mesh, owned_s)), s),
+            "scatter_norm": normalized(
+                time_fn(lambda: build_csr_scatter(cfg, mesh, owned_u)), s),
+        })
+    print_table("CSR variants, device time / 2^(s-16) [s]",
+                rows, ["scale", "sorted_norm", "scatter_norm"])
+
+    # host I/O ledger (the paper's cost unit)
+    io_rows = []
+    for variant in ("sorted", "scatter"):
+        cfg = GraphConfig(scale=host_scale, nb=2, chunk_edges=1 << 10,
+                          capacity_factor=4.0)
+        with tempfile.TemporaryDirectory() as d:
+            _, _, ledger = StreamingGenerator(cfg, d).run(csr_variant=variant)
+        io_rows.append({"variant": variant, **ledger.as_dict()})
+    print_table("CSR variants, host out-of-core I/O ledger",
+                io_rows, ["variant", "seq_reads", "seq_writes",
+                          "rand_reads", "rand_writes"])
+    save_json("csr_variants", {"device": rows, "host_io": io_rows})
+    return rows, io_rows
+
+
+if __name__ == "__main__":
+    run()

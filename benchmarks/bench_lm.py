@@ -1,0 +1,58 @@
+"""LM-side throughput microbenchmarks on CPU smoke configs: train step
+tokens/s and engine decode tokens/s.  Not a paper figure — the harness's
+sanity meter that the training/serving substrate is real and runs."""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.configs.base import SHAPES, get_smoke_config
+from repro.models.registry import init_all, input_specs
+from repro.serve import Engine, Request
+from repro.train import OptimConfig, init_state, make_train_step
+
+from .common import print_table, save_json, time_fn
+
+
+def run(archs=("internlm2-1.8b", "mamba2-780m", "qwen3-moe-235b-a22b")):
+    rows = []
+    small = dataclasses.replace(SHAPES["train_4k"], seq_len=64, global_batch=4)
+    for arch in archs:
+        cfg = get_smoke_config(arch)
+        ocfg = OptimConfig()
+        state, _ = init_state(cfg, ocfg)
+        batch = input_specs(cfg, small, mode="init")
+        fn = jax.jit(make_train_step(cfg, ocfg, None))
+        state, _ = fn(state, batch)  # compile
+        t = time_fn(lambda: fn(state, batch), repeats=3)
+        toks = small.seq_len * small.global_batch
+        rows.append({"arch": arch, "train_ms": t * 1e3,
+                     "train_tok_s": toks / t})
+    print_table("LM train-step throughput (smoke configs, CPU)",
+                rows, ["arch", "train_ms", "train_tok_s"])
+
+    srows = []
+    for arch in ("internlm2-1.8b", "mamba2-780m"):
+        cfg = get_smoke_config(arch)
+        params, _ = init_all(cfg)
+        eng = Engine(cfg, params, max_batch=4, max_len=64)
+        rng = np.random.default_rng(0)
+        reqs = [Request(uid=i, prompt=rng.integers(0, cfg.vocab_size, 4).tolist(),
+                        max_new_tokens=8) for i in range(8)]
+        import time
+        t0 = time.perf_counter()
+        eng.run(reqs)
+        dt = time.perf_counter() - t0
+        srows.append({"arch": arch, "decode_tok_s": eng.decode_tokens / dt,
+                      "engine_steps": eng.steps})
+    print_table("Engine decode throughput (smoke configs, CPU)",
+                srows, ["arch", "decode_tok_s", "engine_steps"])
+    save_json("lm_throughput", {"train": rows, "serve": srows})
+    return rows, srows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,42 @@
+"""Deliverable (g) reporting: render the roofline table from the dry-run
+records (experiments/dryrun_baseline.jsonl), one row per (arch x shape x
+mesh) cell.  The dry-run itself is `python -m repro.launch.dryrun`; this
+benchmark only reads its output so `python -m benchmarks.run` stays fast."""
+
+from __future__ import annotations
+
+import json
+import os
+
+from .common import print_table, save_json
+
+BASELINE = "experiments/dryrun_final.jsonl"
+
+
+def run(path=BASELINE):
+    if not os.path.exists(path):
+        print(f"[bench_roofline] {path} missing — run "
+              f"`PYTHONPATH=src python -m repro.launch.dryrun --out {path}`")
+        return []
+    recs = [json.loads(l) for l in open(path)]
+    ok = [r for r in recs if r["status"] == "ok"]
+    rows = []
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        ro = r["roofline"]
+        rows.append({
+            "arch": r["arch"][:20], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute": ro["t_compute_s"], "t_memory": ro["t_memory_s"],
+            "t_coll": ro["t_collective_s"], "bound": ro["bottleneck"][:4],
+            "useful": ro["useful_flops_ratio"], "mfu_bound": ro["mfu_bound"],
+        })
+    print_table("Roofline terms per dry-run cell (from compiled HLO)",
+                rows, ["arch", "shape", "mesh", "t_compute", "t_memory",
+                       "t_coll", "bound", "useful", "mfu_bound"])
+    n_skip = sum(r["status"] == "skipped" for r in recs)
+    print(f"[{len(ok)} cells ok, {n_skip} documented skips]")
+    save_json("roofline_table", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

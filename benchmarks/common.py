@@ -1,0 +1,45 @@
+"""Shared benchmark utilities: phase timing, normalization, table printing."""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable, Dict, List
+
+import jax
+
+
+def time_fn(fn: Callable, *args, repeats: int = 3, **kw) -> float:
+    """Best-of-N wall time with block_until_ready on pytree outputs."""
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        best = min(best, time.perf_counter() - t0)
+    return best
+
+
+def normalized(t: float, scale: int, base_scale: int = 16) -> float:
+    """The paper's Fig. 2/4 normalization: divide by 2^(s-16)."""
+    return t / (2.0 ** (scale - base_scale))
+
+
+def print_table(title: str, rows: List[Dict], cols: List[str]):
+    print(f"\n== {title} ==")
+    header = " | ".join(f"{c:>14s}" for c in cols)
+    print(header)
+    print("-" * len(header))
+    for r in rows:
+        print(" | ".join(
+            f"{r[c]:14.4f}" if isinstance(r[c], float) else f"{str(r[c]):>14s}"
+            for c in cols))
+
+
+def save_json(name: str, payload):
+    os.makedirs("experiments/bench", exist_ok=True)
+    path = f"experiments/bench/{name}.json"
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+    print(f"[saved {path}]")

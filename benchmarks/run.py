@@ -1,0 +1,67 @@
+"""Benchmark harness entry point: `PYTHONPATH=src python -m benchmarks.run`.
+
+One module per paper table/figure (DESIGN.md §6):
+
+  bench_single_node     Fig. 2   per-phase, normalized, single node
+  bench_strong_scaling  Fig. 3/4 fixed size, growing shard count
+  bench_weak_scaling    Fig. 5   size and shards grow together
+  bench_hash_vs_sort    §I       hashing vs chunk-sort microbench
+  bench_csr_variants    Fig. 2 CSR + §III-B7  scatter vs sorted (+ I/O ledger)
+  bench_lm              substrate sanity: train/serve throughput
+  bench_roofline        deliverable (g): render the dry-run roofline table
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-list of bench names")
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller scales (CI mode)")
+    args = ap.parse_args()
+
+    from . import (bench_csr_variants, bench_hash_vs_sort, bench_lm,
+                   bench_roofline, bench_single_node, bench_strong_scaling,
+                   bench_weak_scaling)
+
+    benches = {
+        "single_node": lambda: bench_single_node.run(
+            scales=(10, 12) if args.fast else (10, 12, 14, 16)),
+        "strong_scaling": lambda: bench_strong_scaling.run(
+            scales=(12,) if args.fast else (12, 14),
+            shard_counts=(1, 2, 4) if args.fast else (1, 2, 4, 8)),
+        "weak_scaling": lambda: bench_weak_scaling.run(
+            steps=3 if args.fast else 4),
+        "hash_vs_sort": lambda: bench_hash_vs_sort.run(
+            log_n=20 if args.fast else 22),
+        "csr_variants": lambda: bench_csr_variants.run(
+            scales=(10, 12) if args.fast else (10, 12, 14)),
+        "lm": bench_lm.run,
+        "roofline": bench_roofline.run,
+    }
+    chosen = [s for s in args.only.split(",") if s] or list(benches)
+
+    failed = []
+    for name in chosen:
+        print(f"\n######## {name} ########")
+        t0 = time.time()
+        try:
+            benches[name]()
+            print(f"[{name} done in {time.time() - t0:.1f}s]")
+        except Exception:
+            traceback.print_exc()
+            failed.append(name)
+    if failed:
+        print(f"\nFAILED: {failed}")
+        sys.exit(1)
+    print("\nAll benchmarks completed.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""repro: External-memory distributed graph generation (Gupta 2012) as a JAX framework.
+
+Layers:
+  core/         the paper's contribution: shuffle, R-MAT, relabel, redistribute, CSR
+  kernels/      Pallas TPU kernels for the compute hot spots
+  models/       composable LM stack for the assigned architectures
+  configs/      one config per assigned architecture (+ the paper's own)
+  data/         graph -> random-walk token pipeline
+  train/        train step, optimizer, checkpoints
+  serve/        KV-cache engine, prefill/decode
+  distributed/  sharding rules, collectives, fault tolerance, compression
+  launch/       mesh, dryrun, train/serve drivers
+"""
+
+__version__ = "1.0.0"

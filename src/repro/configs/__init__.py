@@ -1,0 +1,7 @@
+"""One config per assigned architecture (+ the paper's own graph configs).
+
+`get_config(name)` resolves any assigned architecture id; `SMOKE[name]`
+gives the reduced same-family config used by CPU smoke tests.
+"""
+
+from .base import ModelConfig, ShapeSpec, SHAPES, arch_ids, get_config, get_smoke_config  # noqa: F401

@@ -1,0 +1,12 @@
+"""The paper's primary contribution: external-memory distributed graph
+generation — shuffle, R-MAT, relabel, redistribute, CSR — as shard_map
+collectives + chunk-streamed host storage."""
+
+from .types import GraphConfig, owner_of, quadrant_thresholds  # noqa: F401
+from .rmat import rmat_edge_block, mix32, counter_uniform_u32  # noqa: F401
+from .shuffle import distributed_shuffle, shuffle_argsort, pv_is_permutation  # noqa: F401
+from .relabel import relabel_ring, relabel_alltoall  # noqa: F401
+from .redistribute import redistribute, redistribute_sorted, OwnedEdges  # noqa: F401
+from .csr import build_csr_scatter, build_csr_sorted, CSRShards, csr_neighbors  # noqa: F401
+from .hashing import feistel_permute, hash_relabel, hash_permutation_vector  # noqa: F401
+from .pipeline import generate, generate_edges, generate_baseline_hash, GraphResult  # noqa: F401

@@ -1,0 +1,82 @@
+"""Hash-based relabel baseline (the Graph500 'hashing based' kernel, §I).
+
+The reference Graph500 kernel avoids the permutation vector entirely: a
+perfect hash (MRG-family) maps old id -> new id in O(1) from main memory.
+The paper's whole point is that this is the *memory-bound* design: it needs
+the full graph resident, so scale-34 demands ~8 TB of DRAM.
+
+We implement the baseline faithfully-in-spirit with a **Feistel network on
+`scale` bits**: provably a bijection on [0, 2**scale) for any scale, collision
+free, high-quality mixing, O(1) per lookup, vectorizes perfectly — the same
+properties the MRG hash is chosen for.  Benchmarks compare it against the
+paper's shuffle+relabel pipeline (the paper's own micro-comparison: hashing
+2^30 ints = 1.34 s vs chunk-sorting them = 5.134 s on their machine).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from .rmat import mix32
+from .types import GraphConfig
+
+_ROUNDS = 4
+
+
+def _feistel_even(v: jnp.ndarray, bits: int, seed: int) -> jnp.ndarray:
+    """Balanced Feistel on an even number of bits: provably a bijection on
+    [0, 2**bits) regardless of the round function."""
+    half = bits // 2
+    mask = jnp.uint32((1 << half) - 1)
+    L = (v >> half) & mask
+    R = v & mask
+    for r in range(_ROUNDS):
+        k = jnp.uint32(seed) ^ jnp.uint32((r * 0x9E3779B9) & 0xFFFFFFFF)
+        L, R = R, L ^ (mix32(R + k) & mask)
+    return (L << half) | R
+
+
+def feistel_permute(v: jnp.ndarray, scale: int, seed: int) -> jnp.ndarray:
+    """Bijective map on [0, 2**scale) via Feistel + cycle walking.
+
+    Odd `scale` is handled by running the network on scale+1 bits and
+    *cycle walking*: re-encrypt any output that falls outside [0, 2**scale)
+    until it lands inside.  Cycle walking preserves the bijection exactly
+    (standard format-preserving-encryption argument), and terminates because
+    the permutation's cycles are finite.  Tests verify bijectivity for
+    scales 4..20, odd and even.
+    """
+    v = v.astype(jnp.uint32)
+    bits = scale + (scale & 1)
+    n = jnp.uint32(1) << scale
+    x = _feistel_even(v, bits, seed)
+    if bits == scale:
+        return x
+
+    def cond(x):
+        return jnp.any(x >= n)
+
+    def body(x):
+        return jnp.where(x >= n, _feistel_even(x, bits, seed), x)
+
+    return jax.lax.while_loop(cond, body, x)
+
+
+@partial(jax.jit, static_argnames=("cfg",))
+def hash_relabel(cfg: GraphConfig, src: jnp.ndarray, dst: jnp.ndarray):
+    """The baseline kernel's relabel: new = H(old), no pv, no communication.
+
+    This is what the paper's pipeline replaces when memory is scarce.
+    """
+    ns = feistel_permute(src, cfg.scale, cfg.seed).astype(src.dtype)
+    nd = feistel_permute(dst, cfg.scale, cfg.seed).astype(dst.dtype)
+    return ns, nd
+
+
+def hash_permutation_vector(cfg: GraphConfig) -> jnp.ndarray:
+    """Materialize H as a pv (for cross-validating against relabel paths)."""
+    ids = jnp.arange(cfg.n, dtype=jnp.uint32)
+    return feistel_permute(ids, cfg.scale, cfg.seed).astype(cfg.vertex_dtype)

@@ -1,0 +1,115 @@
+"""Shared types and notation for the graph-generation core.
+
+Mirrors the paper's §II preliminaries:
+
+  n  = 2**scale          number of vertices
+  m  = n * edge_factor   number of (directed) generated edges
+  nb = number of "compute nodes" -> here: mesh shards
+  B  = n / nb            bucket size (vertices per shard; range partition RP(n, nb))
+  b  = B / nc            bin size (vertices per core) -> here: per-lane work, implicit
+  mmc                    memory per core -> here: chunk_edges (device chunk) / VMEM tile
+  C_e                    edges per disk block -> here: edges per host-store block
+
+Vertex ownership (the paper's "a core owns the nodes in its partition range,
+and the edges whose source is in its range"):
+
+  owner(v) = v // B
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax.numpy as jnp
+
+# Graph500 R-MAT parameters (Chakrabarti et al. 2004; Graph500 spec).
+RMAT_A = 0.57
+RMAT_B = 0.19
+RMAT_C = 0.19
+RMAT_D = 0.05
+DEFAULT_EDGE_FACTOR = 16
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphConfig:
+    """Configuration for one graph-generation run (the paper's (n, f) inputs
+    plus the machine-shape knobs the paper hard-codes in its MPI setup)."""
+
+    scale: int = 16                       # n = 2**scale vertices
+    edge_factor: int = DEFAULT_EDGE_FACTOR
+    seed: int = 0x5EED_1234
+    # R-MAT quadrant probabilities (a, b, c, d).
+    a: float = RMAT_A
+    b: float = RMAT_B
+    c: float = RMAT_C
+    d: float = RMAT_D
+    # --- machine shape ---------------------------------------------------
+    nb: int = 1                           # number of shards ("compute nodes")
+    chunk_edges: int = 1 << 16            # mmc analogue: edges per in-memory chunk
+    # --- static-shape adaptation ----------------------------------------
+    # The paper's "send packet when full" becomes a fixed-capacity bucketed
+    # all_to_all.  capacity_factor scales the per-destination buffer above
+    # the uniform expectation to absorb R-MAT skew.
+    capacity_factor: float = 2.0
+    # --- algorithm variants ----------------------------------------------
+    shuffle_rounds: int = 0               # 0 = auto = ceil(log_nb(n)) (paper)
+    relabel_variant: str = "ring"         # "ring" (paper-faithful) | "alltoall" (optimized)
+    csr_variant: str = "sorted"           # "sorted" (paper §III-B7) | "scatter" (paper Alg.10/11)
+    vertex_dtype: jnp.dtype = jnp.int32
+
+    # --- derived ----------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return 1 << self.scale
+
+    @property
+    def m(self) -> int:
+        return self.n * self.edge_factor
+
+    @property
+    def bucket_size(self) -> int:
+        """B = n / nb vertices per shard.  n is a power of two; require nb | n."""
+        assert self.n % self.nb == 0, f"nb={self.nb} must divide n={self.n}"
+        return self.n // self.nb
+
+    @property
+    def edges_per_shard(self) -> int:
+        assert self.m % self.nb == 0
+        return self.m // self.nb
+
+    @property
+    def rounds(self) -> int:
+        """Number of shuffle rounds: the paper's log_nb(n) (Alg. 4 line 8)."""
+        if self.shuffle_rounds > 0:
+            return self.shuffle_rounds
+        if self.nb <= 1:
+            return 1
+        import math
+
+        return max(1, int(math.ceil(math.log(self.n) / math.log(self.nb))))
+
+    def with_(self, **kw) -> "GraphConfig":
+        return dataclasses.replace(self, **kw)
+
+
+def owner_of(v: jnp.ndarray, bucket_size: int) -> jnp.ndarray:
+    """Range-partition owner: owner(v) = v // B  (paper's RP(n, nb))."""
+    return v // bucket_size
+
+
+def quadrant_thresholds(cfg: GraphConfig) -> Tuple[int, int, int]:
+    """Integer thresholds (on the uint32 lattice) for one R-MAT bit step.
+
+    P(src_bit = 1)              = c + d
+    P(dst_bit = 1 | src_bit=0)  = b / (a + b)
+    P(dst_bit = 1 | src_bit=1)  = d / (c + d)
+
+    Returned as uint32 cut points so the jnp reference and the Pallas kernel
+    compare *identical integers* (bit-exact reproducibility across backends).
+    """
+    two32 = float(1 << 32)
+    t_src = int((cfg.c + cfg.d) * two32)
+    t_dst0 = int((cfg.b / (cfg.a + cfg.b)) * two32)
+    t_dst1 = int((cfg.d / (cfg.c + cfg.d)) * two32)
+    return t_src, t_dst0, t_dst1

@@ -1,0 +1,99 @@
+"""Graph500-style validation of a generated graph (deliverable of kernel 1).
+
+Checks (host-side, exact):
+  * pv is a bijection on [0:n)
+  * edge count conservation through every phase (generation -> relabel ->
+    redistribute -> CSR), including accounting for reported drops
+  * relabel correctness: multiset of edges after relabel equals the multiset
+    of (pv[u], pv[v]) of the generated edges
+  * ownership: every edge landed on owner(src) (RP(n, nb))
+  * CSR invariants: offv monotone, offv[-1] == edges owned, adjacency
+    multiset matches owned edge multiset
+  * de-biasing (the *reason* the paper shuffles): raw R-MAT endpoints are
+    concentrated on small ids; relabeled endpoints are near-uniform
+"""
+
+from __future__ import annotations
+
+from typing import Dict
+
+import numpy as np
+
+from .types import GraphConfig
+
+
+def check_permutation(pv) -> bool:
+    pv = np.asarray(pv)
+    n = pv.shape[0]
+    seen = np.zeros(n, dtype=bool)
+    seen[pv] = True
+    return bool(seen.all())
+
+
+def edge_multiset(src, dst) -> np.ndarray:
+    """Canonical sorted array of packed (src,dst) pairs for multiset compare."""
+    src = np.asarray(src, np.int64)
+    dst = np.asarray(dst, np.int64)
+    packed = (src << 32) | (dst & 0xFFFFFFFF)
+    return np.sort(packed)
+
+
+def check_relabel(src, dst, new_src, new_dst, pv) -> bool:
+    pv = np.asarray(pv)
+    want = edge_multiset(pv[np.asarray(src)], pv[np.asarray(dst)])
+    got = edge_multiset(new_src, new_dst)
+    return bool(np.array_equal(want, got))
+
+
+def check_ownership(owned_src, owned_valid, cfg: GraphConfig) -> bool:
+    """Every valid edge on shard i must have src in [i*B, (i+1)*B)."""
+    B = cfg.bucket_size
+    src = np.asarray(owned_src).reshape(cfg.nb, -1)
+    valid = np.asarray(owned_valid).reshape(cfg.nb, -1)
+    for i in range(cfg.nb):
+        s = src[i][valid[i]]
+        if s.size and not ((s >= i * B) & (s < (i + 1) * B)).all():
+            return False
+    return True
+
+
+def check_csr(csr, owned, cfg: GraphConfig) -> Dict[str, bool]:
+    """CSR invariants + adjacency multiset vs the owned edges."""
+    B = cfg.bucket_size
+    offv = np.asarray(csr.offv).reshape(cfg.nb, B + 1)
+    adjv = np.asarray(csr.adjv).reshape(cfg.nb, -1)
+    src = np.asarray(owned.src).reshape(cfg.nb, -1)
+    dst = np.asarray(owned.dst).reshape(cfg.nb, -1)
+    valid = np.asarray(owned.valid).reshape(cfg.nb, -1)
+    ok_monotone, ok_counts, ok_multiset = True, True, True
+    for i in range(cfg.nb):
+        o = offv[i]
+        cnt = int(valid[i].sum())
+        ok_monotone &= bool((np.diff(o) >= 0).all())
+        ok_counts &= int(o[-1]) == cnt
+        # multiset of (row, dst) reconstructed from CSR == owned edges
+        rows = np.repeat(np.arange(B), np.diff(o))
+        got = edge_multiset(rows + i * B, adjv[i][: cnt])
+        want = edge_multiset(src[i][valid[i]], dst[i][valid[i]])
+        ok_multiset &= bool(np.array_equal(got, want))
+    return {"monotone": ok_monotone, "counts": ok_counts, "multiset": ok_multiset}
+
+
+def endpoint_skew(src, dst, n: int, frac: int = 16) -> float:
+    """Fraction of endpoints in the lowest n/frac ids (1/frac == unbiased)."""
+    lo = n // frac
+    src = np.asarray(src)
+    dst = np.asarray(dst)
+    cnt = int((src < lo).sum() + (dst < lo).sum())
+    return cnt / float(src.size + dst.size)
+
+
+def degree_stats(csr, cfg: GraphConfig) -> Dict[str, float]:
+    B = cfg.bucket_size
+    offv = np.asarray(csr.offv).reshape(cfg.nb, B + 1)
+    deg = np.diff(offv, axis=1).reshape(-1)
+    return {
+        "max_degree": float(deg.max()),
+        "mean_degree": float(deg.mean()),
+        "gini_proxy": float((deg > 4 * deg.mean()).mean()),  # heavy-tail marker
+    }

@@ -1,0 +1,2 @@
+from .loader import LoaderConfig, WalkLoader  # noqa: F401
+from .walks import distributed_walks, host_walks, walks_to_tokens  # noqa: F401

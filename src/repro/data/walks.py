@@ -1,0 +1,206 @@
+"""Random-walk corpus generation over generated graphs.
+
+Two samplers over the same CSR:
+
+  host_walks            numpy, sequential-access host sampler (the oracle,
+                        and the loader's default on one host)
+  distributed_walks     shard_map sampler where walkers MIGRATE between
+                        shards with the paper's k:1 scatter-gather
+                        (capacity_all_to_all): at every step each walker is
+                        shipped to the shard that owns its current vertex
+                        (the paper's "a core owns its range's vertices"),
+                        which advances it one hop from its LOCAL CSR rows.
+                        This is the redistribute phase run once per walk
+                        step — the generator's communication machinery
+                        reused verbatim by the training-data subsystem.
+
+Walk semantics (both samplers, bit-identical): counter-based RNG keyed by
+(seed, walker_id, step); a walker at a sink vertex (deg 0) teleports to
+hash(walker, step) % n.  Tokenization: token = vertex % vocab (stable,
+vocabulary-bounded).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax import lax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from ..core.types import GraphConfig, owner_of
+from ..distributed.collectives import capacity_all_to_all
+
+
+def _mix32_np(x: np.ndarray) -> np.ndarray:
+    x = x.astype(np.uint32)
+    x ^= x >> np.uint32(16)
+    x = (x * np.uint32(0x7FEB352D)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(15)
+    x = (x * np.uint32(0x846CA68B)) & np.uint32(0xFFFFFFFF)
+    x ^= x >> np.uint32(16)
+    return x
+
+
+def _mix32_jnp(x: jnp.ndarray) -> jnp.ndarray:
+    x = x.astype(jnp.uint32)
+    x = x ^ (x >> 16)
+    x = x * jnp.uint32(0x7FEB352D)
+    x = x ^ (x >> 15)
+    x = x * jnp.uint32(0x846CA68B)
+    x = x ^ (x >> 16)
+    return x
+
+
+def _walk_rand_np(seed: int, walker: np.ndarray, step: int) -> np.ndarray:
+    s = np.uint32(seed & 0xFFFFFFFF)
+    return _mix32_np(_mix32_np(walker.astype(np.uint32) ^ s)
+                     + np.uint32((step * 0x9E3779B9) & 0xFFFFFFFF))
+
+
+def _walk_rand_jnp(seed: int, walker: jnp.ndarray, step) -> jnp.ndarray:
+    s = jnp.uint32(seed & 0xFFFFFFFF)
+    stepc = jnp.uint32(step) * jnp.uint32(0x9E3779B9)
+    return _mix32_jnp(_mix32_jnp(walker.astype(jnp.uint32) ^ s) + stepc)
+
+
+def start_vertex(seed: int, walker: np.ndarray, n_or_B: int, base: int = 0):
+    """Deterministic start vertex of a walker (shared by both samplers)."""
+    if isinstance(walker, np.ndarray):
+        return base + (_walk_rand_np(seed ^ 0xA5A5, walker, 0) % np.uint32(n_or_B)).astype(np.int64)
+    return (base + (_walk_rand_jnp(seed ^ 0xA5A5, walker, 0) % jnp.uint32(n_or_B))).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# host oracle
+# ---------------------------------------------------------------------------
+
+
+def host_walks(offv: np.ndarray, adjv: np.ndarray, starts: np.ndarray,
+               length: int, seed: int, n: Optional[int] = None,
+               walker_ids: Optional[np.ndarray] = None) -> np.ndarray:
+    """[W, length+1] vertex walks.  starts [W]."""
+    n = n if n is not None else offv.shape[0] - 1
+    W = starts.shape[0]
+    wid = (walker_ids if walker_ids is not None
+           else np.arange(W)).astype(np.uint32)
+    pos = starts.astype(np.int64).copy()
+    hist = np.zeros((W, length + 1), np.int64)
+    hist[:, 0] = pos
+    for t in range(length):
+        deg = (offv[pos + 1] - offv[pos]).astype(np.int64)
+        r = _walk_rand_np(seed, wid, t + 1).astype(np.int64)
+        sink = deg == 0
+        idx = offv[pos] + np.where(sink, 0, r % np.maximum(deg, 1))
+        nxt = np.where(sink, r % n, adjv[np.minimum(idx, adjv.shape[0] - 1)])
+        pos = nxt.astype(np.int64)
+        hist[:, t + 1] = pos
+    return hist
+
+
+# ---------------------------------------------------------------------------
+# distributed sampler (walker redistribution = paper's scatter-gather)
+# ---------------------------------------------------------------------------
+
+
+@partial(jax.jit, static_argnames=("cfg", "mesh", "length", "seed", "axis",
+                                   "walkers_per_shard", "capacity_factor"))
+def distributed_walks(
+    cfg: GraphConfig,
+    mesh: Mesh,
+    offv: jnp.ndarray,       # [nb*(B+1)] sharded per-shard local offsets
+    adjv: jnp.ndarray,       # [nb*cap_m] sharded adjacency
+    *,
+    length: int,
+    seed: int = 0,
+    walkers_per_shard: int = 64,
+    capacity_factor: float = 4.0,
+    axis: str = "shards",
+):
+    """Walk histories [nb*cap, length+1], validity [nb*cap], walker ids
+    [nb*cap], global dropped count.
+
+    Walkers start at deterministic vertices of the launching shard and hop;
+    before every hop all walkers are redistributed to the owner shard of
+    their current vertex via capacity_all_to_all, so each hop reads only
+    LOCAL CSR rows (the external-memory discipline: every shard touches its
+    own bucket, never random remote rows).  Hub-vertex skew can overflow the
+    fixed per-pair capacity — overflowed walkers are counted, their rows
+    marked invalid (tests assert zero drops at the configured factor).
+    """
+    B = cfg.bucket_size
+    n = cfg.n
+    W = walkers_per_shard
+    k = mesh.shape[axis]
+    # per-(src,dst)-pair exchange capacity; every shard holds cap = cp*k rows
+    cp = max(1, int(np.ceil(W * capacity_factor / k)))
+    cap = cp * k
+
+    def per_shard(offv_l, adjv_l):
+        bid = lax.axis_index(axis)
+        base = (bid * B).astype(jnp.int32)
+        wid = (bid * W + jnp.arange(W, dtype=jnp.int32)).astype(jnp.int32)
+        pos = start_vertex(seed, wid.astype(jnp.uint32), B, base)
+        alive = jnp.ones((W,), jnp.int32)
+
+        def pad_to(x, fill=0):
+            extra = cap - x.shape[0]
+            return jnp.concatenate(
+                [x, jnp.full((extra,) + x.shape[1:], fill, x.dtype)])
+
+        pos, wid = pad_to(pos), pad_to(wid, -1)
+        # alive starts axis-invariant but becomes axis-varying through the
+        # exchange; mark it varying so the scan carry types match
+        alive = lax.pvary(pad_to(alive), (axis,))
+        hist = jnp.zeros((cap, length + 1), jnp.int32).at[:, 0].set(pos)
+
+        def step(carry, t):
+            pos, hist, alive, wid = carry
+            payload = jnp.concatenate(
+                [pos[:, None], wid[:, None], alive[:, None], hist], axis=1)
+            ex = capacity_all_to_all(payload, owner_of(pos, B), axis=axis,
+                                     capacity=cp, valid=alive == 1)
+            rp = ex.data.reshape(-1, payload.shape[1])            # [cap, 3+L+1]
+            rvalid = ex.valid.reshape(-1)
+            rpos, rwid, ralive = rp[:, 0], rp[:, 1], rp[:, 2]
+            rhist = rp[:, 3:]
+            alive_now = (rvalid & (ralive == 1)).astype(jnp.int32)
+            # advance one hop from local CSR rows
+            row = jnp.clip(rpos - bid * B, 0, B - 1)
+            start, end = offv_l[row], offv_l[row + 1]
+            deg = end - start
+            r = _walk_rand_jnp(seed, rwid.astype(jnp.uint32), t + 1)
+            sink = deg <= 0
+            idx = start + jnp.where(
+                sink, 0,
+                (r % jnp.maximum(deg, 1).astype(jnp.uint32)).astype(jnp.int32))
+            nxt = jnp.where(sink, (r % jnp.uint32(n)).astype(jnp.int32),
+                            adjv_l[jnp.clip(idx, 0, adjv_l.shape[0] - 1)])
+            nxt = jnp.where(alive_now == 1, nxt, 0)
+            rhist = jax.vmap(
+                lambda h, v: h.at[t + 1].set(v))(rhist, nxt)
+            return (nxt, rhist, alive_now, rwid), ex.dropped
+
+        (pos, hist, alive, wid), dropped = lax.scan(
+            step, (pos, hist, alive, wid), jnp.arange(length, dtype=jnp.int32))
+        # ex.dropped is already psum'd -> every shard holds the same global
+        # per-step totals; sum over steps, report one copy per shard.
+        return hist, alive, wid, jnp.sum(dropped)[None]
+
+    fn = jax.shard_map(
+        per_shard, mesh=mesh,
+        in_specs=(P(axis), P(axis)),
+        out_specs=(P(axis), P(axis), P(axis), P(axis)),
+    )
+    hist, alive, wid, dropped = fn(offv, adjv)
+    return hist, alive == 1, wid, dropped[0]
+
+
+def walks_to_tokens(walks: np.ndarray, vocab: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Vertex walks [W, L+1] -> (tokens [W, L], labels [W, L]) next-token LM
+    pairs; token = vertex % vocab."""
+    toks = (walks % vocab).astype(np.int32)
+    return toks[:, :-1], toks[:, 1:].copy()

@@ -1,0 +1,4 @@
+"""Distributed substrate: mesh-flattening helpers, the capacity-bucketed
+all_to_all (the paper's k:1 scatter-gather pattern as a JAX collective),
+sharding rules for the model zoo, gradient compression, and fault tolerance.
+"""

@@ -1,0 +1,177 @@
+"""Logical-axis -> mesh-axis sharding rules for the model zoo.
+
+The production mesh is (pod, data, model) / (data, model); model code only
+speaks logical axes (nn.py), and this module decides the mapping per
+(config x shape-kind), including the divisibility-driven fallbacks:
+
+  * TP: heads/ff/vocab/experts -> "model"
+  * DP: batch -> ("pod", "data")
+  * FSDP (ZeRO-3): param "embed" (d_model) dims -> "data"; optimizer state
+    inherits param sharding, so Adam moments shard over data x model
+  * KV cache: kv_heads -> "model" when divisible, else the cache SEQUENCE
+    dim -> "model" (flash-decoding-style partitioning, XLA inserts the
+    partial-softmax collectives); B < dp_size (long_500k, B=1) additionally
+    re-points kv_seq at "data" so the 9x500k Zamba2 site caches actually fit
+
+These rules are the principal §Perf hillclimbing lever: experiments swap
+rule dicts, never model code.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec
+from ..models.nn import DistContext
+
+
+def _dp_axes(mesh: Mesh) -> Tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a != "model")
+
+
+def dp_size(mesh: Mesh) -> int:
+    n = 1
+    for a in _dp_axes(mesh):
+        n *= mesh.shape[a]
+    return n
+
+
+def make_rules(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape: Optional[ShapeSpec] = None,
+    *,
+    fsdp: bool = True,
+    overrides: Optional[Dict[str, Any]] = None,
+) -> Dict[str, Any]:
+    model = mesh.shape["model"]
+    dp = _dp_axes(mesh)
+    rules: Dict[str, Any] = {
+        "layers": None,
+        "batch": dp,
+        # residual-stream sequence dim: None = Megatron "TP" (activations
+        # replicated over model between blocks; XLA all-reduces into that
+        # layout); "model" = sequence parallelism (reduce-scatter/all-gather
+        # pairs, ~half the TP collective bytes) — a §Perf lever.
+        "seq": None,
+        "heads": "model",
+        "kv_heads": "model" if (cfg.num_kv_heads % model == 0 and cfg.num_kv_heads > 0) else None,
+        "ff": "model",
+        "vocab": "model",
+        "experts": "model",
+        # FSDP (ZeRO-3) shards params/opt-state over ALL dp axes — on the
+        # multi-pod mesh that is ("pod","data") = 32-way, halving per-chip
+        # state vs data-only
+        "embed": dp if fsdp else None,
+    }
+    # KV cache sequence dim: shard over "model" when heads can't be; shard
+    # over "data" when the batch can't fill the dp axes (B=1 long-context).
+    if rules["kv_heads"] is None:
+        rules["kv_seq"] = "model"
+    else:
+        rules["kv_seq"] = None
+    if shape is not None and shape.kind == "decode" and shape.global_batch < dp_size(mesh):
+        rules["batch"] = None
+        rules["kv_seq"] = "data"
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+def make_dist(
+    cfg: ModelConfig,
+    mesh: Mesh,
+    shape: Optional[ShapeSpec] = None,
+    *,
+    fsdp: bool = True,
+    moe_dispatch: Optional[str] = None,
+    overrides: Optional[Dict[str, Any]] = None,
+) -> DistContext:
+    rules = make_rules(cfg, mesh, shape, fsdp=fsdp, overrides=overrides)
+    if moe_dispatch is None:
+        moe_dispatch = "alltoall" if cfg.num_experts else "dense"
+    return DistContext(mesh=mesh, rules=rules, moe_dispatch=moe_dispatch)
+
+
+# ---------------------------------------------------------------------------
+# shardings for param / cache / batch pytrees
+# ---------------------------------------------------------------------------
+
+
+def _path_str(path) -> str:
+    parts = []
+    for k in path:
+        if isinstance(k, jax.tree_util.DictKey):
+            parts.append(str(k.key))
+        elif isinstance(k, jax.tree_util.SequenceKey):
+            parts.append(str(k.idx))
+        else:
+            parts.append(str(k))
+    return "/".join(parts)
+
+
+def param_shardings(factory_specs: Dict[str, tuple], params, dist: DistContext):
+    """Map ParamFactory.specs (path -> logical axes) onto the params tree."""
+    def per_leaf(path, leaf):
+        p = _path_str(path)
+        axes = factory_specs.get(p)
+        if axes is None:
+            raise KeyError(f"no spec recorded for param {p!r}")
+        return dist.sharding(axes)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, params)
+
+
+_CACHE_AXES_BY_NAME: Dict[str, Dict[int, tuple]] = {
+    # rank -> logical axes
+    "k": {5: ("layers", "batch", "kv_heads", "kv_seq", None)},
+    "v": {5: ("layers", "batch", "kv_heads", "kv_seq", None)},
+    "c_kv": {4: ("layers", "batch", "kv_seq", None)},
+    "k_rope": {5: ("layers", "batch", None, "kv_seq", None)},
+    "length": {1: (None,), 0: ()},
+}
+
+
+def _ssm_state_axes(rank: int, which: str) -> tuple:
+    """conv [.., B, C, w-1] / ssm [.., B, H, P, N]; leading dims are layer
+    stacks.  Shard channels/heads over model, batch over dp."""
+    if which == "conv":
+        base = ("batch", "ff", None)
+    else:
+        base = ("batch", "heads", None, None)
+    lead = (None,) * (rank - len(base))
+    return lead + base
+
+
+def cache_shardings(cache, dist: DistContext):
+    def per_leaf(path, leaf):
+        name, seq_idx = None, None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.SequenceKey) and seq_idx is None:
+                seq_idx = k.idx
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        rank = len(leaf.shape)
+        if name in _CACHE_AXES_BY_NAME and rank in _CACHE_AXES_BY_NAME[name]:
+            axes = _CACHE_AXES_BY_NAME[name][rank]
+        elif name in ("states", "mamba"):
+            # tuple (conv_state, ssm_state) under this key
+            axes = _ssm_state_axes(rank, "conv" if seq_idx == 0 else "ssm")
+        else:
+            axes = (None,) * rank
+        return dist.sharding(axes)
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache)
+
+
+def batch_shardings(batch, dist: DistContext):
+    def per_leaf(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return dist.sharding(axes)
+
+    return jax.tree.map(per_leaf, batch)

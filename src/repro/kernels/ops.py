@@ -1,0 +1,66 @@
+"""Public jit'd wrappers over the Pallas kernels with oracle dispatch.
+
+Call sites use these, never the kernels directly.  `mode` selects:
+
+  "xla"        pure-jnp reference path (ref.py) — default everywhere the
+               dry-run lowers on the CPU backend (Pallas TPU kernels do not
+               lower for CPU targets; interpret mode is for testing only)
+  "interpret"  Pallas kernel executed by the interpreter (CPU correctness)
+  "tpu"        Pallas kernel compiled for TPU (the production target)
+
+Wrappers own the padding to kernel tile multiples so kernels stay branch-free.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from . import ref
+from .bucket import TILE as BUCKET_TILE, bucket_hist_pallas
+from .flash_attention import flash_attention_pallas
+from .relabel_gather import TILE as RELABEL_TILE, relabel_gather_pallas
+from .rmat import TILE as RMAT_TILE, rmat_edges_pallas
+
+DEFAULT_MODE = "xla"
+
+
+def _pad_to(x: jnp.ndarray, tile: int, fill) -> jnp.ndarray:
+    n = x.shape[0]
+    pad = (-n) % tile
+    if pad == 0:
+        return x
+    return jnp.concatenate([x, jnp.full((pad,), fill, x.dtype)])
+
+
+def rmat_edges(cfg, start: int, count: int, mode: str = DEFAULT_MODE):
+    if mode == "xla":
+        return ref.rmat_ref(cfg, start, count)
+    padded = count + ((-count) % RMAT_TILE)
+    s, d = rmat_edges_pallas(cfg, start, padded, interpret=(mode == "interpret"))
+    return s[:count], d[:count]
+
+
+def bucket_hist(dest: jnp.ndarray, k: int, mode: str = DEFAULT_MODE) -> jnp.ndarray:
+    if mode == "xla":
+        return ref.bucket_hist_ref(dest, k)
+    padded = _pad_to(dest.astype(jnp.int32), BUCKET_TILE, k)  # k never matches
+    return bucket_hist_pallas(padded, k, interpret=(mode == "interpret"))
+
+
+def relabel_gather(keys: jnp.ndarray, pv_chunk: jnp.ndarray, base, mode: str = DEFAULT_MODE) -> jnp.ndarray:
+    if mode == "xla":
+        return ref.relabel_gather_ref(keys, pv_chunk, base)
+    n = keys.shape[0]
+    padded = _pad_to(keys.astype(jnp.int32), RELABEL_TILE, -1)  # -1 never in range
+    out = relabel_gather_pallas(
+        padded, pv_chunk.astype(jnp.int32), jnp.asarray(base), interpret=(mode == "interpret")
+    )
+    return out[:n].astype(keys.dtype)
+
+
+def flash_attention(q, k, v, causal: bool = True, scale=None, mode: str = DEFAULT_MODE):
+    if mode == "xla":
+        return ref.flash_attention_ref(q, k, v, causal=causal, scale=scale)
+    return flash_attention_pallas(
+        q, k, v, causal=causal, scale=scale, interpret=(mode == "interpret")
+    )

@@ -1,0 +1,62 @@
+"""Pure-jnp oracles for every Pallas kernel (the ground truth for tests).
+
+Each function is the mathematical spec of the matching kernel in this
+package; tests sweep shapes/dtypes and assert (bit-exact for the integer
+kernels, allclose for attention) against these.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..core.rmat import counter_uniform_u32
+from ..core.types import GraphConfig, quadrant_thresholds
+
+
+def rmat_ref(cfg: GraphConfig, start: int, count: int):
+    """Oracle for kernels/rmat.py — identical math to core.rmat."""
+    from ..core.rmat import rmat_edge_block
+
+    return rmat_edge_block(cfg, jnp.uint32(start), count)
+
+
+def bucket_hist_ref(dest: jnp.ndarray, k: int) -> jnp.ndarray:
+    """Oracle for kernels/bucket.py: histogram of destination ids."""
+    return jnp.zeros((k,), jnp.int32).at[dest].add(1)
+
+
+def relabel_gather_ref(keys: jnp.ndarray, pv_chunk: jnp.ndarray, base: int) -> jnp.ndarray:
+    """Oracle for kernels/relabel_gather.py: masked merge-join gather.
+
+    keys outside [base, base+|pv_chunk|) pass through unchanged.
+    """
+    local = keys - base
+    in_range = (local >= 0) & (local < pv_chunk.shape[0])
+    idx = jnp.clip(local, 0, pv_chunk.shape[0] - 1)
+    return jnp.where(in_range, pv_chunk[idx], keys)
+
+
+def flash_attention_ref(
+    q: jnp.ndarray,  # [B, Hq, Sq, D]
+    k: jnp.ndarray,  # [B, Hkv, Skv, D]
+    v: jnp.ndarray,  # [B, Hkv, Skv, D]
+    causal: bool = True,
+    scale: float | None = None,
+) -> jnp.ndarray:
+    """Oracle for kernels/flash_attention.py: naive softmax GQA attention."""
+    B, Hq, Sq, D = q.shape
+    Hkv = k.shape[1]
+    group = Hq // Hkv
+    scale = scale if scale is not None else 1.0 / (D ** 0.5)
+    kq = jnp.repeat(k, group, axis=1)
+    vq = jnp.repeat(v, group, axis=1)
+    logits = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32)) * scale
+    if causal:
+        Skv = k.shape[2]
+        # queries are the LAST Sq positions of the Skv context
+        qpos = jnp.arange(Sq)[:, None] + (Skv - Sq)
+        kpos = jnp.arange(Skv)[None, :]
+        logits = jnp.where(kpos <= qpos, logits, -jnp.inf)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", w, vq.astype(jnp.float32)).astype(q.dtype)

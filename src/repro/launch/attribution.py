@@ -1,0 +1,79 @@
+"""Byte/flop attribution over HLO — the §Perf profiling lens.
+
+`top_bytes(hlo)` returns the heaviest memory-traffic instructions with their
+while-trip multipliers applied; `by_op(hlo)` aggregates per op kind.  This is
+the dry-run's substitute for a wall-clock profile: optimization iterations
+read this table, pick the dominant contributor, and attack it.
+"""
+
+from __future__ import annotations
+
+from collections import Counter
+from typing import List, Tuple
+
+from . import hlo_cost
+
+
+def _walk(comps, entry):
+    """Yield (bytes, 'comp/instr:op', type_str) with multipliers applied."""
+    items: List[Tuple[float, str, str]] = []
+
+    def walk(name, mult, fusion_ctx=False):
+        comp = comps.get(name)
+        if comp is None:
+            return
+        for iname in comp.order:
+            ins = comp.instrs[iname]
+            op = ins.op
+            if op.endswith("-done"):
+                continue
+            if op == "while":
+                am = dict(hlo_cost._ATTR_CALL_RE.findall(ins.attrs))
+                cond = am.get("condition")
+                trip = (hlo_cost._trip_count(comps[cond])
+                        if cond in comps else 1)
+                walk(am.get("body"), mult * trip)
+                continue
+            if op == "fusion":
+                if not fusion_ctx:
+                    b = hlo_cost._fusion_boundary_bytes(ins, comp, comps) * mult
+                    items.append((b, f"{name}/{iname}:fusion", ins.type_str))
+                continue
+            if op in ("call", "conditional"):
+                am = dict(hlo_cost._ATTR_CALL_RE.findall(ins.attrs))
+                for key in ("calls", "to_apply", "body"):
+                    if key in am:
+                        walk(am[key], mult, fusion_ctx)
+                continue
+            if op in hlo_cost._SKIP_BYTES_OPS or fusion_ctx:
+                continue
+            if op in ("dynamic-slice", "gather"):
+                b = 2 * hlo_cost._shape_bytes(ins.type_str) * mult
+            elif op in ("dynamic-update-slice", "scatter"):
+                upd = (comp.instrs[ins.operands[1]].type_str
+                       if len(ins.operands) > 1 and ins.operands[1] in comp.instrs
+                       else ins.type_str)
+                b = 2 * hlo_cost._shape_bytes(upd) * mult
+            else:
+                opb = sum(hlo_cost._shape_bytes(comp.instrs[o].type_str)
+                          for o in ins.operands if o in comp.instrs)
+                b = (opb + hlo_cost._shape_bytes(ins.type_str)) * mult
+            items.append((b, f"{name}/{iname}:{op}", ins.type_str))
+
+    walk(entry, 1.0)
+    return items
+
+
+def top_bytes(hlo: str, n: int = 15):
+    comps, entry = hlo_cost.parse_module(hlo)
+    items = _walk(comps, entry)
+    items.sort(reverse=True)
+    return items[:n]
+
+
+def by_op(hlo: str):
+    comps, entry = hlo_cost.parse_module(hlo)
+    agg = Counter()
+    for b, name, _ in _walk(comps, entry):
+        agg[name.rsplit(":", 1)[-1]] += b
+    return agg.most_common()

@@ -1,0 +1,107 @@
+"""Cell assembly: one (arch x shape x mesh) -> a jit-able step + abstract
+inputs + shardings.  Shared by the dry-run, the roofline table, and the
+§Perf hillclimb (which re-lowers cells under modified rules).
+
+  train cells   -> train_step(state, batch)
+  prefill cells -> prefill(params, batch, cache)
+  decode cells  -> decode_step(params, tokens, cache)   (1 new token,
+                   KV cache of seq_len — the assignment's decode semantics)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeSpec, get_config, long_context_supported
+from ..distributed.sharding import (
+    batch_shardings, cache_shardings, make_dist, param_shardings)
+from ..models.nn import ParamFactory
+from ..models.registry import get_model, input_specs
+from ..train import OptimConfig, init_state, make_train_step, state_shardings
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Any                 # the step callable
+    args: Tuple             # abstract (ShapeDtypeStruct) example args
+    in_shardings: Tuple
+    out_shardings: Any      # None -> auto
+    dist: Any
+    kind: str
+    donate: Tuple[int, ...] = ()   # train: state; serve: cache (in-place step)
+
+    def lower(self):
+        jitted = jax.jit(self.fn, in_shardings=self.in_shardings,
+                         out_shardings=self.out_shardings,
+                         donate_argnums=self.donate)
+        return jitted.lower(*self.args)
+
+
+def cell_supported(cfg: ModelConfig, shape: ShapeSpec) -> Tuple[bool, str]:
+    if shape.name == "long_500k" and not long_context_supported(cfg):
+        return False, ("full-attention family: 524288-token context is "
+                       "quadratic; run for ssm/hybrid only (DESIGN.md §5)")
+    return True, ""
+
+
+def build_cell(arch: str, shape: ShapeSpec, mesh: Mesh, *,
+               cfg: Optional[ModelConfig] = None,
+               ocfg: Optional[OptimConfig] = None,
+               fsdp: bool = True,
+               accum_steps: int = 1,
+               rule_overrides: Optional[Dict] = None,
+               moe_dispatch: Optional[str] = None) -> Cell:
+    cfg = cfg or get_config(arch)
+    ok, why = cell_supported(cfg, shape)
+    if not ok:
+        raise ValueError(f"{arch} x {shape.name} skipped: {why}")
+    dist = make_dist(cfg, mesh, shape, fsdp=fsdp, overrides=rule_overrides,
+                     moe_dispatch=moe_dispatch)
+    api = get_model(cfg)
+    rep = NamedSharding(mesh, P())
+
+    if shape.kind == "train":
+        ocfg = ocfg or OptimConfig()
+        state, factory = init_state(cfg, ocfg, mode="shape")
+        batch = input_specs(cfg, shape, mode="shape")
+        fn = make_train_step(cfg, ocfg, dist, accum_steps=accum_steps)
+        st_sh = state_shardings(state, factory, dist)
+        b_sh = batch_shardings(batch, dist)
+        metrics_sh = {k: rep for k in
+                      ("loss", "ntok", "lb_loss", "dropped", "lr", "grad_norm")}
+        return Cell(arch, shape, cfg, fn, (state, batch), (st_sh, b_sh),
+                    (st_sh, metrics_sh), dist, "train", donate=(0,))
+
+    # ---- serving cells ----
+    factory = ParamFactory(mode="shape", dtype=cfg.jdtype)
+    params = api.init_params(cfg, factory)
+    p_sh = param_shardings(factory.specs, params, dist)
+    B, S = shape.global_batch, shape.seq_len
+    cache = api.init_cache(cfg, B, S, mode="shape")
+    c_sh = cache_shardings(cache, dist)
+
+    if shape.kind == "prefill":
+        batch = input_specs(cfg, shape, mode="shape")
+        b_sh = batch_shardings(batch, dist)
+        fn = lambda p, b, c: api.prefill(cfg, p, b, c, dist)  # noqa: E731
+        logits_sh = dist.sharding(("batch", None, "vocab"))
+        return Cell(arch, shape, cfg, fn, (params, batch, cache),
+                    (p_sh, b_sh, c_sh), (logits_sh, c_sh), dist, "prefill",
+                    donate=(2,))
+
+    # decode: one new token against a seq_len-deep cache
+    tokens = jax.ShapeDtypeStruct((B, 1), jnp.int32)
+    t_sh = dist.sharding(("batch", None))
+    fn = lambda p, t, c: api.decode_step(cfg, p, t, c, dist)  # noqa: E731
+    logits_sh = dist.sharding(("batch", None, "vocab"))
+    return Cell(arch, shape, cfg, fn, (params, tokens, cache),
+                (p_sh, t_sh, c_sh), (logits_sh, c_sh), dist, "decode",
+                donate=(2,))

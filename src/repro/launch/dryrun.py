@@ -1,0 +1,134 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# The two lines above MUST run before any other import: jax locks the device
+# count at first init, and the multi-pod dry-run needs 512 placeholder CPU
+# devices to build the production meshes.  Everything below is ordinary.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+import numpy as np   # noqa: E402
+
+from ..configs.base import SHAPES, arch_ids, get_config   # noqa: E402
+from . import roofline as rl                              # noqa: E402
+from .cells import build_cell, cell_supported             # noqa: E402
+from .mesh import MULTI_POD_CHIPS, SINGLE_POD_CHIPS       # noqa: E402
+
+
+def production_mesh(multi_pod: bool):
+    from .mesh import make_production_mesh
+
+    return make_production_mesh(multi_pod=multi_pod)
+
+
+def _memory_analysis_dict(compiled):
+    try:
+        ma = compiled.memory_analysis()
+    except Exception as e:  # backend may not implement it
+        return {"error": repr(e)}
+    out = {}
+    for k in ("argument_size_in_bytes", "output_size_in_bytes",
+              "temp_size_in_bytes", "alias_size_in_bytes",
+              "generated_code_size_in_bytes"):
+        v = getattr(ma, k, None)
+        if v is not None:
+            out[k] = int(v)
+    return out or {"repr": repr(ma)}
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, *,
+             verbose: bool = True, cell_kwargs=None):
+    """Lower + compile one cell; return the §Dry-run/§Roofline record."""
+    shape = SHAPES[shape_name]
+    cfg = get_config(arch)
+    ok, why = cell_supported(cfg, shape)
+    mesh_name = "multi" if multi_pod else "single"
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_name,
+           "chips": MULTI_POD_CHIPS if multi_pod else SINGLE_POD_CHIPS}
+    if not ok:
+        rec["status"] = "skipped"
+        rec["reason"] = why
+        return rec
+    t0 = time.time()
+    mesh = production_mesh(multi_pod)
+    cell = build_cell(arch, shape, mesh, **(cell_kwargs or {}))
+    lowered = cell.lower()
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    roof = rl.from_compiled(
+        compiled, rec["chips"], rl.model_flops_for_cell(cfg, shape),
+        hlo_text=hlo)
+    mem = _memory_analysis_dict(compiled)
+    rec.update({
+        "status": "ok",
+        "kind": cell.kind,
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem,
+        "roofline": roof.as_dict(),
+        "hlo_bytes": len(hlo),
+    })
+    if verbose:
+        print(f"[{arch} x {shape_name} x {mesh_name}] "
+              f"lower {t_lower:.1f}s compile {t_compile:.1f}s")
+        print("  memory_analysis:", mem)
+        print("  cost_analysis: flops/chip={:.3e} bytes/chip={:.3e}".format(
+            roof.flops_per_chip, roof.bytes_per_chip))
+        print("  collectives/chip:", roof.coll_by_kind)
+        print("  roofline: compute {:.3e}s memory {:.3e}s collective {:.3e}s"
+              " -> {} bound, useful-flops ratio {:.3f}, MFU bound {:.3f}".format(
+                  roof.t_compute, roof.t_memory, roof.t_collective,
+                  roof.bottleneck, roof.useful_flops_ratio, roof.mfu_bound))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser(description="multi-pod dry-run")
+    ap.add_argument("--arch", default="all",
+                    help="arch id or 'all' (see configs.base.arch_ids)")
+    ap.add_argument("--shape", default="all", help="shape name or 'all'")
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--out", default="", help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = arch_ids() if args.arch == "all" else [args.arch]
+    shapes = list(SHAPES) if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    records, failures = [], []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                try:
+                    rec = run_cell(arch, shape, mp)
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "error", "error": repr(e),
+                           "traceback": traceback.format_exc()[-2000:]}
+                    failures.append(rec)
+                    print(f"[{arch} x {shape} x {rec['mesh']}] FAILED: {e!r}")
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+
+    n_ok = sum(r["status"] == "ok" for r in records)
+    n_skip = sum(r["status"] == "skipped" for r in records)
+    print(f"\n=== dry-run: {n_ok} ok, {n_skip} skipped (documented), "
+          f"{len(failures)} failed, {len(records)} total ===")
+    if failures:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

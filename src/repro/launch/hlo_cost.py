@@ -1,0 +1,371 @@
+"""Trip-count-aware cost accounting over optimized HLO.
+
+XLA's `compiled.cost_analysis()` counts each while-loop BODY ONCE, but every
+layer scan (lax.scan over blocks), attention query-chunk lax.map, SSD chunk
+scan and grad-accumulation loop lowers to a while loop — so its flops/bytes
+under-count real work by the trip count (24x-94x for the layer stacks).
+This module re-derives the roofline numerators from the HLO text with while
+bodies multiplied by their static trip counts:
+
+  flops       2 * numel(result) * prod(contracted dims) per `dot`,
+              recursively through fusions, x trip multipliers
+  bytes       fusion-boundary traffic: sum(operand bytes)+result bytes per
+              top-level instruction of every *executed* computation
+              (parameters/constants/tuple plumbing skipped), x multipliers
+  collectives operand bytes per all-gather / all-reduce / reduce-scatter /
+              all-to-all / collective-permute, x multipliers, per kind
+
+Trip counts: a jax scan lowers to `while(cond=%c, body=%b)` whose cond
+compares the induction variable against an s32 constant — the largest s32
+constant in the cond computation is the trip count (validated against
+known-layer-count models in tests/test_roofline.py).
+
+The numbers feed launch/roofline.py; `compiled.cost_analysis()` is still
+recorded in the dry-run JSON for reference.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s4": 1, "u4": 1,
+    "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1, "f8e3m4": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_INSTR_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.-]+)\s*=\s*(.*)$")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%([\w.-]+)\s*\((.*?)\)\s*->")
+_OPERAND_RE = re.compile(r"%([\w.-]+)")
+_ATTR_CALL_RE = re.compile(r"(calls|body|condition|to_apply)=%([\w.-]+)")
+_BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONTRACT_RE = re.compile(r"lhs_contracting_dims=\{([\d,]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SKIP_BYTES_OPS = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "while", "after-all", "add-dependency", "opt-barrier", "conditional",
+    "call", "iota", "partition-id", "replica-id",
+}
+
+
+def _type_and_rest(rest: str) -> Tuple[str, str]:
+    """Split '<type> <opcode>(...)' -> (type_str, remainder)."""
+    rest = rest.lstrip()
+    if rest.startswith("("):
+        depth = 0
+        for i, ch in enumerate(rest):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    return rest[: i + 1], rest[i + 1:]
+    m = re.match(r"\w+\[[\d,]*\](?:\{[^}]*\})?", rest)
+    if m:
+        return m.group(0), rest[m.end():]
+    return "", rest
+
+
+def _shape_bytes(type_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _first_shape_dims(type_str: str) -> List[int]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return []
+    return [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+
+
+def _numel(type_str: str) -> int:
+    dims = _first_shape_dims(type_str)
+    n = 1
+    for d in dims:
+        n *= d
+    return n
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    type_str: str
+    op: str
+    operands: List[str]
+    attrs: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instrs: Dict[str, Instr]
+    order: List[str]
+    root: str = ""
+
+
+def parse_module(hlo: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    current: Optional[Computation] = None
+    for line in hlo.splitlines():
+        if not line.strip():
+            continue
+        if not line.startswith(" "):  # possible computation header
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                current = Computation(m.group(1), {}, [])
+                comps[current.name] = current
+                if line.startswith("ENTRY"):
+                    entry = current.name
+            elif line.startswith("}"):
+                current = None
+            continue
+        if current is None:
+            continue
+        if line.strip().startswith("}"):
+            current = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.group(1), m.group(2)
+        if line.lstrip().startswith("ROOT"):
+            current.root = name
+        type_str, tail = _type_and_rest(rest)
+        tail = tail.lstrip()
+        om = re.match(r"([\w-]+)\(", tail)
+        if not om:
+            continue
+        op = om.group(1)
+        args = tail[om.end():]
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    attrs = args[i + 1:]
+                    args = args[:i]
+                    break
+        else:
+            attrs = ""
+        operands = _OPERAND_RE.findall(args)
+        current.instrs[name] = Instr(name, type_str, op, operands, args + "|" + attrs)
+        current.order.append(name)
+    return comps, entry
+
+
+def _trip_count(cond: Computation) -> int:
+    """Largest s32 constant in the cond computation = the scan trip count
+    (jax scans lower to `while i < L`; L is the only s32 constant there)."""
+    best = 1
+    for iname in cond.order:
+        ins = cond.instrs[iname]
+        if ins.op != "constant" or not ins.type_str.startswith("s32"):
+            continue
+        m = re.match(r"(\d+)\|", ins.attrs)
+        if m:
+            best = max(best, int(m.group(1)))
+    return best
+
+
+@dataclasses.dataclass
+class CostTotals:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll: Dict[str, float] = dataclasses.field(default_factory=dict)
+    transfers: List[Tuple[str, str, float, float]] = dataclasses.field(
+        default_factory=list)  # (kind, instr, bytes_each, multiplier)
+
+    def add_coll(self, kind: str, nbytes: float, mult: float, name: str):
+        self.coll[kind] = self.coll.get(kind, 0.0) + nbytes * mult
+        self.transfers.append((kind, name, nbytes, mult))
+
+
+def _dot_flops(ins: Instr, comp: Computation,
+               comps: Dict[str, Computation]) -> float:
+    cm = _CONTRACT_RE.search(ins.attrs)
+    contract = [int(x) for x in cm.group(1).split(",")] if (cm and cm.group(1)) else []
+    lhs_dims: List[int] = []
+    if ins.operands:
+        lhs_name = ins.operands[0]
+        src = comp.instrs.get(lhs_name)
+        if src is not None:
+            lhs_dims = _first_shape_dims(src.type_str)
+    k = 1
+    for d in contract:
+        if d < len(lhs_dims):
+            k *= lhs_dims[d]
+    return 2.0 * _numel(ins.type_str) * k
+
+
+def _fusion_boundary_bytes(ins: Instr, comp: Computation,
+                           comps: Dict[str, Computation]) -> float:
+    """Slice-aware fusion traffic.
+
+    A fusion's nominal boundary is sum(operands)+result, but two patterns
+    make that wildly pessimistic for cache-style code:
+      * a big operand consumed ONLY by dynamic-slice/gather inside the
+        fusion physically reads just the slices;
+      * a fusion whose root is dynamic-update-slice writes just the update
+        (XLA performs it in place), and the target operand isn't read.
+    """
+    callee = comps.get(dict(_ATTR_CALL_RE.findall(ins.attrs)).get("calls", ""))
+    if callee is None:
+        opb = sum(_shape_bytes(comp.instrs[o].type_str)
+                  for o in ins.operands if o in comp.instrs)
+        return opb + _shape_bytes(ins.type_str)
+
+    # reads: per parameter, by how it is used inside.  Trace through
+    # "transparent" ops (convert/copy/bitcast — CPU bf16 legalization wraps
+    # cache updates in converts that would not exist on the TPU target).
+    uses: Dict[str, List[Instr]] = {}
+    for iname in callee.order:
+        cins = callee.instrs[iname]
+        for o in cins.operands:
+            uses.setdefault(o, []).append(cins)
+
+    _TRANSPARENT = ("convert", "copy", "bitcast")
+
+    def effective_uses(name: str, depth: int = 0) -> List[Tuple[Instr, str]]:
+        """[(consumer, name-it-consumes)] skipping transparent chains."""
+        out: List[Tuple[Instr, str]] = []
+        for u in uses.get(name, []):
+            if u.op in _TRANSPARENT and depth < 8:
+                out.extend(effective_uses(u.name, depth + 1))
+            else:
+                out.append((u, name))
+        return out
+
+    reads = 0.0
+    for iname in callee.order:
+        p = callee.instrs[iname]
+        if p.op != "parameter":
+            continue
+        pu = effective_uses(p.name)
+        if pu and all(u.op in ("dynamic-slice", "gather") for u, _ in pu):
+            reads += sum(_shape_bytes(u.type_str) for u, _ in pu)
+        elif pu and all(u.op == "dynamic-update-slice" and u.operands
+                        and u.operands[0] == nm for u, nm in pu):
+            reads += 0.0          # pure in-place update target
+        else:
+            reads += _shape_bytes(p.type_str)
+
+    # writes: root-aware
+    def piece_bytes(pname: str, depth: int = 0) -> float:
+        pi = callee.instrs.get(pname)
+        if pi is None:
+            return 0.0
+        if pi.op in _TRANSPARENT and pi.operands and depth < 8:
+            return piece_bytes(pi.operands[0], depth + 1)
+        if pi.op == "dynamic-update-slice" and len(pi.operands) > 1:
+            upd = callee.instrs.get(pi.operands[1])
+            return _shape_bytes(upd.type_str if upd else pi.type_str)
+        return _shape_bytes(pi.type_str)
+
+    root = callee.instrs.get(callee.root or (callee.order[-1] if callee.order else ""))
+    if root is None:
+        writes = _shape_bytes(ins.type_str)
+    elif root.op == "tuple":
+        writes = sum(piece_bytes(o) for o in root.operands)
+    else:
+        writes = piece_bytes(root.name)
+    return reads + writes
+
+
+def _cost_comp(name: str, mult: float, comps: Dict[str, Computation],
+               totals: CostTotals, fusion_ctx: bool = False):
+    comp = comps.get(name)
+    if comp is None:
+        return
+    for iname in comp.order:
+        ins = comp.instrs[iname]
+        op = ins.op
+        base = op[:-6] if op.endswith("-start") else op
+        if op.endswith("-done"):
+            continue
+        if base in COLLECTIVES:
+            opb = sum(_shape_bytes(comp.instrs[o].type_str)
+                      for o in ins.operands if o in comp.instrs)
+            totals.add_coll(base, opb, mult, iname)
+            totals.bytes += (opb + _shape_bytes(ins.type_str)) * mult
+            continue
+        if op == "dot":
+            totals.flops += _dot_flops(ins, comp, comps) * mult
+            if not fusion_ctx:
+                opb = sum(_shape_bytes(comp.instrs[o].type_str)
+                          for o in ins.operands if o in comp.instrs)
+                totals.bytes += (opb + _shape_bytes(ins.type_str)) * mult
+            continue
+        if op == "while":
+            am = dict(_ATTR_CALL_RE.findall(ins.attrs))
+            cond = am.get("condition")
+            body = am.get("body")
+            trip = _trip_count(comps[cond]) if cond in comps else 1
+            if body:
+                _cost_comp(body, mult * trip, comps, totals)
+            if cond in comps:
+                _cost_comp(cond, mult * trip, comps, totals)
+            continue
+        if op == "fusion":
+            am = dict(_ATTR_CALL_RE.findall(ins.attrs))
+            callee = am.get("calls")
+            if callee:
+                # flops & collectives inside the fusion count; bytes are the
+                # (slice-aware) fusion boundary only
+                _cost_comp(callee, mult, comps, totals, fusion_ctx=True)
+            if not fusion_ctx:
+                totals.bytes += _fusion_boundary_bytes(ins, comp, comps) * mult
+            continue
+        if op in ("call", "conditional"):
+            am = dict(_ATTR_CALL_RE.findall(ins.attrs))
+            for key in ("calls", "to_apply", "body"):
+                if key in am:
+                    _cost_comp(am[key], mult, comps, totals, fusion_ctx)
+            bm = _BRANCHES_RE.search(ins.attrs)
+            if bm:
+                for b in _OPERAND_RE.findall(bm.group(1)):
+                    _cost_comp(b, mult, comps, totals, fusion_ctx)
+            continue
+        if op in _SKIP_BYTES_OPS or fusion_ctx:
+            continue
+        if op in ("dynamic-slice", "gather"):
+            # physically reads only the slice/gathered rows, not operand 0
+            totals.bytes += 2.0 * _shape_bytes(ins.type_str) * mult
+            continue
+        if op in ("dynamic-update-slice", "scatter"):
+            # in-place update: read+write the update region only (operand 1)
+            upd = (comp.instrs[ins.operands[1]].type_str
+                   if len(ins.operands) > 1 and ins.operands[1] in comp.instrs
+                   else ins.type_str)
+            totals.bytes += 2.0 * _shape_bytes(upd) * mult
+            continue
+        opb = sum(_shape_bytes(comp.instrs[o].type_str)
+                  for o in ins.operands if o in comp.instrs)
+        totals.bytes += (opb + _shape_bytes(ins.type_str)) * mult
+
+
+def analyze(hlo: str) -> CostTotals:
+    comps, entry = parse_module(hlo)
+    totals = CostTotals()
+    if entry:
+        _cost_comp(entry, 1.0, comps, totals)
+    return totals

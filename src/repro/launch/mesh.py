@@ -1,0 +1,40 @@
+"""Production mesh construction.
+
+A FUNCTION, not a module-level constant: importing this module must never
+touch jax device state (the dry-run pins XLA_FLAGS before first jax init;
+smoke tests must keep seeing 1 device).
+"""
+
+from __future__ import annotations
+
+import jax
+
+# TPU v5e hardware constants (per chip) — the §Roofline denominators.
+PEAK_FLOPS_BF16 = 197e12      # FLOP/s
+HBM_BW = 819e9                # bytes/s
+ICI_BW = 50e9                 # bytes/s per link
+SINGLE_POD_CHIPS = 256
+MULTI_POD_CHIPS = 512
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    import numpy as np
+
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) == n:
+        return jax.make_mesh(shape, axes)
+    # single-pod mesh on the 512-device dry-run runtime: take the first pod
+    assert len(devs) >= n, (len(devs), n)
+    return jax.sharding.Mesh(np.asarray(devs[:n]).reshape(shape), axes)
+
+
+def make_graph_mesh(n_shards: int | None = None, axis: str = "shards"):
+    """1-D mesh for the graph-generation pipeline (paper's nb compute nodes)."""
+    import numpy as np
+
+    devs = jax.devices()
+    n = n_shards or len(devs)
+    return jax.sharding.Mesh(np.asarray(devs[:n]), (axis,))

@@ -1,0 +1,145 @@
+"""§Perf hillclimbing driver: re-lower a cell under named variants and diff
+the roofline terms.
+
+    PYTHONPATH=src python -m repro.launch.perf --arch qwen3-moe-235b-a22b \
+        --shape train_4k --variants baseline,accum8,sp,remat_none
+
+Each variant is hypothesis -> change -> re-lower -> re-analyse; the JSONL
+output is the §Perf iteration log's data.  Variants compose with '+'
+(e.g. accum8+sp).
+"""
+
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+from typing import Dict  # noqa: E402
+
+from ..configs.base import SHAPES, get_config           # noqa: E402
+from . import roofline as rl                            # noqa: E402
+from .attribution import by_op, top_bytes               # noqa: E402
+from .cells import build_cell                           # noqa: E402
+from .dryrun import _memory_analysis_dict, production_mesh  # noqa: E402
+
+# Each variant: dict of build_cell overrides (cfg_update applies to the
+# ModelConfig; the rest are build_cell kwargs).
+VARIANTS: Dict[str, Dict] = {
+    "baseline": {},
+    # gradient accumulation: 8 microbatches -> 1/8 of the live activations
+    # (HBM fit), slightly more flops (per-microbatch remat/loss overhead)
+    "accum8": {"accum_steps": 8},
+    "accum4": {"accum_steps": 4},
+    "accum16": {"accum_steps": 16},
+    # sequence parallelism: residual stream sharded over "model" between
+    # blocks; the TP activation all-reduce becomes reduce-scatter/all-gather
+    "sp": {"rule_overrides": {"seq": "model"}},
+    # no remat: recompute disappears (flops down), activation residency up
+    "remat_none": {"cfg_update": {"remat": "none"}},
+    # bf16 logits: halves unembed/logit traffic; xent still f32 internally
+    "logits_bf16": {"cfg_update": {"logits_fp32": False}},
+    # MoE dispatch buffer factor 2.0 -> 1.25 (drops absorbed by EF of the
+    # router's aux loss pressure; report the drop counter!)
+    "moecap125": {"cfg_update": {"moe_capacity_factor": 1.25}},
+    # attention query chunk sweep (score-staging working set)
+    "qchunk512": {"cfg_update": {"attn_q_chunk": 512}},
+    "qchunk2048": {"cfg_update": {"attn_q_chunk": 2048}},
+    # MoE EP dispatch off (dense ref; expect compute blow-up — negative ctl)
+    "ep_off": {"moe_dispatch": "dense"},
+    # no FSDP: params replicated over data (kills param all-gathers, HBM up)
+    "no_fsdp": {"fsdp": False},
+    # int8 a2a dispatch payloads (DeepSeek-V3-style): ~2x less MoE traffic
+    "dispatch_int8": {"cfg_update": {"moe_dispatch_int8": True}},
+    # pure data parallelism: batch over BOTH mesh axes, no tensor parallel
+    # (small models: per-layer TP collectives vanish; params replicated over
+    # the model axis, still FSDP over data)
+    "dp_pure": {"rule_overrides": {"batch": ("data", "model"), "heads": None,
+                                   "ff": None, "vocab": None,
+                                   "kv_heads": None, "kv_seq": None}},
+    # bf16 Adam moments: optimizer state 12 -> 8 bytes/param (HBM fit lever)
+    "opt_bf16": {"ocfg_update": {"moments_dtype": "bfloat16"}},
+    # larger SSD chunk: fewer chunk-state materializations per scan
+    "ssdchunk512": {"cfg_update": {"ssm_chunk": 512}},
+    "ssdchunk1024": {"cfg_update": {"ssm_chunk": 1024}},
+}
+
+
+def run_variant(arch: str, shape_name: str, names: str, *,
+                multi_pod: bool = False, attribution: bool = False):
+    from ..train import OptimConfig
+    import dataclasses as _dc
+
+    shape = SHAPES[shape_name]
+    kwargs: Dict = {}
+    cfg = get_config(arch)
+    ocfg = OptimConfig()
+    for name in names.split("+"):
+        v = dict(VARIANTS[name])
+        cfg = cfg.with_(**v.pop("cfg_update", {}))
+        ocfg = _dc.replace(ocfg, **v.pop("ocfg_update", {}))
+        overrides = dict(kwargs.get("rule_overrides") or {})
+        overrides.update(v.pop("rule_overrides", {}) or {})
+        kwargs.update(v)
+        if overrides:
+            kwargs["rule_overrides"] = overrides
+    kwargs["ocfg"] = ocfg
+    mesh = production_mesh(multi_pod)
+    chips = 512 if multi_pod else 256
+    t0 = time.time()
+    cell = build_cell(arch, shape, mesh, cfg=cfg, **kwargs)
+    lowered = cell.lower()
+    compiled = lowered.compile()
+    hlo = compiled.as_text()
+    roof = rl.from_compiled(compiled, chips,
+                            rl.model_flops_for_cell(cfg, shape), hlo_text=hlo)
+    rec = {
+        "arch": arch, "shape": shape_name, "variant": names,
+        "mesh": "multi" if multi_pod else "single",
+        "compile_s": round(time.time() - t0, 1),
+        "memory_analysis": _memory_analysis_dict(compiled),
+        "roofline": roof.as_dict(),
+    }
+    if attribution:
+        rec["top_bytes"] = [
+            {"bytes": b, "instr": n[:120], "type": t[:60]}
+            for b, n, t in top_bytes(hlo, 10)]
+        rec["bytes_by_op"] = [[k, v] for k, v in by_op(hlo)[:12]]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--variants", default="baseline")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--attribution", action="store_true")
+    ap.add_argument("--out", default="experiments/perf.jsonl")
+    args = ap.parse_args()
+
+    for names in args.variants.split(","):
+        try:
+            rec = run_variant(args.arch, args.shape, names,
+                              multi_pod=args.multi_pod,
+                              attribution=args.attribution)
+        except Exception as e:
+            rec = {"arch": args.arch, "shape": args.shape, "variant": names,
+                   "status": "error", "error": repr(e),
+                   "traceback": traceback.format_exc()[-1500:]}
+            print(f"[{names}] FAILED {e!r}")
+        else:
+            ro = rec["roofline"]
+            print(f"[{names}] tC={ro['t_compute_s']:.3e} "
+                  f"tM={ro['t_memory_s']:.3e} tX={ro['t_collective_s']:.3e} "
+                  f"bound={ro['bottleneck']} mfu_bound={ro['mfu_bound']:.4f} "
+                  f"step_bound={ro['step_time_bound_s']:.3e}")
+        if args.out:
+            os.makedirs(os.path.dirname(args.out), exist_ok=True)
+            with open(args.out, "a") as f:
+                f.write(json.dumps(rec) + "\n")
+
+
+if __name__ == "__main__":
+    main()

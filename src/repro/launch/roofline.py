@@ -1,0 +1,184 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Per (arch x shape x mesh) cell:
+
+  compute term    = HLO_FLOPs_per_chip / peak_FLOP/s
+  memory term     = HLO_bytes_per_chip / HBM_bw
+  collective term = collective_wire_bytes_per_chip / link_bw
+
+Sources: `compiled.cost_analysis()` (the post-SPMD per-device module) gives
+flops and bytes-accessed; collective bytes are NOT in cost_analysis, so we
+parse the optimized HLO (`compiled.as_text()`) and sum operand sizes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute.  Shapes in that module are per-device shard shapes, so
+the sums are per-chip wire bytes; multiplying by chip count gives the global
+"collective_bytes" of the assignment formula — the two cancel, the reported
+term is per-chip bytes / link bandwidth either way.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, Optional
+
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1, "f8e4m3": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+# collective ops; `-start` variants counted, `-done` skipped (same transfer)
+_COLL_RE = re.compile(
+    r"=\s+\S+\s+(all-gather|all-reduce|reduce-scatter|all-to-all|"
+    r"collective-permute)(?:-start)?\(")
+_SHAPE_RE = re.compile(r"(\w+?)\[([\d,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> Dict[str, int]:
+    """Sum operand bytes per collective kind over the optimized module."""
+    out: Dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        if "-done(" in line:
+            continue
+        m = _COLL_RE.search(line)
+        if not m:
+            continue
+        kind = m.group(1)
+        # operands live inside the parens that _COLL_RE matched up to
+        args = line[m.end():]
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = args[:i]
+                    break
+        total = sum(_shape_bytes(d, s) for d, s in _SHAPE_RE.findall(args))
+        out[kind] = out.get(kind, 0) + total
+    return out
+
+
+@dataclasses.dataclass
+class Roofline:
+    flops_per_chip: float
+    bytes_per_chip: float
+    coll_bytes_per_chip: float
+    coll_by_kind: Dict[str, int]
+    chips: int
+    model_flops: float              # 6*N*D (train) / 2*N_active*tokens (serve)
+    peak_flops: float = PEAK_FLOPS_BF16
+    hbm_bw: float = HBM_BW
+    ici_bw: float = ICI_BW
+
+    @property
+    def t_compute(self) -> float:
+        return self.flops_per_chip / self.peak_flops
+
+    @property
+    def t_memory(self) -> float:
+        return self.bytes_per_chip / self.hbm_bw
+
+    @property
+    def t_collective(self) -> float:
+        return self.coll_bytes_per_chip / self.ici_bw
+
+    @property
+    def bottleneck(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Roofline step-time model: overlapped terms -> max() is the bound."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flops_ratio(self) -> float:
+        """MODEL_FLOPS / total compiled FLOPs — remat/redundancy waste meter."""
+        tot = self.flops_per_chip * self.chips
+        return self.model_flops / tot if tot else 0.0
+
+    @property
+    def mfu_bound(self) -> float:
+        """Model-FLOPs utilization at the roofline bound (the §Perf score)."""
+        t = self.step_time
+        if t <= 0:
+            return 0.0
+        return self.model_flops / (self.chips * self.peak_flops * t)
+
+    def as_dict(self) -> Dict:
+        d = getattr(self, "xla_cost", None)
+        extra = {"xla_cost": d} if d else {}
+        return {
+            **extra,
+            "flops_per_chip": self.flops_per_chip,
+            "bytes_per_chip": self.bytes_per_chip,
+            "coll_bytes_per_chip": self.coll_bytes_per_chip,
+            "coll_by_kind": self.coll_by_kind,
+            "chips": self.chips,
+            "model_flops": self.model_flops,
+            "t_compute_s": self.t_compute,
+            "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "bottleneck": self.bottleneck,
+            "step_time_bound_s": self.step_time,
+            "useful_flops_ratio": self.useful_flops_ratio,
+            "mfu_bound": self.mfu_bound,
+        }
+
+
+def from_compiled(compiled, chips: int, model_flops: float,
+                  hlo_text: Optional[str] = None) -> Roofline:
+    """Roofline terms from the compiled artifact.
+
+    Numerators come from the trip-count-aware HLO walk (launch/hlo_cost.py)
+    because XLA's cost_analysis counts while bodies once (layer scans /
+    attention chunk maps / SSD chunk scans would under-count 24x-94x).  The
+    raw cost_analysis numbers are kept in `xla_cost` for reference.
+    """
+    from . import hlo_cost
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, list):  # older jax returns [dict]
+        cost = cost[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    totals = hlo_cost.analyze(text)
+    r = Roofline(
+        flops_per_chip=totals.flops,
+        bytes_per_chip=totals.bytes,
+        coll_bytes_per_chip=float(sum(totals.coll.values())),
+        coll_by_kind={k: int(v) for k, v in totals.coll.items()},
+        chips=chips,
+        model_flops=model_flops,
+    )
+    r.xla_cost = {"flops": float(cost.get("flops", 0.0)),
+                  "bytes_accessed": float(cost.get("bytes accessed", 0.0))}
+    return r
+
+
+def model_flops_for_cell(cfg, shape) -> float:
+    """MODEL_FLOPS: 6*N*D for training, 2*N*D prefill, 2*N*B decode (active
+    params for MoE)."""
+    n_active = cfg.active_param_count()
+    if shape.kind == "train":
+        return 6.0 * n_active * shape.global_batch * shape.seq_len
+    if shape.kind == "prefill":
+        return 2.0 * n_active * shape.global_batch * shape.seq_len
+    return 2.0 * n_active * shape.global_batch  # decode: one token/seq

@@ -1,0 +1,12 @@
+"""Composable LM stack for the ten assigned architectures.
+
+Families: dense (GQA), moe (top-k routed + shared experts, MLA optional),
+ssm (Mamba2 SSD), hybrid (Zamba2), encdec (Seamless backbone), vlm (LLaVA
+backbone).  All models share the same protocol (models.registry):
+
+  init_params(cfg, factory)                -> params pytree (+ recorded specs)
+  forward(cfg, params, batch, dist)        -> logits          (train path)
+  init_cache(cfg, batch, max_len, factory) -> decode cache
+  prefill(cfg, params, batch, cache, dist) -> (logits, cache)
+  decode_step(cfg, params, tokens, cache, dist) -> (logits, cache)
+"""

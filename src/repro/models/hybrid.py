@@ -1,0 +1,177 @@
+"""Zamba2-style hybrid: Mamba2 backbone + ONE shared attention block.
+
+54 mamba layers in 9 groups of 6; after each group the *same* transformer
+block (attention + MLP, one weight copy — Zamba2's parameter-sharing trick)
+is applied.  Each of the 9 call sites keeps its own KV cache (the weights
+are shared, the activations are not).
+
+Implementation: outer lax.scan over the 9 groups (mamba params stacked
+[9, 6, ...], site caches stacked [9, ...]); inner scan over the 6 mamba
+layers.  The shared block's params are closure captures — scan-invariant,
+hoisted by XLA, the in-memory footprint of exactly one block.
+
+Simplifications vs the HF checkpoint (recorded in DESIGN.md): no per-site
+LoRA adapters on the shared block, and no concatenation of the original
+embedding into the shared-block input.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (
+    attention, decode_positions, embed, init_attention, init_embed, init_mlp,
+    init_rmsnorm, init_unembed, mlp, rmsnorm, unembed,
+)
+from .nn import DistContext, ParamFactory, shard
+from .ssm import init_mamba2, init_ssm_state, mamba2_forward, mamba2_step
+
+ZERO_AUX = {"lb_loss": 0.0, "z_loss": 0.0, "dropped": 0}
+
+
+def _groups(cfg):
+    every = cfg.shared_attn_every
+    assert cfg.num_layers % every == 0, (cfg.num_layers, every)
+    return cfg.num_layers // every, every
+
+
+def init_params(cfg, f: ParamFactory):
+    n_groups, every = _groups(cfg)
+    return {
+        "embed": init_embed(f, "embed", cfg, cfg.d_model),
+        "mamba": {
+            "ln": init_rmsnorm(f, "mamba/ln", cfg.d_model, (n_groups, every)),
+            "mix": init_mamba2(f, "mamba/mix", cfg, (n_groups, every)),
+        },
+        "shared": {
+            "ln1": init_rmsnorm(f, "shared/ln1", cfg.d_model),
+            "attn": init_attention(f, "shared/attn", cfg),
+            "ln2": init_rmsnorm(f, "shared/ln2", cfg.d_model),
+            "mlp": init_mlp(f, "shared/mlp", cfg.d_model, cfg.d_ff),
+        },
+        "ln_f": init_rmsnorm(f, "ln_f", cfg.d_model),
+        "unembed": init_unembed(f, "unembed", cfg.d_model, cfg),
+    }
+
+
+def _shared_block(p, cfg, x, positions, dist, cache=None):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    a, new_cache = attention(p["attn"], cfg, h, positions, dist, kv_cache=cache)
+    x = shard(x + a, ("batch", "seq", None), dist)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    x = shard(x + mlp(p["mlp"], h, dist), ("batch", "seq", None), dist)
+    return x, new_cache
+
+
+def _mamba_layer_fwd(cfg, dist, collect_state: bool):
+    def fn(x, p_l, state_l):
+        h = rmsnorm(p_l["ln"], x, cfg.norm_eps)
+        if collect_state:
+            out, new_state = mamba2_forward(
+                p_l["mix"], cfg, h, dist, initial_state=state_l, return_state=True
+            )
+            return x + out, new_state
+        return x + mamba2_forward(p_l["mix"], cfg, h, dist), None
+
+    return fn
+
+
+def forward(cfg, params, batch, dist: Optional[DistContext] = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, dist).astype(cfg.jdtype)
+    positions = jnp.arange(S)
+    layer_fwd = _mamba_layer_fwd(cfg, dist, collect_state=False)
+    shared = params["shared"]
+
+    def inner(x, p_l):
+        x, _ = layer_fwd(x, p_l, None)
+        return x, None
+
+    def outer(x, p_g):
+        x, _ = jax.lax.scan(inner, x, p_g)
+        x, _ = _shared_block(shared, cfg, x, positions, dist, None)
+        return x, None
+
+    outer_fn = jax.checkpoint(outer) if cfg.remat == "block" else outer
+    x, _ = jax.lax.scan(outer_fn, x, params["mamba"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x, dist, fp32=cfg.logits_fp32, valid_vocab=cfg.vocab_size)
+    return logits, {k: jnp.asarray(v, jnp.float32) for k, v in ZERO_AUX.items()}
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int, mode: str = "init"):
+    n_groups, every = _groups(cfg)
+    dt = cfg.jdtype
+    hd = cfg.hd
+
+    def make(shape, dtype=dt):
+        return jax.ShapeDtypeStruct(shape, dtype) if mode == "shape" else jnp.zeros(shape, dtype)
+
+    conv, ssm = init_ssm_state(cfg, batch, "shape")
+    def stack_state(s):
+        return make((n_groups, every, *s.shape), s.dtype)
+
+    return {
+        "mamba": (stack_state(conv), stack_state(ssm)),
+        "sites": {
+            "k": make((n_groups, batch, cfg.num_kv_heads, max_len, hd)),
+            "v": make((n_groups, batch, cfg.num_kv_heads, max_len, hd)),
+            "length": make((n_groups,), jnp.int32),
+        },
+    }
+
+
+def _run_cached(cfg, params, tokens, cache, dist, positions):
+    x = embed(params["embed"], tokens, dist).astype(cfg.jdtype)
+    B, S = tokens.shape
+    decode = S == 1
+    layer_fwd = _mamba_layer_fwd(cfg, dist, collect_state=True)
+    shared = params["shared"]
+
+    def inner(carry, inp):
+        x = carry
+        p_l, state_l = inp
+        if decode:
+            h = rmsnorm(p_l["ln"], x, cfg.norm_eps)
+            out, new_state = mamba2_step(p_l["mix"], cfg, h, state_l)
+            return x + out, new_state
+        x, new_state = layer_fwd(x, p_l, state_l)
+        return x, new_state
+
+    def outer(x, inp):
+        p_g, state_g, site_cache = inp
+        x, new_states = jax.lax.scan(inner, x, (p_g, state_g))
+        x, new_site = _shared_block(shared, cfg, x, positions, dist, site_cache)
+        return x, (new_states, new_site)
+
+    x, (new_mamba, new_sites) = jax.lax.scan(
+        outer, x, (params["mamba"], cache["mamba"], cache["sites"])
+    )
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    return x, {"mamba": new_mamba, "sites": new_sites}
+
+
+def prefill(cfg, params, batch, cache, dist: Optional[DistContext] = None):
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    x, new_cache = _run_cached(cfg, params, tokens, cache, dist, positions)
+    logits = unembed(params["unembed"], x[:, -1:], dist, fp32=cfg.logits_fp32, valid_vocab=cfg.vocab_size)
+    return logits, new_cache
+
+
+def decode_step(cfg, params, tokens, cache, dist: Optional[DistContext] = None):
+    length = cache["sites"]["length"][0]
+    positions = decode_positions(length, tokens.shape[1])
+    x, new_cache = _run_cached(cfg, params, tokens, cache, dist, positions)
+    logits = unembed(params["unembed"], x, dist, fp32=cfg.logits_fp32, valid_vocab=cfg.vocab_size)
+    return logits, new_cache

@@ -1,0 +1,320 @@
+"""Shared layers: RMSNorm, RoPE, SwiGLU MLP, GQA attention (+bias), MLA.
+
+Conventions:
+  activations [B, S, d];  attention tensors [B, H, S, hd];
+  params are nested dicts from ParamFactory (one definition site per param);
+  every activation that crosses a layer boundary passes through
+  nn.shard(...) with *logical* axes so the mesh mapping is swappable.
+
+Attention is the blockwise-XLA implementation (lax.map over query chunks,
+full-row softmax per chunk) — memory O(bq * S) instead of O(S^2), which is
+what lets the 32k-prefill cells compile inside 16 GB HBM.  The Pallas flash
+kernel (kernels/flash_attention.py) is the TPU fast path behind the same
+call signature (dist.attn_mode).
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from ..kernels import ops as kops
+from .nn import DistContext, ParamFactory, shard
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / mlp
+# ---------------------------------------------------------------------------
+
+
+def init_rmsnorm(f: ParamFactory, path: str, d: int, lead=()):
+    lead_axes = ("layers",) * len(lead)
+    return {"scale": f.param(f"{path}/scale", (*lead, d), (*lead_axes, None), init="ones")}
+
+
+def rmsnorm(p, x: jnp.ndarray, eps: float) -> jnp.ndarray:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def decode_positions(length: jnp.ndarray, S: int) -> jnp.ndarray:
+    """Absolute positions of S new tokens given cache length (scalar or [B])."""
+    if jnp.ndim(length) == 1:
+        return length[:, None] + jnp.arange(S)[None, :]
+    return length + jnp.arange(S)
+
+
+def rope_freqs(hd: int, theta: float) -> jnp.ndarray:
+    return 1.0 / (theta ** (jnp.arange(0, hd, 2, dtype=jnp.float32) / hd))
+
+
+def apply_rope(x: jnp.ndarray, positions: jnp.ndarray, theta: float) -> jnp.ndarray:
+    """NeoX/llama half-rotation RoPE.  x [B, H, S, hd], positions [S] or [B,S]."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                       # [hd/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    if angles.ndim == 2:                                # [S, hd/2] -> broadcast
+        angles = angles[None, None]
+    else:                                               # [B, S, hd/2]
+        angles = angles[:, None]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_mlp(f: ParamFactory, path: str, d: int, ff: int, lead=()):
+    la = ("layers",) * len(lead)
+    return {
+        "w_gate": f.param(f"{path}/w_gate", (*lead, d, ff), (*la, "embed", "ff")),
+        "w_up": f.param(f"{path}/w_up", (*lead, d, ff), (*la, "embed", "ff")),
+        "w_down": f.param(f"{path}/w_down", (*lead, ff, d), (*la, "ff", "embed")),
+    }
+
+
+def mlp(p, x: jnp.ndarray, dist: Optional[DistContext]) -> jnp.ndarray:
+    h = jax.nn.silu(x @ p["w_gate"]) * (x @ p["w_up"])
+    h = shard(h, ("batch", None, "ff"), dist)
+    return h @ p["w_down"]
+
+
+# ---------------------------------------------------------------------------
+# GQA attention
+# ---------------------------------------------------------------------------
+
+
+def init_attention(f: ParamFactory, path: str, cfg, lead=()):
+    d, hd = cfg.d_model, cfg.hd
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    la = ("layers",) * len(lead)
+    p = {
+        "wq": f.param(f"{path}/wq", (*lead, d, Hq * hd), (*la, "embed", "heads")),
+        "wk": f.param(f"{path}/wk", (*lead, d, Hkv * hd), (*la, "embed", "heads")),
+        "wv": f.param(f"{path}/wv", (*lead, d, Hkv * hd), (*la, "embed", "heads")),
+        "wo": f.param(f"{path}/wo", (*lead, Hq * hd, d), (*la, "heads", "embed")),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = f.param(f"{path}/bq", (*lead, Hq * hd), (*la, "heads"), init="zeros")
+        p["bk"] = f.param(f"{path}/bk", (*lead, Hkv * hd), (*la, "heads"), init="zeros")
+        p["bv"] = f.param(f"{path}/bv", (*lead, Hkv * hd), (*la, "heads"), init="zeros")
+    return p
+
+
+def _chunked_attention(q, k, v, *, causal: bool, q_chunk: int, dist, offset=None) -> jnp.ndarray:
+    """Blockwise GQA attention.
+
+    q [B,Hq,Sq,hd], k [B,Hkv,Skv,hd], v [B,Hkv,Skv,hdv] -> [B,Hq,Sq,hdv].
+
+    lax.map over query chunks keeps live logits at [B,Hq,bq,Skv] f32; the
+    grouped einsum avoids materializing repeated KV.  `offset` anchors query
+    positions: query i sits at absolute position offset+i and may attend to
+    kpos <= offset+i.  offset may be a traced scalar (decode: cache length);
+    default Skv-Sq (plain causal / last-Sq-queries).  Entries of k/v beyond
+    the valid prefix are masked by the same inequality, so cache buffers can
+    be passed whole.
+    """
+    if dist is not None and dist.attn_mode != "xla" and q.shape[-1] == v.shape[-1]:
+        return kops.flash_attention(q, k, v, causal=causal, mode=dist.attn_mode)
+    B, Hq, Sq, hd = q.shape
+    Hkv, Skv = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]
+    group = Hq // Hkv
+    scale = 1.0 / (hd ** 0.5)
+    if offset is None:
+        offset = Skv - Sq
+    qg = q.reshape(B, Hkv, group, Sq, hd)
+
+    bq = min(q_chunk, Sq)
+    if Sq % bq != 0:
+        bq = Sq  # irregular lengths: single chunk
+    nq = Sq // bq
+
+    offset = jnp.asarray(offset)
+
+    def chunk(qi):
+        qc = jax.lax.dynamic_slice_in_dim(qg, qi * bq, bq, axis=3)
+        logits = jnp.einsum(
+            "bhgqd,bhkd->bhgqk", qc, k, preferred_element_type=jnp.float32
+        ) * scale
+        if causal:
+            kpos = jnp.arange(Skv)
+            base = qi * bq + jnp.arange(bq)
+            if offset.ndim == 0:
+                qpos = base + offset                      # [bq]
+                mask = kpos[None, :] <= qpos[:, None]     # [bq, Skv]
+            else:                                         # per-sequence offsets [B]
+                qpos = offset[:, None] + base[None, :]    # [B, bq]
+                mask = (kpos[None, None, :] <= qpos[:, :, None])[:, None, None]  # [B,1,1,bq,Skv]
+            logits = jnp.where(mask, logits, -jnp.inf)
+        w = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+        return jnp.einsum("bhgqk,bhkd->bhgqd", w, v, preferred_element_type=jnp.float32).astype(q.dtype)
+
+    if nq == 1:
+        out = chunk(0)
+    else:
+        mapped = jax.lax.map(chunk, jnp.arange(nq))     # [nq, B, Hkv, group, bq, hdv]
+        out = jnp.moveaxis(mapped, 0, 3)                # [B, Hkv, group, nq, bq, hdv]
+    return out.reshape(B, Hq, Sq, hdv)
+
+
+def attention(
+    p, cfg, x: jnp.ndarray, positions: jnp.ndarray, dist,
+    *, kv_cache=None, causal: bool = True,
+):
+    """Full attention sublayer.  x [B,S,d].
+
+    kv_cache: None (train) or dict {k, v: [B,Hkv,Smax,hd], length: int32} —
+    new K/V are written at [length, length+S) and attention runs against the
+    whole valid prefix (decode: S=1).
+    Returns (out [B,S,d], updated kv_cache or None).
+    """
+    B, S, d = x.shape
+    hd = cfg.hd
+    Hq, Hkv = cfg.num_heads, cfg.num_kv_heads
+    q = x @ p["wq"]
+    k = x @ p["wk"]
+    v = x @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, S, Hq, hd).transpose(0, 2, 1, 3)
+    k = k.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    v = v.reshape(B, S, Hkv, hd).transpose(0, 2, 1, 3)
+    q = shard(q, ("batch", "heads", None, None), dist)
+    k = shard(k, ("batch", "kv_heads", None, None), dist)
+    v = shard(v, ("batch", "kv_heads", None, None), dist)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if kv_cache is not None:
+        length = kv_cache["length"]
+        if jnp.ndim(length) == 1:    # per-sequence lengths [B] (serve engine)
+            upd = jax.vmap(lambda buf, new, st:
+                           jax.lax.dynamic_update_slice_in_dim(buf, new, st, axis=1))
+            kf = upd(kv_cache["k"], k, length)
+            vf = upd(kv_cache["v"], v, length)
+        else:
+            kf = jax.lax.dynamic_update_slice_in_dim(kv_cache["k"], k, length, axis=2)
+            vf = jax.lax.dynamic_update_slice_in_dim(kv_cache["v"], v, length, axis=2)
+        new_cache = {"k": kf, "v": vf, "length": length + S}
+        # attend over the whole buffer; offset=length masks the unwritten tail
+        out = _chunked_attention(
+            q, kf, vf, causal=True, q_chunk=cfg.attn_q_chunk, dist=dist, offset=length
+        )
+    else:
+        out = _chunked_attention(q, k, v, causal=causal, q_chunk=cfg.attn_q_chunk, dist=dist)
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, Hq * hd)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (deepseek multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(f: ParamFactory, path: str, cfg, lead=()):
+    d = cfg.d_model
+    H = cfg.num_heads
+    qk = cfg.qk_nope_dim + cfg.qk_rope_dim
+    la = ("layers",) * len(lead)
+    return {
+        "wq": f.param(f"{path}/wq", (*lead, d, H * qk), (*la, "embed", "heads")),
+        "w_dkv": f.param(f"{path}/w_dkv", (*lead, d, cfg.kv_lora_rank), (*la, "embed", None)),
+        "w_kr": f.param(f"{path}/w_kr", (*lead, d, cfg.qk_rope_dim), (*la, "embed", None)),
+        "kv_norm": f.param(f"{path}/kv_norm", (*lead, cfg.kv_lora_rank), (*la, None), init="ones"),
+        "w_uk": f.param(f"{path}/w_uk", (*lead, cfg.kv_lora_rank, H * cfg.qk_nope_dim), (*la, None, "heads")),
+        "w_uv": f.param(f"{path}/w_uv", (*lead, cfg.kv_lora_rank, H * cfg.v_head_dim), (*la, None, "heads")),
+        "wo": f.param(f"{path}/wo", (*lead, H * cfg.v_head_dim, d), (*la, "heads", "embed")),
+    }
+
+
+def mla_attention(p, cfg, x: jnp.ndarray, positions: jnp.ndarray, dist, *, kv_cache=None):
+    """MLA: KV compressed to [B,S,kv_lora] + shared rope key [B,S,qk_rope].
+
+    The cache stores ONLY (c_kv, k_rope): 512+64 floats/token instead of
+    2*H*hd=4096 — the paper-config's 6.4x KV-cache compression.  This
+    implementation decompresses per block (naive); the absorbed-matmul
+    decode variant is a §Perf optimization candidate.
+    """
+    B, S, d = x.shape
+    H = cfg.num_heads
+    nope, rope_d, vh = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, nope + rope_d).transpose(0, 2, 1, 3)
+    q_nope, q_rope = q[..., :nope], q[..., nope:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    c_kv = rmsnorm({"scale": p["kv_norm"]}, x @ p["w_dkv"], cfg.norm_eps)  # [B,S,R]
+    k_rope = apply_rope((x @ p["w_kr"])[:, None], positions, cfg.rope_theta)  # [B,1,S,rope_d]
+
+    new_cache = None
+    if kv_cache is not None:
+        length = kv_cache["length"]
+        if jnp.ndim(length) == 1:    # per-sequence lengths [B] (serve engine)
+            c_full = jax.vmap(lambda buf, new, st:
+                              jax.lax.dynamic_update_slice_in_dim(buf, new, st, axis=0)
+                              )(kv_cache["c_kv"], c_kv, length)
+            kr_full = jax.vmap(lambda buf, new, st:
+                               jax.lax.dynamic_update_slice_in_dim(buf, new, st, axis=1)
+                               )(kv_cache["k_rope"], k_rope, length)
+        else:
+            c_full = jax.lax.dynamic_update_slice_in_dim(kv_cache["c_kv"], c_kv, length, axis=1)
+            kr_full = jax.lax.dynamic_update_slice_in_dim(kv_cache["k_rope"], k_rope, length, axis=2)
+        new_cache = {"c_kv": c_full, "k_rope": kr_full, "length": length + S}
+        c_kv, k_rope = c_full, kr_full
+        valid_len = length + S
+    else:
+        valid_len = None
+
+    Sk = c_kv.shape[1]
+    k_nope = (c_kv @ p["w_uk"]).reshape(B, Sk, H, nope).transpose(0, 2, 1, 3)
+    v = (c_kv @ p["w_uv"]).reshape(B, Sk, H, vh).transpose(0, 2, 1, 3)
+    k = jnp.concatenate([k_nope, jnp.broadcast_to(k_rope, (B, H, Sk, rope_d))], axis=-1)
+    k = shard(k, ("batch", "heads", None, None), dist)
+    v = shard(v, ("batch", "heads", None, None), dist)
+    qfull = jnp.concatenate([q_nope, q_rope], axis=-1)
+    qfull = shard(qfull, ("batch", "heads", None, None), dist)
+    offset = None if valid_len is None else valid_len - S
+    out = _chunked_attention(
+        qfull, k, v, causal=True, q_chunk=cfg.attn_q_chunk, dist=dist, offset=offset
+    )
+    out = out.transpose(0, 2, 1, 3).reshape(B, S, H * vh)
+    return out @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# embeddings / unembedding
+# ---------------------------------------------------------------------------
+
+
+def init_embed(f: ParamFactory, path: str, cfg, d: int):
+    vocab = cfg.vocab_padded if hasattr(cfg, "vocab_padded") else cfg
+    return {
+        "tokens": f.param(f"{path}/tokens", (vocab, d), ("vocab", "embed"), init="embed", scale=0.02),
+    }
+
+
+def embed(p, tokens: jnp.ndarray, dist) -> jnp.ndarray:
+    out = jnp.take(p["tokens"], tokens, axis=0)
+    return shard(out, ("batch", "seq", None), dist)
+
+
+def init_unembed(f: ParamFactory, path: str, d: int, cfg):
+    vocab = cfg.vocab_padded if hasattr(cfg, "vocab_padded") else cfg
+    return {"w": f.param(f"{path}/w", (d, vocab), ("embed", "vocab"))}
+
+
+def unembed(p, x: jnp.ndarray, dist, fp32: bool = True,
+            valid_vocab: int = 0) -> jnp.ndarray:
+    w = p["w"]
+    if fp32:
+        x, w = x.astype(jnp.float32), w.astype(jnp.float32)
+    logits = x @ w
+    if valid_vocab and valid_vocab < w.shape[-1]:
+        # vocab-padding mask (elementwise: no resharding of the vocab dim)
+        col = jax.lax.broadcasted_iota(jnp.int32, logits.shape, logits.ndim - 1)
+        logits = jnp.where(col < valid_vocab, logits, jnp.asarray(-1e9, logits.dtype))
+    return shard(logits, ("batch", None, "vocab"), dist)

@@ -1,0 +1,106 @@
+"""Family -> model implementation dispatch + input specs per (arch, shape).
+
+input_specs() produces either real random batches (mode="init", smoke
+tests/examples) or ShapeDtypeStructs (mode="shape", dry-run: nothing is
+allocated — the assignment's requirement that FULL configs are exercised
+only via lowering).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig, ShapeSpec
+from . import encdec, hybrid, ssm_lm, transformer, vlm
+from .nn import ParamFactory
+
+
+class ModelApi(NamedTuple):
+    init_params: Callable
+    forward: Callable
+    init_cache: Callable
+    prefill: Callable
+    decode_step: Callable
+
+
+_FAMILIES: Dict[str, ModelApi] = {
+    "dense": ModelApi(transformer.init_params, transformer.forward,
+                      transformer.init_cache, transformer.prefill, transformer.decode_step),
+    "moe": ModelApi(transformer.init_params, transformer.forward,
+                    transformer.init_cache, transformer.prefill, transformer.decode_step),
+    "ssm": ModelApi(ssm_lm.init_params, ssm_lm.forward,
+                    ssm_lm.init_cache, ssm_lm.prefill, ssm_lm.decode_step),
+    "hybrid": ModelApi(hybrid.init_params, hybrid.forward,
+                       hybrid.init_cache, hybrid.prefill, hybrid.decode_step),
+    "encdec": ModelApi(encdec.init_params, encdec.forward,
+                       encdec.init_cache, encdec.prefill, encdec.decode_step),
+    "vlm": ModelApi(vlm.init_params, vlm.forward,
+                    vlm.init_cache, vlm.prefill, vlm.decode_step),
+}
+
+
+def get_model(cfg: ModelConfig) -> ModelApi:
+    return _FAMILIES[cfg.family]
+
+
+# ---------------------------------------------------------------------------
+# input specs per (arch, shape)
+# ---------------------------------------------------------------------------
+
+
+def _mk(shape, dtype, mode, rng, high=None):
+    if mode == "shape":
+        return jax.ShapeDtypeStruct(shape, dtype)
+    if jnp.issubdtype(dtype, jnp.integer):
+        return jnp.asarray(rng.integers(0, high or 2, size=shape), dtype)
+    return jnp.asarray(rng.standard_normal(shape) * 0.02, dtype)
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeSpec, mode: str = "shape", seed: int = 0):
+    """Batch pytree for one cell.
+
+    train  -> {tokens, labels} (+ enc_embeds / patch_embeds per family)
+    prefill-> {tokens} (+ family extras)
+    decode -> {tokens [B,1]}  (the KV cache is a separate argument)
+    """
+    rng = np.random.default_rng(seed)
+    B, S = shape.global_batch, shape.seq_len
+    V = cfg.vocab_size
+    dt = cfg.jdtype
+    batch: Dict[str, Any] = {}
+
+    if shape.kind == "decode":
+        batch["tokens"] = _mk((B, 1), jnp.int32, mode, rng, V)
+        return batch
+
+    if cfg.family == "vlm":
+        n_img = cfg.num_image_tokens
+        batch["tokens"] = _mk((B, S - n_img), jnp.int32, mode, rng, V)
+        batch["patch_embeds"] = _mk((B, n_img, cfg.d_model), dt, mode, rng)
+    elif cfg.family == "encdec":
+        batch["tokens"] = _mk((B, S), jnp.int32, mode, rng, V)
+        batch["enc_embeds"] = _mk((B, S, cfg.d_model), dt, mode, rng)
+    else:
+        batch["tokens"] = _mk((B, S), jnp.int32, mode, rng, V)
+
+    if shape.kind == "train":
+        if cfg.family == "vlm":
+            # image positions carry label -100 (masked); text shifts by one
+            lab = _mk((B, S), jnp.int32, mode, rng, V)
+            batch["labels"] = lab
+        else:
+            batch["labels"] = _mk(
+                (B, S) if cfg.family != "encdec" else (B, S), jnp.int32, mode, rng, V
+            )
+    return batch
+
+
+def init_all(cfg: ModelConfig, mode: str = "init", seed: int = 0):
+    """(params, factory-with-specs) for a config."""
+    f = ParamFactory(mode=mode, key=jax.random.PRNGKey(seed), dtype=cfg.jdtype)
+    params = get_model(cfg).init_params(cfg, f)
+    return params, f

@@ -1,0 +1,212 @@
+"""Mamba2 block (SSD — state-space duality, Dao & Gu 2024).
+
+Chunked SSD forward: the sequence is cut into chunks of Q=cfg.ssm_chunk;
+within a chunk the recurrence is computed as masked matmuls (MXU work),
+across chunks a lax.scan carries the [H, P, N] state — O(S*Q) instead of
+O(S^2) attention, which is why the ssm/hybrid archs are the only ones that
+run the long_500k cell.
+
+All decays are exp of non-positive numbers (A < 0, dt > 0), so the chunked
+form is overflow-safe by construction.
+
+State for decode: conv_state [B, channels, w-1] + ssm_state [B, H, P, N];
+one decode step is O(d_in * (N + w)) — independent of context length, the
+property the long_500k cell exercises.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .nn import DistContext, ParamFactory, shard
+from .layers import rmsnorm
+
+
+def _pick_chunk(S: int, Q: int) -> int:
+    """Largest divisor of S that is <= Q (chunking is internal math: any
+    divisor partitions the recurrence exactly).  Irregular S (tests) costs
+    a bigger intra-chunk matmul, never correctness."""
+    if S % Q == 0:
+        return Q
+    for q in range(min(Q, S), 0, -1):
+        if S % q == 0:
+            return q
+    return S
+
+
+def ssm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    H = d_in // cfg.ssm_head_dim
+    conv_ch = d_in + 2 * cfg.ssm_groups * cfg.ssm_state
+    return d_in, H, conv_ch
+
+
+def init_mamba2(f: ParamFactory, path: str, cfg, lead=()):
+    d = cfg.d_model
+    d_in, H, conv_ch = ssm_dims(cfg)
+    N, w = cfg.ssm_state, cfg.ssm_conv
+    la = ("layers",) * len(lead)
+    proj_out = 2 * d_in + 2 * cfg.ssm_groups * N + H
+    return {
+        "w_in": f.param(f"{path}/w_in", (*lead, d, proj_out), (*la, "embed", "ff")),
+        "conv_w": f.param(f"{path}/conv_w", (*lead, conv_ch, w), (*la, "ff", None), scale=0.5),
+        "conv_b": f.param(f"{path}/conv_b", (*lead, conv_ch), (*la, "ff"), init="zeros"),
+        "dt_bias": f.param(f"{path}/dt_bias", (*lead, H), (*la, "heads"), init="zeros"),
+        "A_log": f.param(f"{path}/A_log", (*lead, H), (*la, "heads"), init="zeros"),
+        "D": f.param(f"{path}/D", (*lead, H), (*la, "heads"), init="ones"),
+        "norm": f.param(f"{path}/norm", (*lead, d_in), (*la, "ff"), init="ones"),
+        "w_out": f.param(f"{path}/w_out", (*lead, d_in, d), (*la, "ff", "embed")),
+    }
+
+
+def _split_proj(cfg, zxbcdt):
+    d_in, H, _ = ssm_dims(cfg)
+    GN = cfg.ssm_groups * cfg.ssm_state
+    z = zxbcdt[..., :d_in]
+    xBC = zxbcdt[..., d_in : 2 * d_in + 2 * GN]
+    dt = zxbcdt[..., 2 * d_in + 2 * GN :]
+    return z, xBC, dt
+
+
+def _causal_conv(xBC, conv_w, conv_b, state=None):
+    """Depthwise causal conv along S.  xBC [B,S,C], conv_w [C,w].
+
+    state [B, C, w-1] (previous inputs) for streaming; returns (out, new_state).
+    """
+    B, S, C = xBC.shape
+    w = conv_w.shape[-1]
+    xt = xBC.transpose(0, 2, 1)                               # [B, C, S]
+    if state is None:
+        pad = jnp.zeros((B, C, w - 1), xt.dtype)
+    else:
+        pad = state.astype(xt.dtype)
+    full = jnp.concatenate([pad, xt], axis=-1)                # [B, C, S+w-1]
+    out = jax.lax.conv_general_dilated(
+        full,
+        conv_w[:, None, :].astype(xt.dtype),                  # [C, 1, w] depthwise
+        window_strides=(1,),
+        padding="VALID",
+        feature_group_count=C,
+        dimension_numbers=("NCH", "OIH", "NCH"),
+    ) + conv_b[None, :, None].astype(xt.dtype)
+    new_state = full[..., -(w - 1):]
+    return jax.nn.silu(out).transpose(0, 2, 1), new_state
+
+
+def mamba2_forward(
+    p, cfg, x: jnp.ndarray, dist: Optional[DistContext],
+    *, initial_state=None, return_state: bool = False,
+):
+    """x [B,S,d] -> y [B,S,d].  S must be a multiple of ssm_chunk (pipeline
+    pads).  If return_state, also returns (conv_state, ssm_state)."""
+    B, S, d = x.shape
+    d_in, H, conv_ch = ssm_dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    Q = _pick_chunk(S, cfg.ssm_chunk)
+    nC = S // Q
+
+    zxbcdt = x @ p["w_in"]
+    zxbcdt = shard(zxbcdt, ("batch", None, "ff"), dist)
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    conv_in_state = initial_state[0] if initial_state is not None else None
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_in_state)
+    xh = xBC[..., :d_in].reshape(B, S, H, P)
+    Bm = xBC[..., d_in : d_in + N]                            # [B,S,N] (G=1)
+    Cm = xBC[..., d_in + N :]                                 # [B,S,N]
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,S,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))              # [H]
+    dA = dt * A                                               # [B,S,H] (<= 0)
+
+    # chunk views
+    xc = xh.reshape(B, nC, Q, H, P).astype(jnp.float32)
+    Bc = Bm.reshape(B, nC, Q, N).astype(jnp.float32)
+    Cc = Cm.reshape(B, nC, Q, N).astype(jnp.float32)
+    dtc = dt.reshape(B, nC, Q, H)
+    dAc = dA.reshape(B, nC, Q, H)
+    cum = jnp.cumsum(dAc, axis=2)                             # [B,c,Q,H]
+
+    # --- intra-chunk (quadratic within Q) ---
+    CB = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)                # [B,c,Q,Q]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,c,i,j,H]
+    ii = jnp.arange(Q)
+    mask = (ii[:, None] >= ii[None, :])[None, None, :, :, None]
+    att = CB[..., None] * jnp.where(mask, decay, 0.0)         # [B,c,i,j,H]
+    xdt = xc * dtc[..., None]                                 # [B,c,Q,H,P]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp", att, xdt)
+
+    # --- chunk states ---
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)           # [B,c,Q,H]
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn", Bc, decay_to_end, xdt)  # [B,c,H,P,N]
+
+    # --- inter-chunk recurrence ---
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                   # [B,c,H]
+    s0 = (
+        initial_state[1].astype(jnp.float32)
+        if initial_state is not None
+        else jnp.zeros((B, H, P, N), jnp.float32)
+    )
+
+    def scan_body(s_prev, inp):
+        st, dec = inp                                         # [B,H,P,N], [B,H]
+        s_next = dec[..., None, None] * s_prev + st
+        return s_next, s_prev
+
+    s_last, s_prevs = jax.lax.scan(
+        scan_body,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    s_prevs = s_prevs.transpose(1, 0, 2, 3, 4)                # [B,c,H,P,N]
+    y_inter = jnp.einsum("bcin,bchpn->bcihp", Cc, s_prevs) * jnp.exp(cum)[..., None]
+
+    y = (y_intra + y_inter).reshape(B, S, H, P) + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(B, S, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))                # gated
+    y = rmsnorm({"scale": p["norm"]}, y.astype(x.dtype), cfg.norm_eps)
+    out = y @ p["w_out"]
+    if return_state:
+        return out, (conv_state, s_last.astype(x.dtype))
+    return out
+
+
+def mamba2_step(p, cfg, x: jnp.ndarray, state) -> Tuple[jnp.ndarray, Tuple]:
+    """One decode step.  x [B,1,d]; state = (conv_state [B,C,w-1],
+    ssm_state [B,H,P,N]).  O(1) in context length."""
+    B = x.shape[0]
+    d_in, H, conv_ch = ssm_dims(cfg)
+    N, P = cfg.ssm_state, cfg.ssm_head_dim
+    conv_state, s = state
+
+    zxbcdt = x @ p["w_in"]                                    # [B,1,*]
+    z, xBC, dt = _split_proj(cfg, zxbcdt)
+    xBC, conv_state = _causal_conv(xBC, p["conv_w"], p["conv_b"], conv_state)
+    xh = xBC[:, 0, :d_in].reshape(B, H, P).astype(jnp.float32)
+    Bm = xBC[:, 0, d_in : d_in + N].astype(jnp.float32)       # [B,N]
+    Cm = xBC[:, 0, d_in + N :].astype(jnp.float32)            # [B,N]
+    dt = jax.nn.softplus(dt[:, 0].astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))  # [B,H]
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dA = jnp.exp(dt * A)                                      # [B,H]
+
+    s = s.astype(jnp.float32)
+    s_new = dA[..., None, None] * s + jnp.einsum("bh,bhp,bn->bhpn", dt, xh, Bm)
+    y = jnp.einsum("bn,bhpn->bhp", Cm, s_new) + xh * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_in)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rmsnorm({"scale": p["norm"]}, y.astype(x.dtype), cfg.norm_eps)
+    return y @ p["w_out"], (conv_state, s_new.astype(x.dtype))
+
+
+def init_ssm_state(cfg, batch: int, factory_mode: str = "init", dtype=None):
+    d_in, H, conv_ch = ssm_dims(cfg)
+    dtype = dtype or cfg.jdtype
+    shapes = {
+        "conv": ((batch, conv_ch, cfg.ssm_conv - 1), dtype),
+        "ssm": ((batch, H, cfg.ssm_head_dim, cfg.ssm_state), dtype),
+    }
+    if factory_mode == "shape":
+        return tuple(jax.ShapeDtypeStruct(s, d) for s, d in shapes.values())
+    return tuple(jnp.zeros(s, d) for s, d in shapes.values())

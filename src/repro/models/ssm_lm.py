@@ -1,0 +1,93 @@
+"""Pure Mamba2 LM (mamba2-780m family): attention-free, O(1)-state decode."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .layers import embed, init_embed, init_rmsnorm, init_unembed, rmsnorm, unembed
+from .nn import DistContext, ParamFactory
+from .ssm import init_mamba2, init_ssm_state, mamba2_forward, mamba2_step
+
+ZERO_AUX = {"lb_loss": 0.0, "z_loss": 0.0, "dropped": 0}
+
+
+def init_params(cfg, f: ParamFactory):
+    L = cfg.num_layers
+    return {
+        "embed": init_embed(f, "embed", cfg, cfg.d_model),
+        "layers": {
+            "ln": init_rmsnorm(f, "layers/ln", cfg.d_model, (L,)),
+            "mix": init_mamba2(f, "layers/mix", cfg, (L,)),
+        },
+        "ln_f": init_rmsnorm(f, "ln_f", cfg.d_model),
+        "unembed": init_unembed(f, "unembed", cfg.d_model, cfg),
+    }
+
+
+def forward(cfg, params, batch, dist: Optional[DistContext] = None):
+    tokens = batch["tokens"]
+    x = embed(params["embed"], tokens, dist).astype(cfg.jdtype)
+
+    def body(x, p_l):
+        h = rmsnorm(p_l["ln"], x, cfg.norm_eps)
+        return x + mamba2_forward(p_l["mix"], cfg, h, dist), None
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "block" else body
+    x, _ = jax.lax.scan(body_fn, x, params["layers"])
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x, dist, fp32=cfg.logits_fp32, valid_vocab=cfg.vocab_size)
+    return logits, {k: jnp.asarray(v, jnp.float32) for k, v in ZERO_AUX.items()}
+
+
+def init_cache(cfg, batch: int, max_len: int, mode: str = "init"):
+    """SSM 'cache' = per-layer (conv_state, ssm_state) + position counter.
+
+    Note max_len never appears: decode state is O(1) in context length —
+    this is why the long_500k cell is an SSM/hybrid-only shape."""
+    L = cfg.num_layers
+    conv, ssm = init_ssm_state(cfg, batch, "shape")
+
+    def make(s, d):
+        return jax.ShapeDtypeStruct(s, d) if mode == "shape" else jnp.zeros(s, d)
+
+    return {
+        "states": (make((L, *conv.shape), conv.dtype), make((L, *ssm.shape), ssm.dtype)),
+        "length": make((), jnp.int32),
+    }
+
+
+def prefill(cfg, params, batch, cache, dist: Optional[DistContext] = None):
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, dist).astype(cfg.jdtype)
+
+    def body(x, inp):
+        p_l, st_l = inp
+        h = rmsnorm(p_l["ln"], x, cfg.norm_eps)
+        out, new_state = mamba2_forward(
+            p_l["mix"], cfg, h, dist, initial_state=st_l, return_state=True
+        )
+        return x + out, new_state
+
+    x, new_states = jax.lax.scan(body, x, (params["layers"], cache["states"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x[:, -1:], dist, fp32=cfg.logits_fp32, valid_vocab=cfg.vocab_size)
+    return logits, {"states": new_states, "length": cache["length"] + S}
+
+
+def decode_step(cfg, params, tokens, cache, dist: Optional[DistContext] = None):
+    x = embed(params["embed"], tokens, dist).astype(cfg.jdtype)
+
+    def body(x, inp):
+        p_l, st_l = inp
+        h = rmsnorm(p_l["ln"], x, cfg.norm_eps)
+        out, new_state = mamba2_step(p_l["mix"], cfg, h, st_l)
+        return x + out, new_state
+
+    x, new_states = jax.lax.scan(body, x, (params["layers"], cache["states"]))
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x, dist, fp32=cfg.logits_fp32, valid_vocab=cfg.vocab_size)
+    return logits, {"states": new_states, "length": cache["length"] + 1}

@@ -1,0 +1,209 @@
+"""Decoder-only LM assembly: dense GQA, MoE (qwen3), MLA+MoE (deepseek).
+
+Layers are stacked along a leading "layers" dim and iterated with lax.scan
+(small HLO at any depth: the 94-layer MoE compiles as one block).  A
+`first_k_dense` prefix (deepseek) is kept unstacked outside the scan.
+Remat policy "block" checkpoints each scanned block.
+
+The decode cache is a pytree stacked the same way ([L, ...]) and threaded
+through the scan as xs/ys, so prefill/decode share the block code.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .layers import (
+    attention, decode_positions, embed, init_attention, init_embed, init_mla,
+    init_mlp, init_rmsnorm, init_unembed, mla_attention, mlp, rmsnorm, unembed,
+)
+from .moe import init_moe, moe_ffn
+from .nn import DistContext, ParamFactory, shard
+
+ZERO_AUX = {"lb_loss": 0.0, "z_loss": 0.0, "dropped": 0}
+
+
+def _is_moe_layer(cfg, layer_idx: int) -> bool:
+    return cfg.num_experts > 0 and layer_idx >= cfg.first_k_dense
+
+
+def _init_block(f: ParamFactory, path: str, cfg, moe: bool, lead=()):
+    p = {
+        "ln1": init_rmsnorm(f, f"{path}/ln1", cfg.d_model, lead),
+        "ln2": init_rmsnorm(f, f"{path}/ln2", cfg.d_model, lead),
+    }
+    if cfg.kv_lora_rank:
+        p["attn"] = init_mla(f, f"{path}/attn", cfg, lead)
+    else:
+        p["attn"] = init_attention(f, f"{path}/attn", cfg, lead)
+    if moe:
+        p["ffn"] = init_moe(f, f"{path}/ffn", cfg, lead)
+    else:
+        p["ffn"] = init_mlp(f, f"{path}/ffn", cfg.d_model, cfg.d_ff, lead)
+    return p
+
+
+def _block(p, cfg, x, positions, dist, cache=None, moe: bool = False):
+    h = rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if cfg.kv_lora_rank:
+        a, new_cache = mla_attention(p["attn"], cfg, h, positions, dist, kv_cache=cache)
+    else:
+        a, new_cache = attention(p["attn"], cfg, h, positions, dist, kv_cache=cache)
+    x = shard(x + a, ("batch", "seq", None), dist)
+    h = rmsnorm(p["ln2"], x, cfg.norm_eps)
+    if moe:
+        f, aux = moe_ffn(p["ffn"], cfg, h, dist)
+    else:
+        f, aux = mlp(p["ffn"], h, dist), ZERO_AUX
+    x = shard(x + f, ("batch", "seq", None), dist)
+    return x, new_cache, aux
+
+
+def init_params(cfg, f: ParamFactory) -> Dict[str, Any]:
+    n_prefix = cfg.first_k_dense if cfg.num_experts else 0
+    n_scan = cfg.num_layers - n_prefix
+    p = {
+        "embed": init_embed(f, "embed", cfg, cfg.d_model),
+        "prefix": [
+            # path "prefix/<i>/..." matches the pytree path (list index), so
+            # factory.specs line up with tree_map_with_path in sharding.py
+            _init_block(f, f"prefix/{i}", cfg, moe=False) for i in range(n_prefix)
+        ],
+        "blocks": _init_block(
+            f, "blocks", cfg, moe=cfg.num_experts > 0, lead=(n_scan,)
+        ),
+        "ln_f": init_rmsnorm(f, "ln_f", cfg.d_model),
+        "unembed": init_unembed(f, "unembed", cfg.d_model, cfg),
+    }
+    return p
+
+
+def _accumulate(acc, aux):
+    return {k: acc[k] + aux[k] for k in acc}
+
+
+def _scan_blocks(params, cfg, x, positions, dist, caches=None):
+    """Run the stacked blocks.  caches: None or pytree with leading L dim."""
+    moe = cfg.num_experts > 0
+
+    def body(carry, inp):
+        x, aux_acc = carry
+        p_l, cache_l = inp
+        x, new_cache, aux = _block(p_l, cfg, x, positions, dist, cache_l, moe=moe)
+        return (x, _accumulate(aux_acc, aux)), new_cache
+
+    body_fn = jax.checkpoint(body) if cfg.remat == "block" else body
+
+    init_aux = {k: jnp.asarray(v, jnp.float32) for k, v in ZERO_AUX.items()}
+    if cfg.scan_layers:
+        (x, aux), new_caches = jax.lax.scan(
+            body_fn, (x, init_aux), (params["blocks"], caches)
+        )
+    else:
+        n = jax.tree_util.tree_leaves(params["blocks"])[0].shape[0]
+        new_list = []
+        carry = (x, init_aux)
+        for i in range(n):
+            p_l = jax.tree.map(lambda a: a[i], params["blocks"])
+            c_l = jax.tree.map(lambda a: a[i], caches) if caches is not None else None
+            carry, nc = body_fn(carry, (p_l, c_l))
+            new_list.append(nc)
+        x, aux = carry
+        new_caches = (
+            jax.tree.map(lambda *xs: jnp.stack(xs), *new_list) if caches is not None else None
+        )
+    return x, aux, new_caches
+
+
+def forward(cfg, params, batch, dist: Optional[DistContext] = None):
+    """Train-path forward: tokens [B,S] -> logits [B,S,V].  Returns (logits, aux)."""
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = embed(params["embed"], tokens, dist).astype(cfg.jdtype)
+    positions = jnp.arange(S)
+    aux_total = {k: jnp.asarray(v, jnp.float32) for k, v in ZERO_AUX.items()}
+    for p_l in params["prefix"]:
+        x, _, aux = _block(p_l, cfg, x, positions, dist, None, moe=False)
+        aux_total = _accumulate(aux_total, aux)
+    x, aux, _ = _scan_blocks(params, cfg, x, positions, dist, None)
+    aux_total = _accumulate(aux_total, aux)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x, dist, fp32=cfg.logits_fp32, valid_vocab=cfg.vocab_size)
+    return logits, aux_total
+
+
+# ---------------------------------------------------------------------------
+# serving
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg, batch: int, max_len: int, mode: str = "init"):
+    """Stacked decode cache.  GQA: k/v [L,B,Hkv,Smax,hd]; MLA: c_kv+k_rope."""
+    n_prefix = cfg.first_k_dense if cfg.num_experts else 0
+    n_scan = cfg.num_layers - n_prefix
+    dt = cfg.jdtype
+
+    def make(shape, dtype=dt):
+        if mode == "shape":
+            return jax.ShapeDtypeStruct(shape, dtype)
+        return jnp.zeros(shape, dtype)
+
+    def layer_cache(lead):
+        if cfg.kv_lora_rank:
+            return {
+                "c_kv": make((*lead, batch, max_len, cfg.kv_lora_rank)),
+                "k_rope": make((*lead, batch, 1, max_len, cfg.qk_rope_dim)),
+                "length": make((*lead,), jnp.int32) if lead else make((), jnp.int32),
+            }
+        hd = cfg.hd
+        return {
+            "k": make((*lead, batch, cfg.num_kv_heads, max_len, hd)),
+            "v": make((*lead, batch, cfg.num_kv_heads, max_len, hd)),
+            "length": make((*lead,), jnp.int32) if lead else make((), jnp.int32),
+        }
+
+    return {
+        "prefix": [layer_cache(()) for _ in range(n_prefix)],
+        "blocks": layer_cache((n_scan,)),
+    }
+
+
+def _run_with_cache(cfg, params, tokens, cache, dist, positions, last_only: bool):
+    x = embed(params["embed"], tokens, dist).astype(cfg.jdtype)
+    aux_total = {k: jnp.asarray(v, jnp.float32) for k, v in ZERO_AUX.items()}
+    new_prefix = []
+    for p_l, c_l in zip(params["prefix"], cache["prefix"]):
+        x, nc, aux = _block(p_l, cfg, x, positions, dist, c_l, moe=False)
+        new_prefix.append(nc)
+        aux_total = _accumulate(aux_total, aux)
+    x, aux, new_blocks = _scan_blocks(params, cfg, x, positions, dist, cache["blocks"])
+    aux_total = _accumulate(aux_total, aux)
+    if last_only:
+        x = x[:, -1:]  # unembed only the sampled position (prefill: huge saving)
+    x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
+    logits = unembed(params["unembed"], x, dist, fp32=cfg.logits_fp32, valid_vocab=cfg.vocab_size)
+    return logits, {"prefix": new_prefix, "blocks": new_blocks}, aux_total
+
+
+def prefill(cfg, params, batch, cache, dist: Optional[DistContext] = None):
+    """Process the prompt, filling the cache.  Returns (last-token logits, cache)."""
+    tokens = batch["tokens"]
+    S = tokens.shape[1]
+    positions = jnp.arange(S)
+    logits, new_cache, _ = _run_with_cache(
+        cfg, params, tokens, cache, dist, positions, last_only=True
+    )
+    return logits, new_cache
+
+
+def decode_step(cfg, params, tokens, cache, dist: Optional[DistContext] = None):
+    """One token per sequence.  tokens [B,1].  Returns (logits [B,1,V], cache)."""
+    length = cache["blocks"]["length"][0]  # stacked [L,...]; all entries equal
+    positions = decode_positions(length, tokens.shape[1])
+    logits, new_cache, _ = _run_with_cache(
+        cfg, params, tokens, cache, dist, positions, last_only=False
+    )
+    return logits, new_cache

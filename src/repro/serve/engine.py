@@ -1,0 +1,260 @@
+"""Continuous-batching serving engine.
+
+vLLM-style iteration-level scheduling on a fixed slot grid:
+
+  * the decode cache is batched [.., max_batch, ..] with PER-SLOT lengths
+    (models accept `length` as a [B] vector — layers.py masks/writes per
+    sequence), so sequences of different lengths decode in one step;
+  * a finished slot is reused immediately: the next waiting request's prompt
+    is prefilled into a fresh B=1 cache and spliced into the slot
+    (batch-axis splice is structural — axes are detected by shape-diffing
+    two abstract caches, no per-family code);
+  * prefill processes the first P-1 prompt tokens; the final prompt token
+    enters through the shared decode path, which yields the logits for the
+    first sampled token — prefill and decode never duplicate logic.
+
+Attention-cache families (dense/moe) optionally bucket prefill lengths to
+powers of two to bound jit recompilation: right-padding is safe because the
+per-slot length masks everything at positions >= length, and each decode
+step overwrites position `length` before attending (see layers.attention).
+SSM/hybrid state integrates every token it sees, so those prefill exactly.
+
+Engine-vs-oracle equivalence (same tokens as one-request-at-a-time greedy
+decoding) is asserted in tests/test_serve.py.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..configs.base import ModelConfig
+from ..models.registry import get_model
+from .sampling import SamplingParams, sample
+
+SUPPORTED_FAMILIES = ("dense", "moe", "ssm", "hybrid")
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: List[int]
+    max_new_tokens: int = 16
+    eos_id: Optional[int] = None
+    sampling: SamplingParams = dataclasses.field(default_factory=SamplingParams)
+
+
+@dataclasses.dataclass
+class _Slot:
+    req: Optional[Request] = None
+    pending: int = 0          # next token to feed through decode
+    generated: List[int] = dataclasses.field(default_factory=list)
+
+    @property
+    def free(self) -> bool:
+        return self.req is None
+
+
+# ---------------------------------------------------------------------------
+# structural cache helpers
+# ---------------------------------------------------------------------------
+
+
+def _expand_lengths(cache, batch: int):
+    """Give every `length` leaf a trailing per-slot batch dim."""
+    def per_leaf(path, leaf):
+        name = None
+        for k in reversed(path):
+            if isinstance(k, jax.tree_util.DictKey):
+                name = str(k.key)
+                break
+        if name == "length":
+            shape = tuple(leaf.shape) + (batch,)
+            if isinstance(leaf, jax.ShapeDtypeStruct):
+                return jax.ShapeDtypeStruct(shape, leaf.dtype)
+            return jnp.broadcast_to(leaf[..., None], shape)
+        return leaf
+
+    return jax.tree_util.tree_map_with_path(per_leaf, cache)
+
+
+def _make_cache(cfg: ModelConfig, batch: int, max_len: int, mode: str = "init"):
+    api = get_model(cfg)
+    return _expand_lengths(api.init_cache(cfg, batch, max_len, mode), batch)
+
+
+def _batch_axes(cfg: ModelConfig, max_len: int):
+    """Per-leaf batch axis, found by diffing abstract caches of batch 2 vs 3."""
+    c2 = _make_cache(cfg, 2, max_len, "shape")
+    c3 = _make_cache(cfg, 3, max_len, "shape")
+
+    def per_leaf(l2, l3):
+        diff = [i for i, (a, b) in enumerate(zip(l2.shape, l3.shape)) if a != b]
+        assert len(diff) == 1, f"ambiguous batch axis: {l2.shape} vs {l3.shape}"
+        return diff[0]
+
+    return jax.tree.map(per_leaf, c2, c3)
+
+
+def _splice_slot(cache, one, axes, slot: int):
+    """Write the B=1 cache `one` into slot `slot` of the batched cache."""
+    return jax.tree.map(
+        lambda buf, new, ax: jax.lax.dynamic_update_slice_in_dim(buf, new, slot, axis=ax),
+        cache, one, axes,
+    )
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 8,
+                 max_len: int = 512, dist=None, bucket_prefill: bool = True):
+        assert cfg.family in SUPPORTED_FAMILIES, cfg.family
+        self.cfg = cfg
+        self.params = params
+        self.api = get_model(cfg)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.dist = dist
+        # SSM state integrates pad tokens -> exact-length prefill there
+        self.bucket_prefill = bucket_prefill and cfg.family in ("dense", "moe")
+        self.cache = _make_cache(cfg, max_batch, max_len)
+        self.axes = _batch_axes(cfg, max_len)
+        self.slots = [_Slot() for _ in range(max_batch)]
+        self.waiting: List[Request] = []
+        self.finished: Dict[int, List[int]] = {}
+        self._decode = jax.jit(
+            lambda p, t, c: self.api.decode_step(cfg, p, t, c, dist))
+        self._prefill = {}  # prompt-len -> jitted prefill
+        self.steps = 0
+        self.prefill_tokens = 0
+        self.decode_tokens = 0
+
+    # -- request intake ----------------------------------------------------
+
+    def add_request(self, req: Request):
+        assert len(req.prompt) >= 1, "empty prompt"
+        assert len(req.prompt) + req.max_new_tokens <= self.max_len
+        self.waiting.append(req)
+
+    # -- scheduling --------------------------------------------------------
+
+    def _prefill_len(self, n: int) -> int:
+        if not self.bucket_prefill:
+            return n
+        p = 1
+        while p < n:
+            p <<= 1
+        return min(p, self.max_len)
+
+    def _prefill_fn(self, plen: int):
+        if plen not in self._prefill:
+            self._prefill[plen] = jax.jit(
+                lambda p, t, c: self.api.prefill(self.cfg, p, {"tokens": t}, c, self.dist))
+        return self._prefill[plen]
+
+    def _admit(self, slot_idx: int, req: Request):
+        slot = self.slots[slot_idx]
+        slot.req = req
+        slot.generated = []
+        prompt = list(req.prompt)
+        n_pre = len(prompt) - 1            # last prompt token goes through decode
+        one = _make_cache(self.cfg, 1, self.max_len)
+        if n_pre > 0:
+            plen = self._prefill_len(n_pre)
+            toks = np.zeros((1, plen), np.int32)
+            toks[0, :n_pre] = prompt[:n_pre]
+            _, one = self._prefill_fn(plen)(self.params, jnp.asarray(toks), one)
+            if plen != n_pre:
+                # true length is n_pre; mask out the right-padding
+                one = jax.tree_util.tree_map_with_path(
+                    lambda path, leaf: (jnp.full_like(leaf, n_pre)
+                                        if _leaf_is_length(path) else leaf), one)
+            self.prefill_tokens += n_pre
+        self.cache = _splice_slot(self.cache, one, self.axes, slot_idx)
+        slot.pending = prompt[-1]
+
+    def _retire(self, slot_idx: int):
+        slot = self.slots[slot_idx]
+        self.finished[slot.req.uid] = slot.generated
+        slot.req = None
+
+    # -- one engine iteration ----------------------------------------------
+
+    def step(self) -> bool:
+        """Admit what fits, run one decode wave.  False when fully idle."""
+        for i, slot in enumerate(self.slots):
+            if slot.free and self.waiting:
+                self._admit(i, self.waiting.pop(0))
+        active = [i for i, s in enumerate(self.slots) if not s.free]
+        if not active:
+            return False
+
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i in active:
+            tokens[i, 0] = self.slots[i].pending
+        logits, self.cache = self._decode(self.params, jnp.asarray(tokens), self.cache)
+        logits = np.asarray(jax.device_get(logits[:, -1]), np.float32)
+
+        for i in active:
+            slot = self.slots[i]
+            req = slot.req
+            tok = sample(logits[i], req.sampling, step=len(slot.generated))
+            slot.generated.append(tok)
+            slot.pending = tok
+            done = (len(slot.generated) >= req.max_new_tokens
+                    or (req.eos_id is not None and tok == req.eos_id))
+            if done:
+                self._retire(i)
+        self.steps += 1
+        self.decode_tokens += len(active)
+        return True
+
+    def run(self, requests: Optional[List[Request]] = None) -> Dict[int, List[int]]:
+        for r in requests or []:
+            self.add_request(r)
+        while self.step():
+            pass
+        out, self.finished = self.finished, {}
+        return out
+
+
+def _leaf_is_length(path) -> bool:
+    for k in reversed(path):
+        if isinstance(k, jax.tree_util.DictKey):
+            return str(k.key) == "length"
+    return False
+
+
+# ---------------------------------------------------------------------------
+# single-request oracle (tests compare the engine against this)
+# ---------------------------------------------------------------------------
+
+
+def generate_reference(cfg: ModelConfig, params, req: Request, *,
+                       max_len: int = 512, dist=None) -> List[int]:
+    """One request, one slot, no batching — the engine must match this."""
+    api = get_model(cfg)
+    cache = _make_cache(cfg, 1, max_len)
+    prompt = list(req.prompt)
+    if len(prompt) > 1:
+        _, cache = api.prefill(
+            cfg, params, {"tokens": jnp.asarray([prompt[:-1]], jnp.int32)}, cache, dist)
+    pending = prompt[-1]
+    out: List[int] = []
+    for _ in range(req.max_new_tokens):
+        logits, cache = api.decode_step(
+            cfg, params, jnp.asarray([[pending]], jnp.int32), cache, dist)
+        tok = sample(np.asarray(logits[0, -1], np.float32), req.sampling, step=len(out))
+        out.append(tok)
+        pending = tok
+        if req.eos_id is not None and tok == req.eos_id:
+            break
+    return out

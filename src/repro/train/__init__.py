@@ -1,0 +1,3 @@
+from . import checkpoint, compression, fault, optim, step  # noqa: F401
+from .optim import OptimConfig, OptState  # noqa: F401
+from .step import TrainState, init_state, make_train_step, state_shardings  # noqa: F401

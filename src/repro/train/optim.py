@@ -1,0 +1,148 @@
+"""Optimizer: AdamW with decoupled weight decay, global-norm clipping,
+warmup+cosine schedule, and optional fp32 master weights for bf16 params.
+
+Self-contained (no optax): state is a pytree congruent with params, so the
+FSDP/TP sharding of every parameter is inherited leaf-by-leaf by its Adam
+moments (and master copy) — exactly how ZeRO shards optimizer state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimConfig:
+    lr: float = 3e-4
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    min_lr_ratio: float = 0.1
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    master_fp32: bool = True   # keep fp32 master copy when params are low-precision
+    moments_dtype: str = "float32"   # "bfloat16" halves mu/nu memory (8-bit-Adam-lite)
+    schedule: str = "warmup_cosine"  # "warmup_cosine" | "constant"
+
+    @property
+    def jmoments(self):
+        return jnp.dtype(self.moments_dtype)
+
+
+class OptState(NamedTuple):
+    mu: Any            # first moment, fp32, congruent with params
+    nu: Any            # second moment, fp32
+    master: Any        # fp32 master copy (or None-leaves when disabled)
+    count: jnp.ndarray # int32 step counter
+
+
+def _f32(x):
+    return x.astype(jnp.float32)
+
+
+def schedule(cfg: OptimConfig, step: jnp.ndarray) -> jnp.ndarray:
+    """Learning rate at `step` (traced-friendly)."""
+    step = step.astype(jnp.float32)
+    warm = jnp.minimum(step / jnp.maximum(cfg.warmup_steps, 1), 1.0)
+    if cfg.schedule == "constant":
+        return cfg.lr * warm
+    # cosine decay from lr to lr*min_lr_ratio over the post-warmup span
+    span = jnp.maximum(cfg.total_steps - cfg.warmup_steps, 1)
+    frac = jnp.clip((step - cfg.warmup_steps) / span, 0.0, 1.0)
+    cos = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    decayed = cfg.min_lr_ratio + (1.0 - cfg.min_lr_ratio) * cos
+    return cfg.lr * warm * decayed
+
+
+def init(cfg: OptimConfig, params) -> OptState:
+    mdt = cfg.jmoments
+    zeros = lambda p: jnp.zeros(p.shape, mdt)  # noqa: E731
+    if cfg.master_fp32:
+        master = jax.tree.map(_f32, params)
+    else:
+        master = jax.tree.map(lambda p: jnp.zeros((), jnp.float32), params)
+    return OptState(
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+        master=master,
+        count=jnp.zeros((), jnp.int32),
+    )
+
+
+def init_abstract(cfg: OptimConfig, params) -> OptState:
+    """ShapeDtypeStruct mirror of init() — used by the dry-run (no allocation)."""
+    def z(p):
+        return jax.ShapeDtypeStruct(p.shape, cfg.jmoments)
+
+    master = (jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32), params)
+              if cfg.master_fp32
+              else jax.tree.map(lambda p: jax.ShapeDtypeStruct((), jnp.float32), params))
+    return OptState(
+        mu=jax.tree.map(z, params),
+        nu=jax.tree.map(z, params),
+        master=master,
+        count=jax.ShapeDtypeStruct((), jnp.int32),
+    )
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(_f32(g) ** 2) for g in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+_NO_DECAY_SUBSTR = ("ln", "norm", "bias", "scale", "length")
+
+
+def _decay_mask(path: Tuple) -> bool:
+    s = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path).lower()
+    return not any(t in s for t in _NO_DECAY_SUBSTR)
+
+
+def apply_updates(cfg: OptimConfig, params, grads, state: OptState):
+    """One AdamW step.  Returns (new_params, new_state, metrics)."""
+    count = state.count + 1
+    lr = schedule(cfg, count)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.clip_norm / (gnorm + 1e-12)) if cfg.clip_norm > 0 else 1.0
+
+    b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+    b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+    mdt = cfg.jmoments
+
+    def leaf(path, p, g, mu, nu, master):
+        g = _f32(g) * clip
+        mu = cfg.b1 * _f32(mu) + (1.0 - cfg.b1) * g
+        nu = cfg.b2 * _f32(nu) + (1.0 - cfg.b2) * (g * g)
+        update = (mu / b1c) / (jnp.sqrt(nu / b2c) + cfg.eps)
+        base = master if cfg.master_fp32 else _f32(p)
+        if _decay_mask(path):
+            update = update + cfg.weight_decay * base
+        new_master = base - lr * update
+        new_p = new_master.astype(p.dtype)
+        new_master_out = new_master if cfg.master_fp32 else master
+        return new_p, mu.astype(mdt), nu.astype(mdt), new_master_out
+
+    flat = jax.tree_util.tree_flatten_with_path(params)
+    paths = [p for p, _ in flat[0]]
+    treedef = flat[1]
+    ps = [l for _, l in flat[0]]
+    gs = treedef.flatten_up_to(grads)
+    mus = treedef.flatten_up_to(state.mu)
+    nus = treedef.flatten_up_to(state.nu)
+    masters = treedef.flatten_up_to(state.master)
+
+    outs = [leaf(path, p, g, mu, nu, ma)
+            for path, p, g, mu, nu, ma in zip(paths, ps, gs, mus, nus, masters)]
+    new_params = jax.tree_util.tree_unflatten(treedef, [o[0] for o in outs])
+    new_mu = jax.tree_util.tree_unflatten(treedef, [o[1] for o in outs])
+    new_nu = jax.tree_util.tree_unflatten(treedef, [o[2] for o in outs])
+    new_master = jax.tree_util.tree_unflatten(treedef, [o[3] for o in outs])
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, OptState(new_mu, new_nu, new_master, count), metrics

@@ -1,0 +1,184 @@
+"""Train-step assembly: loss, gradient accumulation, sharded jit.
+
+make_train_step() returns a jit'd (state, batch) -> (state, metrics) whose
+in/out shardings are derived from the ParamFactory logical-axis specs +
+distributed/sharding.py rules.  Gradient accumulation is a lax.scan over
+microbatches (XLA overlaps each microbatch's reduce with the next one's
+compute — the compute/comm-overlap trick), and the optional cross-pod
+gradient compression hook (train/compression.py) runs between accumulation
+and the optimizer.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Dict, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig
+from ..distributed.sharding import batch_shardings, param_shardings
+from ..models.nn import DistContext, ParamFactory
+from ..models.registry import ModelApi, get_model
+from . import optim as optim_lib
+from .compression import CompressionConfig, compress_state_init, compressed_grads
+
+
+class TrainState(NamedTuple):
+    params: Any
+    opt: optim_lib.OptState
+    comp: Any          # compression error-feedback state (possibly empty tuple)
+    step: jnp.ndarray  # int32
+
+
+# ---------------------------------------------------------------------------
+# Loss
+# ---------------------------------------------------------------------------
+
+
+def softmax_xent(logits: jnp.ndarray, labels: jnp.ndarray, ignore: int = -100):
+    """Mean token cross-entropy; labels == `ignore` are masked out."""
+    mask = (labels != ignore)
+    labels_safe = jnp.where(mask, labels, 0)
+    logz = jax.nn.logsumexp(logits.astype(jnp.float32), axis=-1)
+    gold = jnp.take_along_axis(
+        logits.astype(jnp.float32), labels_safe[..., None], axis=-1
+    )[..., 0]
+    nll = (logz - gold) * mask
+    denom = jnp.maximum(mask.sum(), 1)
+    return nll.sum() / denom, denom
+
+
+def make_loss_fn(cfg: ModelConfig, api: Optional[ModelApi] = None,
+                 lb_coef: float = 1e-2, z_coef: float = 0.0):
+    api = api or get_model(cfg)
+
+    def loss_fn(params, batch, dist: Optional[DistContext]):
+        logits, aux = api.forward(cfg, params, batch, dist)
+        xent, ntok = softmax_xent(logits, batch["labels"])
+        loss = xent
+        if cfg.num_experts:
+            loss = loss + lb_coef * aux["lb_loss"]
+        if z_coef:
+            loss = loss + z_coef * aux["z_loss"]
+        metrics = {"loss": xent, "ntok": ntok.astype(jnp.float32),
+                   "lb_loss": aux["lb_loss"], "dropped": aux["dropped"]}
+        return loss, metrics
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# Step builder
+# ---------------------------------------------------------------------------
+
+
+def _split_microbatches(batch: Dict[str, jnp.ndarray], accum: int):
+    def resh(x):
+        b = x.shape[0]
+        assert b % accum == 0, f"batch {b} % accum {accum} != 0"
+        return x.reshape((accum, b // accum) + x.shape[1:])
+
+    return jax.tree.map(resh, batch)
+
+
+def make_train_step(
+    cfg: ModelConfig,
+    ocfg: optim_lib.OptimConfig,
+    dist: Optional[DistContext] = None,
+    *,
+    accum_steps: int = 1,
+    compression: Optional[CompressionConfig] = None,
+    lb_coef: float = 1e-2,
+) -> Callable:
+    """(state, batch) -> (state, metrics).  Pure function of its inputs —
+    jit it yourself (launch/dryrun.py and launch/train.py attach shardings)."""
+    loss_fn = make_loss_fn(cfg, lb_coef=lb_coef)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(state: TrainState, batch):
+        if accum_steps == 1:
+            (_, metrics), grads = grad_fn(state.params, batch, dist)
+        else:
+            micro = _split_microbatches(batch, accum_steps)
+            zero_g = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                  state.params)
+            zero_m = {"loss": 0.0, "ntok": 0.0, "lb_loss": 0.0, "dropped": 0.0}
+            zero_m = jax.tree.map(lambda x: jnp.asarray(x, jnp.float32), zero_m)
+
+            def body(carry, mb):
+                g_acc, m_acc = carry
+                (_, m), g = grad_fn(state.params, mb, dist)
+                g_acc = jax.tree.map(lambda a, b: a + b.astype(jnp.float32), g_acc, g)
+                m_acc = jax.tree.map(lambda a, b: a + b, m_acc, m)
+                return (g_acc, m_acc), None
+
+            (grads, metrics), _ = jax.lax.scan(body, (zero_g, zero_m), micro)
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+            metrics = jax.tree.map(lambda m: m / accum_steps, metrics)
+
+        comp_state = state.comp
+        if compression is not None and compression.kind != "none":
+            grads, comp_state = compressed_grads(compression, grads, comp_state)
+
+        params, opt, om = optim_lib.apply_updates(ocfg, state.params, grads, state.opt)
+        metrics = dict(metrics, **om)
+        return TrainState(params, opt, comp_state, state.step + 1), metrics
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# State init + shardings (shared by launch/train.py and launch/dryrun.py)
+# ---------------------------------------------------------------------------
+
+
+def init_state(cfg: ModelConfig, ocfg: optim_lib.OptimConfig,
+               mode: str = "init", seed: int = 0,
+               compression: Optional[CompressionConfig] = None):
+    """(state, factory). mode="shape" -> all-ShapeDtypeStruct state (dry-run)."""
+    f = ParamFactory(mode=mode, key=jax.random.PRNGKey(seed),
+                     dtype=cfg.jdtype)
+    params = get_model(cfg).init_params(cfg, f)
+    if mode == "shape":
+        opt = optim_lib.init_abstract(ocfg, params)
+        step = jax.ShapeDtypeStruct((), jnp.int32)
+    else:
+        opt = optim_lib.init(ocfg, params)
+        step = jnp.zeros((), jnp.int32)
+    comp = compress_state_init(compression, params, mode=mode)
+    return TrainState(params, opt, comp, step), f
+
+
+def state_shardings(state: TrainState, factory: ParamFactory, dist: DistContext):
+    """NamedShardings for a TrainState: params by their logical axes; Adam
+    moments and master copy inherit the param sharding (ZeRO); scalars are
+    replicated."""
+    p_sh = param_shardings(factory.specs, state.params, dist)
+    rep = NamedSharding(dist.mesh, P())
+
+    def like_params(tree):
+        return jax.tree.map(
+            lambda leaf, sh: sh if leaf.ndim > 0 else rep, tree, p_sh)
+
+    opt_sh = optim_lib.OptState(
+        mu=like_params(state.opt.mu),
+        nu=like_params(state.opt.nu),
+        master=like_params(state.opt.master),
+        count=rep,
+    )
+    comp_sh = jax.tree.map(
+        lambda leaf: rep, state.comp) if state.comp else state.comp
+    if state.comp:
+        # error-feedback buffers are param-shaped: inherit param sharding
+        try:
+            comp_sh = like_params(state.comp)
+        except ValueError:
+            pass
+    return TrainState(p_sh, opt_sh, comp_sh, rep)
+
+
+def batch_sharding_tree(batch, dist: DistContext):
+    return batch_shardings(batch, dist)

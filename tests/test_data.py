@@ -1,0 +1,74 @@
+"""Data pipeline: host walks, tokenization, deterministic loader."""
+
+import numpy as np
+import pytest
+
+from repro.core.pipeline import generate
+from repro.core.types import GraphConfig
+from repro.data import LoaderConfig, WalkLoader
+from repro.data.walks import host_walks, walks_to_tokens
+
+CFG = GraphConfig(scale=10, nb=1, capacity_factor=4.0)
+
+
+@pytest.fixture(scope="module")
+def graph():
+    return generate(CFG)
+
+
+def test_host_walks_follow_edges(graph):
+    from repro.core.csr import csr_to_host
+
+    offv, adjv = csr_to_host(graph.csr, CFG)
+    starts = np.asarray([0, 17, 555])
+    walks = host_walks(offv, adjv, starts, 20, seed=3, n=CFG.n)
+    assert walks.shape == (3, 21)
+    for w in walks:
+        for t in range(20):
+            u, v = w[t], w[t + 1]
+            neigh = adjv[offv[u]:offv[u + 1]]
+            if neigh.size:
+                assert v in neigh
+            else:
+                assert 0 <= v < CFG.n     # sink teleport
+
+
+def test_host_walks_deterministic(graph):
+    from repro.core.csr import csr_to_host
+
+    offv, adjv = csr_to_host(graph.csr, CFG)
+    s = np.asarray([5, 6])
+    a = host_walks(offv, adjv, s, 10, seed=1, n=CFG.n)
+    b = host_walks(offv, adjv, s, 10, seed=1, n=CFG.n)
+    np.testing.assert_array_equal(a, b)
+    c = host_walks(offv, adjv, s, 10, seed=2, n=CFG.n)
+    assert (a != c).any()
+
+
+def test_walks_to_tokens_shift():
+    walks = np.asarray([[10, 11, 12, 13]])
+    tokens, labels = walks_to_tokens(walks, vocab=8)
+    np.testing.assert_array_equal(tokens, [[2, 3, 4]])
+    np.testing.assert_array_equal(labels, [[3, 4, 5]])
+
+
+def test_loader_pure_function_of_step(graph):
+    ld = WalkLoader(CFG, graph.csr, LoaderConfig(batch_size=4, seq_len=16, vocab=64))
+    a = ld.batch(5)
+    b = ld.batch(5)
+    np.testing.assert_array_equal(np.asarray(a["tokens"]), np.asarray(b["tokens"]))
+    c = ld.batch(6)
+    assert (np.asarray(a["tokens"]) != np.asarray(c["tokens"])).any()
+    assert a["tokens"].shape == (4, 16)
+    assert int(a["tokens"].max()) < 64
+
+
+def test_loader_iterator(graph):
+    ld = WalkLoader(CFG, graph.csr, LoaderConfig(batch_size=2, seq_len=8, vocab=32))
+    it = iter(ld)
+    b0 = next(it)
+    b1 = next(it)
+    np.testing.assert_array_equal(np.asarray(b0["tokens"]),
+                                  np.asarray(ld.batch(0)["tokens"]))
+    np.testing.assert_array_equal(np.asarray(b1["tokens"]),
+                                  np.asarray(ld.batch(1)["tokens"]))

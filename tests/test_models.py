@@ -1,0 +1,137 @@
+"""Per-architecture smoke tests (reduced same-family configs, CPU) + serving
+consistency: prefill+decode must reproduce the train-path forward logits."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import SHAPES, arch_ids, get_config, get_smoke_config
+from repro.models.registry import get_model, init_all, input_specs
+
+SMALL = dataclasses.replace(SHAPES["train_4k"], seq_len=24, global_batch=2)
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_forward_shapes_and_finite(arch):
+    cfg = get_smoke_config(arch)
+    api = get_model(cfg)
+    params, _ = init_all(cfg)
+    batch = input_specs(cfg, SMALL, mode="init")
+    logits, aux = api.forward(cfg, params, batch)
+    assert logits.shape[0] == SMALL.global_batch
+    assert logits.shape[1] == SMALL.seq_len
+    assert logits.shape[2] == cfg.vocab_padded
+    assert np.isfinite(np.asarray(logits, np.float32)).all()
+    assert np.isfinite(float(aux["lb_loss"]))
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_prefill_decode_matches_forward(arch):
+    """Serving path correctness: running prefill(t[:-1]) then decode(t[-1])
+    must produce the same last-token logits as forward(t) — cache write
+    indices, RoPE offsets and masks all have to line up for this to hold."""
+    cfg = get_smoke_config(arch)
+    api = get_model(cfg)
+    params, _ = init_all(cfg)
+    B, S = 2, 24   # > llava's 16 image tokens so vlm text length stays positive
+    rng = np.random.default_rng(0)
+    batch = input_specs(cfg, dataclasses.replace(SMALL, seq_len=S), mode="init")
+    logits_full, _ = api.forward(cfg, params, batch)
+
+    cache = api.init_cache(cfg, B, 32)
+    pre = {k: (v[:, :-1] if k == "tokens" else v) for k, v in batch.items()
+           if k != "labels"}
+    _, cache = api.prefill(cfg, params, pre, cache)
+    last = batch["tokens"][:, -1:]
+    logits_dec, _ = api.decode_step(cfg, params, last, cache)
+
+    a = np.asarray(logits_full[:, -1], np.float32)
+    b = np.asarray(logits_dec[:, -1], np.float32)
+    np.testing.assert_allclose(a, b, atol=2e-2, rtol=2e-2)
+
+
+@pytest.mark.parametrize("arch", arch_ids())
+def test_full_config_matches_assignment(arch):
+    """The FULL configs must carry the exact published numbers."""
+    spec = {
+        "zamba2-2.7b": dict(num_layers=54, d_model=2560, num_heads=32,
+                            num_kv_heads=32, d_ff=10240, vocab_size=32000,
+                            ssm_state=64, family="hybrid"),
+        "minitron-8b": dict(num_layers=32, d_model=4096, num_heads=32,
+                            num_kv_heads=8, d_ff=16384, vocab_size=256000,
+                            family="dense"),
+        "qwen2.5-32b": dict(num_layers=64, d_model=5120, num_heads=40,
+                            num_kv_heads=8, d_ff=27648, vocab_size=152064,
+                            qkv_bias=True, family="dense"),
+        "codeqwen1.5-7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                               num_kv_heads=32, d_ff=13440, vocab_size=92416,
+                               family="dense"),
+        "internlm2-1.8b": dict(num_layers=24, d_model=2048, num_heads=16,
+                               num_kv_heads=8, d_ff=8192, vocab_size=92544,
+                               family="dense"),
+        "qwen3-moe-235b-a22b": dict(num_layers=94, d_model=4096, num_heads=64,
+                                    num_kv_heads=4, moe_d_ff=1536,
+                                    vocab_size=151936, num_experts=128,
+                                    experts_per_tok=8, family="moe"),
+        "deepseek-v2-lite-16b": dict(num_layers=27, d_model=2048, num_heads=16,
+                                     num_kv_heads=16, moe_d_ff=1408,
+                                     vocab_size=102400, num_experts=64,
+                                     experts_per_tok=6, kv_lora_rank=512,
+                                     num_shared_experts=2, family="moe"),
+        "seamless-m4t-large-v2": dict(num_layers=24, d_model=1024, num_heads=16,
+                                      num_kv_heads=16, d_ff=8192,
+                                      vocab_size=256206, family="encdec"),
+        "llava-next-mistral-7b": dict(num_layers=32, d_model=4096, num_heads=32,
+                                      num_kv_heads=8, d_ff=14336,
+                                      vocab_size=32000, family="vlm"),
+        "mamba2-780m": dict(num_layers=48, d_model=1536, d_ff=0,
+                            vocab_size=50280, ssm_state=128, family="ssm"),
+    }[arch]
+    cfg = get_config(arch)
+    for k, v in spec.items():
+        assert getattr(cfg, k) == v, (arch, k, getattr(cfg, k), v)
+
+
+def test_smoke_configs_are_reduced():
+    for arch in arch_ids():
+        full, smoke = get_config(arch), get_smoke_config(arch)
+        assert smoke.family == full.family
+        assert smoke.num_layers < full.num_layers
+        assert smoke.d_model < full.d_model
+        assert smoke.vocab_size < full.vocab_size
+
+
+def test_moe_dense_vs_smoke_balance():
+    """MoE smoke: router aux losses behave (lb_loss near 1 for uniform-ish)."""
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    api = get_model(cfg)
+    params, _ = init_all(cfg)
+    batch = input_specs(cfg, SMALL, mode="init")
+    _, aux = api.forward(cfg, params, batch)
+    assert 0.5 < float(aux["lb_loss"]) / cfg.num_layers < 4.0
+
+
+def test_mamba2_decode_state_is_o1():
+    """SSM cache size must not depend on max_len."""
+    cfg = get_smoke_config("mamba2-780m")
+    api = get_model(cfg)
+    c1 = api.init_cache(cfg, 2, 64, mode="shape")
+    c2 = api.init_cache(cfg, 2, 4096, mode="shape")
+    s1 = sum(np.prod(l.shape) for l in jax.tree.leaves(c1))
+    s2 = sum(np.prod(l.shape) for l in jax.tree.leaves(c2))
+    assert s1 == s2
+
+
+def test_vocab_padding_masked():
+    """Padded logit columns must be -inf-like so they never win sampling."""
+    cfg = get_smoke_config("seamless-m4t-large-v2").with_(vocab_size=250)
+    assert cfg.vocab_padded == 256
+    api = get_model(cfg)
+    params, _ = init_all(cfg)
+    batch = input_specs(cfg, dataclasses.replace(SMALL, seq_len=8), mode="init")
+    logits, _ = api.forward(cfg, params, batch)
+    pad_cols = np.asarray(logits[..., 250:], np.float32)
+    assert (pad_cols <= -1e8).all()
