@@ -1,0 +1,72 @@
+"""The external shuffle (paper Alg. 2-4 on disk) vs the device-spill path.
+
+Three measurements:
+
+  memory   MemoryGauge peak resident rows across scales at fixed chunk_edges
+           — the paper's claim: the external shuffle's working set does NOT
+           grow with n, while the device-spill path holds pv once (the
+           §IV-A "artificial limitation on the shuffle").
+  io       per-phase I/O-ledger deltas for the external variant: the shuffle
+           must be purely sequential (rand_reads == rand_writes == 0).
+  workers  wall time of the multi-process partitioned mode vs the
+           single-process streaming driver at the same config (the
+           single-host stand-in for the paper's strong scaling, Fig. 3).
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+from repro.core.external import StreamingGenerator
+from repro.core.phases import PartitionedGenerator
+from repro.core.types import GraphConfig
+
+from .common import print_table, save_json
+
+
+def run(scales=(10, 12, 14), chunk=1 << 10, nb=4, worker_counts=(0, 2, 4)):
+    mem_rows = []
+    for s in scales:
+        row = {"scale": s, "n": 1 << s}
+        for variant in ("device", "external"):
+            cfg = GraphConfig(scale=s, nb=nb, chunk_edges=chunk,
+                              shuffle_variant=variant, edge_factor=4)
+            with tempfile.TemporaryDirectory() as d:
+                gen = StreamingGenerator(cfg, d)
+                gen.orchestrator.run_phase("shuffle", gen.permutation)
+                row[f"peak_{variant}"] = gen.gauge.peak_rows
+        mem_rows.append(row)
+    print_table("shuffle peak resident rows (fixed chunk_edges=%d)" % chunk,
+                mem_rows, ["scale", "n", "peak_device", "peak_external"])
+
+    cfg = GraphConfig(scale=scales[-1], nb=nb, chunk_edges=chunk,
+                      shuffle_variant="external", edge_factor=4)
+    with tempfile.TemporaryDirectory() as d:
+        gen = StreamingGenerator(cfg, d)
+        gen.run()
+        io_rows = gen.orchestrator.report()
+    print_table("external variant, per-phase ledger deltas",
+                io_rows, ["phase", "seconds", "seq_reads", "seq_writes",
+                          "rand_reads", "rand_writes"])
+
+    worker_rows = []
+    wcfg = GraphConfig(scale=scales[0], nb=nb, chunk_edges=chunk,
+                       shuffle_variant="external", edge_factor=4)
+    for w in worker_counts:
+        with tempfile.TemporaryDirectory() as d:
+            t0 = time.perf_counter()
+            with PartitionedGenerator(wcfg, d, max_workers=w) as part:
+                part.run()
+            worker_rows.append({"workers": w or "in-proc",
+                                "seconds": time.perf_counter() - t0})
+    print_table("partitioned mode wall time (scale=%d, nb=%d)" % (scales[0], nb),
+                worker_rows, ["workers", "seconds"])
+
+    save_json("external_shuffle",
+              {"memory": mem_rows, "per_phase_io": io_rows, "workers": worker_rows})
+    return mem_rows, io_rows, worker_rows
+
+
+if __name__ == "__main__":
+    run()

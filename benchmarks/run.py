@@ -7,6 +7,8 @@ One module per paper table/figure (DESIGN.md §6):
   bench_weak_scaling    Fig. 5   size and shards grow together
   bench_hash_vs_sort    §I       hashing vs chunk-sort microbench
   bench_csr_variants    Fig. 2 CSR + §III-B7  scatter vs sorted (+ I/O ledger)
+  bench_external_shuffle §IV-A  external vs device-spill shuffle: peak RSS,
+                        per-phase ledger, partitioned-mode wall time
   bench_lm              substrate sanity: train/serve throughput
   bench_roofline        deliverable (g): render the dry-run roofline table
 """
@@ -26,8 +28,9 @@ def main():
                     help="smaller scales (CI mode)")
     args = ap.parse_args()
 
-    from . import (bench_csr_variants, bench_hash_vs_sort, bench_lm,
-                   bench_roofline, bench_single_node, bench_strong_scaling,
+    from . import (bench_csr_variants, bench_external_shuffle,
+                   bench_hash_vs_sort, bench_lm, bench_roofline,
+                   bench_single_node, bench_strong_scaling,
                    bench_weak_scaling)
 
     benches = {
@@ -42,6 +45,9 @@ def main():
             log_n=20 if args.fast else 22),
         "csr_variants": lambda: bench_csr_variants.run(
             scales=(10, 12) if args.fast else (10, 12, 14)),
+        "external_shuffle": lambda: bench_external_shuffle.run(
+            scales=(10, 12) if args.fast else (10, 12, 14),
+            worker_counts=(0, 2) if args.fast else (0, 2, 4)),
         "lm": bench_lm.run,
         "roofline": bench_roofline.run,
     }

@@ -56,6 +56,20 @@ def main():
         assert ledger.rand_reads == 0 and ledger.rand_writes == 0, \
             "sorted path must be sequential-only"
 
+    # fully external run: pv itself lives in disk bucket files (Alg. 2-4 on
+    # disk); peak resident rows stay O(chunk_edges) regardless of scale
+    xcfg = ext_cfg.with_(shuffle_variant="external")
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.time()
+        gen = StreamingGenerator(xcfg, d)
+        gen.run()
+        print(f"[external shuffle] {time.time() - t0:.2f}s; peak resident "
+              f"rows {gen.gauge.peak_rows} (n = {xcfg.n}); per-phase:")
+        for rec in gen.orchestrator.report():
+            print(f"    {rec['phase']:>14s}: {rec['seconds']:7.2f}s  "
+                  f"seq r/w {rec['seq_reads']}/{rec['seq_writes']}  "
+                  f"rand r/w {rec['rand_reads']}/{rec['rand_writes']}")
+
 
 if __name__ == "__main__":
     main()

@@ -4,6 +4,13 @@ collectives + chunk-streamed host storage."""
 
 from .types import GraphConfig, owner_of, quadrant_thresholds  # noqa: F401
 from .rmat import rmat_edge_block, mix32, counter_uniform_u32  # noqa: F401
+from .blockstore import (  # noqa: F401
+    BlockStore, IOLedger, MemoryGauge, MonotoneLookup,
+    merge_runs, partition_runs, sort_runs,
+)
+from .phases import PhaseOrchestrator, PartitionedGenerator, plain_config  # noqa: F401
+from .external import StreamingGenerator, RunStore, external_merge, external_sort_runs  # noqa: F401
+from .hostgen import mix32_np, rmat_edges_np, rmat_edges_np_cfg  # noqa: F401
 from .shuffle import distributed_shuffle, shuffle_argsort, pv_is_permutation  # noqa: F401
 from .relabel import relabel_ring, relabel_alltoall  # noqa: F401
 from .redistribute import redistribute, redistribute_sorted, OwnedEdges  # noqa: F401

@@ -1,0 +1,451 @@
+"""BlockStore — the storage layer of the disk tier (paper §III-A's external
+edgelist ADT, generalized).
+
+Every phase of the out-of-core pipeline (external.py) used to hand-roll its
+own run management; this module centralizes the four primitives they all
+reduce to, each with *bounded* main memory and ledger-accounted I/O:
+
+  BlockStore           a directory of immutable, typed, multi-column runs
+                       (append / stream / manifest / destroy).  A "run" is
+                       one .npy file of shape [rows, ncols]; rows per run are
+                       capped by the writer (cfg.chunk_edges), which is what
+                       bounds memory everywhere downstream.
+  sort_runs            pass 1 of external merge sort: sort each run in RAM
+                       (<= chunk rows at a time), rewrite (paper Alg. 7 l.1-5).
+  merge_runs           pass 2: streaming k-way merge over *block-buffered*
+                       cursors — resident memory is num_runs x merge block,
+                       never a whole store (the paper's bounded-buffer merge).
+  partition_runs       bounded-memory bucket partition: stream runs, stable
+                       sort each chunk by destination bucket, append slices
+                       to per-bucket stores (paper Alg. 8's "append to elp_d,
+                       ship when full" — the bucket exchange used by both the
+                       external shuffle and redistribute).
+
+IOLedger counts block-granular sequential vs random transfers (the paper's
+cost unit, C_e edges per block); MemoryGauge records the largest buffer the
+disk tier ever materializes, so tests can *assert* the bounded-memory claim
+instead of trusting it.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import heapq
+import json
+import os
+import shutil
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+KeySpec = Union[int, Callable[..., np.ndarray]]
+
+
+def clean_store(workdir: str, name: str) -> None:
+    """Remove a store directory (pre-barrier cleanup of multi-writer
+    exchange stores; see BlockStore `fresh`)."""
+    shutil.rmtree(os.path.join(workdir, name), ignore_errors=True)
+
+
+@dataclasses.dataclass
+class IOLedger:
+    """Counts block-granular I/O, the paper's unit of cost (C_e edges/block)."""
+
+    seq_reads: int = 0
+    seq_writes: int = 0
+    rand_reads: int = 0
+    rand_writes: int = 0
+    bytes_read: int = 0
+    bytes_written: int = 0
+
+    def read(self, nbytes: int, sequential: bool = True):
+        self.bytes_read += nbytes
+        if sequential:
+            self.seq_reads += 1
+        else:
+            self.rand_reads += 1
+
+    def write(self, nbytes: int, sequential: bool = True):
+        self.bytes_written += nbytes
+        if sequential:
+            self.seq_writes += 1
+        else:
+            self.rand_writes += 1
+
+    def as_dict(self) -> Dict[str, int]:
+        return dataclasses.asdict(self)
+
+    def snapshot(self) -> Dict[str, int]:
+        return self.as_dict()
+
+    def delta_since(self, snap: Dict[str, int]) -> Dict[str, int]:
+        """Per-phase accounting: ledger counters accumulated since `snap`."""
+        return {k: v - snap.get(k, 0) for k, v in self.as_dict().items()}
+
+
+@dataclasses.dataclass
+class MemoryGauge:
+    """High-water mark of rows materialized in RAM by the disk tier.
+
+    Every point where store code turns disk bytes into a resident ndarray
+    reports its row count here; `peak_rows` is the largest single working set
+    observed.  Tests cap `chunk_edges` far below n and assert
+    peak_rows = O(chunk_edges) — the measurable form of the paper's "main
+    memory usage is independent of graph size".
+    """
+
+    peak_rows: int = 0
+
+    def track(self, rows: int) -> None:
+        if rows > self.peak_rows:
+            self.peak_rows = int(rows)
+
+
+class BlockStore:
+    """A directory of immutable typed runs of column-oriented records.
+
+    Append-only (the paper's edgelist ADT never deletes individual records);
+    each run is one .npy of shape [rows, ncols].  Reading a run charges the
+    ledger; writers bound run size, so every read is a bounded buffer.
+    """
+
+    def __init__(
+        self,
+        workdir: str,
+        name: str,
+        ledger: IOLedger,
+        columns: Sequence[str] = ("src", "dst"),
+        dtype=np.int64,
+        gauge: Optional[MemoryGauge] = None,
+        fresh: bool = False,
+    ):
+        # `fresh=True` wipes leftovers from a previous (crashed/invalidated)
+        # run — required for single-writer stores because attach() recovers
+        # runs from the filesystem and stale files would be indistinguishable
+        # from real ones.  Multi-writer exchange stores must NOT use it (the
+        # writers would wipe each other); their driver calls clean_store()
+        # once before the barrier instead.
+        self.dir = os.path.join(workdir, name)
+        if fresh:
+            shutil.rmtree(self.dir, ignore_errors=True)
+        os.makedirs(self.dir, exist_ok=True)
+        self.name = name
+        self.columns = tuple(columns)
+        self.dtype = np.dtype(dtype)
+        self.ledger = ledger
+        self.gauge = gauge if gauge is not None else MemoryGauge()
+        self._runs: List[str] = []
+        self._rows: List[int] = []
+
+    # -- write side ---------------------------------------------------------
+    def append_run(self, *cols: np.ndarray, tag: Optional[str] = None) -> int:
+        """Append one immutable run.  `tag` overrides the default sequence
+        name — the multi-process mode uses `{sender}_{seq}` tags so that
+        runs written concurrently by different workers never collide and
+        `attach()` recovers them in sender order (lexicographic)."""
+        assert len(cols) == len(self.columns), (len(cols), self.columns)
+        arr = np.stack([np.asarray(c, self.dtype) for c in cols], axis=1)
+        name = tag if tag is not None else f"{len(self._runs):06d}"
+        path = os.path.join(self.dir, f"run_{name}.npy")
+        np.save(path, arr)
+        self.ledger.write(arr.nbytes)
+        self.gauge.track(arr.shape[0])
+        self._runs.append(path)
+        self._rows.append(int(arr.shape[0]))
+        return len(self._runs) - 1
+
+    @classmethod
+    def attach(
+        cls,
+        workdir: str,
+        name: str,
+        ledger: IOLedger,
+        columns: Sequence[str] = ("src", "dst"),
+        dtype=np.int64,
+        gauge: Optional[MemoryGauge] = None,
+    ) -> "BlockStore":
+        """Open a store directory written by another process: run files are
+        recovered in lexicographic (== append/tag) order.  The filesystem IS
+        the manifest — this is the barrier-free handoff the partitioned mode
+        uses between phases."""
+        store = cls(workdir, name, ledger, columns=columns, dtype=dtype, gauge=gauge)
+        names = sorted(f for f in os.listdir(store.dir) if f.startswith("run_") and f.endswith(".npy"))
+        store._runs = [os.path.join(store.dir, f) for f in names]
+        store._rows = [int(np.load(p, mmap_mode="r").shape[0]) for p in store._runs]
+        return store
+
+    # -- read side ------------------------------------------------------------
+    @property
+    def ncols(self) -> int:
+        return len(self.columns)
+
+    @property
+    def num_runs(self) -> int:
+        return len(self._runs)
+
+    def run_rows(self, i: int) -> int:
+        return self._rows[i]
+
+    def total_rows(self) -> int:
+        return sum(self._rows)
+
+    def read_run(self, i: int, sequential: bool = True) -> Tuple[np.ndarray, ...]:
+        arr = np.load(self._runs[i], mmap_mode=None)
+        self.ledger.read(arr.nbytes, sequential)
+        self.gauge.track(arr.shape[0])
+        return tuple(arr[:, c] for c in range(arr.shape[1]))
+
+    def open_run(self, i: int) -> np.ndarray:
+        """Memmap a run WITHOUT charging the ledger — callers that stream
+        blocks out of it charge per block (merge_runs)."""
+        return np.load(self._runs[i], mmap_mode="r")
+
+    def iter_runs(self) -> Iterator[Tuple[np.ndarray, ...]]:
+        for i in range(self.num_runs):
+            yield self.read_run(i)
+
+    def iter_blocks(self, block_rows: int) -> Iterator[Tuple[np.ndarray, ...]]:
+        """Stream the whole store in buffers of <= block_rows (run order)."""
+        for i in range(self.num_runs):
+            mm = self.open_run(i)
+            for lo in range(0, mm.shape[0], block_rows):
+                blk = np.asarray(mm[lo : lo + block_rows])
+                self.ledger.read(blk.nbytes)
+                self.gauge.track(blk.shape[0])
+                yield tuple(blk[:, c] for c in range(blk.shape[1]))
+
+    # -- lifecycle --------------------------------------------------------------
+    def destroy(self):
+        shutil.rmtree(self.dir, ignore_errors=True)
+        self._runs, self._rows = [], []
+
+    # -- checkpoint manifests ----------------------------------------------------
+    def manifest(self) -> Dict:
+        """Workdir-relative description of this store (no absolute paths, so
+        a checkpointed workdir can be moved/re-mounted and still resume)."""
+        return {
+            "name": self.name,
+            "columns": list(self.columns),
+            "dtype": self.dtype.str,
+            "runs": [os.path.basename(p) for p in self._runs],
+            "rows": list(self._rows),
+        }
+
+    @classmethod
+    def from_manifest(
+        cls, m: Dict, workdir: str, ledger: IOLedger,
+        gauge: Optional[MemoryGauge] = None,
+    ) -> "BlockStore":
+        store = cls.__new__(cls)
+        BlockStore.__init__(
+            store,
+            workdir,
+            m["name"],
+            ledger,
+            columns=m["columns"],
+            dtype=np.dtype(m["dtype"]),
+            gauge=gauge,
+        )
+        store._runs = [os.path.join(store.dir, r) for r in m["runs"]]
+        store._rows = list(m["rows"])
+        return store
+
+    def save_manifest(self, path: str):
+        with open(path, "w") as f:
+            json.dump(self.manifest(), f)
+
+
+def _keys_of(key: KeySpec, cols: Tuple[np.ndarray, ...]) -> np.ndarray:
+    """Resolve a key spec: column index, or callable over the columns.
+
+    Callable keys are *recomputed* from record values instead of stored —
+    that is what lets the external shuffle sort by hash(value, salt) without
+    a key column on disk (the paper's counter-based determinism, applied to
+    the sort key itself)."""
+    if callable(key):
+        return np.asarray(key(*cols))
+    return np.asarray(cols[key])
+
+
+def sort_runs(store: BlockStore, out: BlockStore, key: KeySpec = 0) -> BlockStore:
+    """External-sort pass 1: each run sorted in RAM by `key`, rewritten.
+
+    Runs are writer-bounded (<= chunk rows), so resident memory is one run.
+    """
+    for i in range(store.num_runs):
+        cols = store.read_run(i)
+        order = np.argsort(_keys_of(key, cols), kind="stable")
+        out.append_run(*(c[order] for c in cols))
+    return out
+
+
+class _MergeCursor:
+    """Block-buffered read cursor over one sorted run (merge_runs helper)."""
+
+    __slots__ = ("mm", "rows", "pos", "block_keys", "block_cols", "bstart", "store", "key", "block_rows")
+
+    def __init__(self, store: BlockStore, run: int, key: KeySpec, block_rows: int):
+        self.store = store
+        self.key = key
+        self.block_rows = block_rows
+        self.mm = store.open_run(run)
+        self.rows = self.mm.shape[0]
+        self.pos = 0
+        self.bstart = 0
+        self.block_keys: Optional[np.ndarray] = None
+        self.block_cols: Optional[Tuple[np.ndarray, ...]] = None
+        if self.rows:
+            self._load(0)
+
+    def _load(self, at: int):
+        blk = np.asarray(self.mm[at : at + self.block_rows])
+        self.store.ledger.read(blk.nbytes)
+        self.block_cols = tuple(blk[:, c] for c in range(blk.shape[1]))
+        self.block_keys = _keys_of(self.key, self.block_cols)
+        self.bstart = at
+
+    def head_key(self) -> int:
+        rel = self.pos - self.bstart
+        if rel >= self.block_keys.shape[0]:
+            self._load(self.pos)
+            rel = 0
+        return int(self.block_keys[rel])
+
+    def take_below(self, bound: int) -> Optional[Tuple[np.ndarray, ...]]:
+        """Pop the maximal prefix of the current block with key <= bound.
+        Returns None when the block head already exceeds bound."""
+        rel = self.pos - self.bstart
+        if rel >= self.block_keys.shape[0]:
+            self._load(self.pos)
+            rel = 0
+        end = int(np.searchsorted(self.block_keys[rel:], bound, side="right")) + rel
+        if end == rel:
+            return None
+        out = tuple(c[rel:end] for c in self.block_cols)
+        self.pos = self.bstart + end
+        return out
+
+    @property
+    def exhausted(self) -> bool:
+        return self.pos >= self.rows
+
+
+def merge_runs(
+    store: BlockStore, key: KeySpec = 0, block_rows: int = 0
+) -> Iterator[Tuple[np.ndarray, ...]]:
+    """External-sort pass 2: streaming k-way merge of sorted runs.
+
+    Resident memory: num_runs x block_rows rows (cursor buffers) + one output
+    block — never the whole store.  block_rows defaults to an even split of
+    the largest run across cursors, so total buffer memory stays around one
+    run regardless of fan-in.  Yields tuples of column arrays in globally
+    sorted order.
+    """
+    nruns = store.num_runs
+    if nruns == 0:
+        return
+    max_run = max(store.run_rows(i) for i in range(nruns))
+    if block_rows <= 0:
+        # Split one run's worth of memory across the cursors, so total buffer
+        # memory stays ~one chunk at ANY fan-in (k cursors x max_run/k rows).
+        block_rows = max(1, max_run // nruns)
+    cursors = [_MergeCursor(store, i, key, block_rows) for i in range(nruns)]
+    store.gauge.track(block_rows * nruns)
+    heap = [(c.head_key(), i) for i, c in enumerate(cursors) if c.rows]
+    heapq.heapify(heap)
+    out_parts: List[Tuple[np.ndarray, ...]] = []
+    out_rows = 0
+    flush_rows = max(block_rows, max_run)
+    while heap:
+        _, ci = heapq.heappop(heap)
+        cur = cursors[ci]
+        bound = heap[0][0] if heap else np.iinfo(np.int64).max
+        while True:
+            part = cur.take_below(bound)
+            if part is None:
+                break
+            out_parts.append(part)
+            out_rows += part[0].shape[0]
+            if cur.exhausted:
+                break
+        if not cur.exhausted:
+            heapq.heappush(heap, (cur.head_key(), ci))
+        if out_rows >= flush_rows:
+            yield tuple(np.concatenate([p[c] for p in out_parts]) for c in range(store.ncols))
+            out_parts, out_rows = [], 0
+    if out_parts:
+        yield tuple(np.concatenate([p[c] for p in out_parts]) for c in range(store.ncols))
+
+
+def partition_runs(
+    store: BlockStore,
+    outs: Sequence[BlockStore],
+    part_of: Callable[..., np.ndarray],
+    tag_prefix: Optional[str] = None,
+) -> Sequence[BlockStore]:
+    """Bounded-memory bucket partition (paper Alg. 8's bucket exchange).
+
+    Streams `store` one run at a time; each run is stable-sorted by its
+    destination bucket and the per-bucket slices appended to `outs[d]` —
+    all access sequential, resident memory one run.  `tag_prefix` names the
+    written runs `{tag_prefix}_{seq}` so concurrent senders into a shared
+    destination store never collide (multi-process mode).
+    """
+    nparts = len(outs)
+    seq = [0] * nparts
+    for cols in store.iter_runs():
+        dest = np.asarray(part_of(*cols))
+        order = np.argsort(dest, kind="stable")
+        cols = tuple(c[order] for c in cols)
+        dest = dest[order]
+        starts = np.searchsorted(dest, np.arange(nparts))
+        ends = np.searchsorted(dest, np.arange(nparts), side="right")
+        for d in range(nparts):
+            if ends[d] > starts[d]:
+                tag = None if tag_prefix is None else f"{tag_prefix}_{seq[d]:05d}"
+                outs[d].append_run(*(c[starts[d] : ends[d]] for c in cols), tag=tag)
+                seq[d] += 1
+    return outs
+
+
+class MonotoneLookup:
+    """Streaming table lookup for sort-merge-joins: `lookup(keys)` returns
+    table[keys - base] for a globally NONDECREASING key stream, reading the
+    table (a sequence of single-column stores laid out back to back) strictly
+    forward, one bounded block at a time.
+
+    This is the paper's Alg. 6-7 join half: both the probe stream (sorted
+    edges) and the build stream (pv blocks) advance monotonically, so the
+    join is two synchronized sequential scans — no random I/O, resident
+    memory one block.
+    """
+
+    def __init__(self, stores: Sequence[BlockStore], block_rows: int, base: int = 0):
+        def blocks():
+            for s in stores:
+                for (vals,) in s.iter_blocks(block_rows):
+                    yield vals
+
+        self._blocks = blocks()
+        self._g0 = base
+        self._vals = np.zeros(0, np.int64)
+
+    def lookup(self, keys: np.ndarray) -> np.ndarray:
+        out = np.empty(keys.shape[0], np.int64)
+        i = 0
+        while i < keys.shape[0]:
+            g1 = self._g0 + self._vals.shape[0]
+            if keys[i] >= g1:
+                try:
+                    nxt = next(self._blocks)
+                except StopIteration:
+                    raise IndexError(
+                        f"key {int(keys[i])} beyond end of lookup table at {g1}"
+                    ) from None
+                self._g0 = g1
+                self._vals = nxt
+                continue
+            hi = int(np.searchsorted(keys, g1, side="left"))
+            out[i:hi] = self._vals[keys[i:hi] - self._g0]
+            i = hi
+        return out

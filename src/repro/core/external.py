@@ -1,226 +1,230 @@
 """Out-of-core (external memory) generation path — the paper's SSD tier.
 
 The device pipeline (pipeline.py) is the TPU adaptation; this module is the
-*literal* external-memory system: edge blocks live on disk (numpy memmap
-files), main-memory usage is bounded by `chunk_edges` + one pv chunk, and
-every phase is implemented as sequential scans over sorted runs — the
-paper's Alg. 5-11 on a single host, with an I/O ledger that counts
-sequential vs random block transfers so benchmarks can *measure* the claims
-the paper makes about I/O complexity:
+*literal* external-memory system, rebuilt as three layers:
 
+  storage        core/blockstore.py — BlockStore (typed multi-column runs),
+                 external sort (sort_runs + merge_runs over block-buffered
+                 cursors), bounded bucket partitioning (partition_runs), and
+                 the MonotoneLookup sort-merge-join cursor.  Every byte moved
+                 is charged to an IOLedger (sequential vs random, the
+                 paper's cost unit); every buffer materialized is reported
+                 to a MemoryGauge so tests can *assert* bounded memory.
+  phases         core/phases.py — bucket-level phase kernels addressed by
+                 store naming convention, the PhaseOrchestrator (named,
+                 resumable phases with per-phase ledger deltas), and the
+                 multi-process PartitionedGenerator.
+  driver         StreamingGenerator (this file) — runs the five phases in
+                 one process through the orchestrator.
+
+Phase algebra and I/O complexity (paper Alg. 2-11, §III-B):
+
+  shuffle       "device": pv via the on-device shuffle, spilled to bucket
+                files — fast, but holds pv in RAM: the §IV-A "artificial
+                limitation on the shuffle" the paper calls out.
+                "external": paper Alg. 2-4 ON DISK — pv is built as nb
+                bucket files via log_nb(n) rounds of {external sort by
+                counter-hash key, positional slice exchange}.  Peak RSS is
+                O(chunk_edges) at ANY scale, all I/O sequential.
   generate      O(b*f / C_e) sequential writes          (Alg. 5)
-  relabel       O(2*b*f*S(int) / C_e) sequential        (Alg. 6-7, sort-merge-join)
+  relabel       O(2*b*f*S(int) / C_e) sequential        (Alg. 6-7): edges
+                external-sorted by the key field, pv *runs* streamed past
+                them (MonotoneLookup) — a sort-merge-join against bucket
+                files, never a memmapped monolith.
   redistribute  O(B*f / C_e) sequential                 (Alg. 8-9)
   csr_scatter   O(b) RANDOM                             (Alg. 10-11 — the Fig. 2 blowup)
   csr_sorted    O(B / C_e) sequential                   (§III-B7 — the predicted fix)
 
-The ledger is the host-side "profile" for the §Perf iteration on the
-generation workload.
+`StreamingGenerator(cfg, dir).run()` returns (pv memmap, per-bucket CSR,
+ledger); `gen.orchestrator.report()` gives the per-phase ledger deltas that
+benchmarks/bench_csr_variants.py and bench_external_shuffle.py print.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import heapq
 import os
-import shutil
-from typing import Dict, Iterator, List, Optional, Tuple
+from typing import Iterator, List, Optional, Tuple
 
 import numpy as np
 
+from .blockstore import (  # noqa: F401  (IOLedger re-exported for compat)
+    BlockStore,
+    IOLedger,
+    MemoryGauge,
+    MonotoneLookup,
+    merge_runs,
+    partition_runs,
+    sort_runs,
+)
+from .hostgen import rmat_edges_np_cfg
+from .phases import (
+    PhaseOrchestrator,
+    attach_pv_buckets,
+    csr_bucket_sorted,
+    drive_shuffle,
+    plain_config,
+    pv_store_name,
+    validate_external_shape,
+)
 from .types import GraphConfig
 
 
-@dataclasses.dataclass
-class IOLedger:
-    """Counts block-granular I/O, the paper's unit of cost (C_e edges/block)."""
+class RunStore(BlockStore):
+    """(src, dst) pair store — the original external edgelist ADT, now a
+    two-column BlockStore (kept as a named type for call-site readability)."""
 
-    seq_reads: int = 0
-    seq_writes: int = 0
-    rand_reads: int = 0
-    rand_writes: int = 0
-    bytes_read: int = 0
-    bytes_written: int = 0
-
-    def read(self, nbytes: int, sequential: bool = True):
-        self.bytes_read += nbytes
-        if sequential:
-            self.seq_reads += 1
-        else:
-            self.rand_reads += 1
-
-    def write(self, nbytes: int, sequential: bool = True):
-        self.bytes_written += nbytes
-        if sequential:
-            self.seq_writes += 1
-        else:
-            self.rand_writes += 1
-
-    def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
-
-
-class RunStore:
-    """A directory of fixed-capacity sorted/unsorted runs of (src, dst) pairs.
-
-    The paper's external edgelist ADT: append, iterate blocks, never delete
-    individual records (§III-A).  Each run is one .npy file of shape [k, 2].
-    """
-
-    def __init__(self, workdir: str, name: str, ledger: IOLedger):
-        self.dir = os.path.join(workdir, name)
-        os.makedirs(self.dir, exist_ok=True)
-        self.ledger = ledger
-        self._runs: List[str] = []
-
-    def append_run(self, src: np.ndarray, dst: np.ndarray):
-        arr = np.stack([src, dst], axis=1)
-        path = os.path.join(self.dir, f"run_{len(self._runs):06d}.npy")
-        np.save(path, arr)
-        self.ledger.write(arr.nbytes)
-        self._runs.append(path)
-
-    @property
-    def num_runs(self) -> int:
-        return len(self._runs)
-
-    def read_run(self, i: int, sequential: bool = True) -> Tuple[np.ndarray, np.ndarray]:
-        arr = np.load(self._runs[i], mmap_mode=None)
-        self.ledger.read(arr.nbytes, sequential)
-        return arr[:, 0], arr[:, 1]
-
-    def iter_runs(self) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
-        for i in range(self.num_runs):
-            yield self.read_run(i)
+    def __init__(self, workdir: str, name: str, ledger: IOLedger,
+                 gauge: Optional[MemoryGauge] = None, fresh: bool = False):
+        super().__init__(workdir, name, ledger, columns=("src", "dst"), gauge=gauge,
+                         fresh=fresh)
 
     def total_edges(self) -> int:
-        return sum(np.load(p, mmap_mode="r").shape[0] for p in self._runs)
-
-    def destroy(self):
-        shutil.rmtree(self.dir, ignore_errors=True)
+        return self.total_rows()
 
 
-def external_sort_runs(store: RunStore, out: RunStore, key_col: int = 0, chunk: Optional[int] = None):
-    """Phase 1 of external merge sort: sort each run in memory, rewrite.
-
-    (The paper's Alg. 7 lines 1-5: read chunk, sort, write back.)
-    """
-    for i in range(store.num_runs):
-        s, d = store.read_run(i)
-        key = s if key_col == 0 else d
-        order = np.argsort(key, kind="stable")
-        out.append_run(s[order], d[order])
+def external_sort_runs(store: BlockStore, out: BlockStore, key_col: int = 0,
+                       chunk: Optional[int] = None) -> BlockStore:
+    """Phase 1 of external merge sort (paper Alg. 7 lines 1-5): sort each
+    writer-bounded run in memory, rewrite.  Thin wrapper over
+    blockstore.sort_runs, kept under its historical name."""
+    return sort_runs(store, out, key=key_col)
 
 
-def external_merge(store: RunStore, key_col: int = 0) -> Iterator[Tuple[np.ndarray, np.ndarray]]:
-    """Phase 2: streaming k-way merge of sorted runs via a heap of cursors.
-
-    Yields merged blocks of ~one run's size.  Memory: one block per run head
-    — the paper's bounded-buffer merge (fig. 1).
-    """
-    heads = []
-    runs = []
-    for i in range(store.num_runs):
-        s, d = store.read_run(i)
-        runs.append((s, d))
-        if s.size:
-            key = s if key_col == 0 else d
-            heapq.heappush(heads, (int(key[0]), i, 0))
-    out_s, out_d = [], []
-    block = max(1, runs[0][0].size if runs else 1)
-    while heads:
-        _, ri, pos = heapq.heappop(heads)
-        s, d = runs[ri]
-        # emit the maximal prefix of run ri that stays below the next head
-        nxt = heads[0][0] if heads else np.iinfo(np.int64).max
-        key = s if key_col == 0 else d
-        end = int(np.searchsorted(key[pos:], nxt, side="right")) + pos
-        out_s.append(s[pos:end])
-        out_d.append(d[pos:end])
-        if end < s.size:
-            heapq.heappush(heads, (int(key[end]), ri, end))
-        emitted = sum(x.size for x in out_s)
-        if emitted >= block:
-            yield np.concatenate(out_s), np.concatenate(out_d)
-            out_s, out_d = [], []
-    if out_s:
-        yield np.concatenate(out_s), np.concatenate(out_d)
+def external_merge(store: BlockStore, key_col: int = 0,
+                   block_rows: int = 0) -> Iterator[Tuple[np.ndarray, ...]]:
+    """Phase 2: streaming k-way merge of sorted runs (paper's bounded-buffer
+    merge, fig. 1).  Resident memory is one chunk split across the run
+    cursors — never the whole store."""
+    return merge_runs(store, key=key_col, block_rows=block_rows)
 
 
 class StreamingGenerator:
-    """Single-host out-of-core generator: bounded RAM, disk-resident edges.
+    """Single-host out-of-core generator: bounded RAM, disk-resident edges
+    AND (with shuffle_variant="external") a disk-resident permutation.
 
-    Mirrors the distributed pipeline phase by phase;  `nb` here plays the
-    role of the paper's compute nodes — per-owner partition files stand in
-    for the MPI packets, so the same code measures the I/O cost of the
-    redistribute pattern without a network.
+    `nb` plays the role of the paper's compute nodes — per-owner partition
+    files stand in for the MPI packets, so the same code measures the I/O
+    cost of every phase without a network.  The multi-process twin
+    (phases.PartitionedGenerator) runs the same bucket kernels with real
+    process parallelism.
     """
 
-    def __init__(self, cfg: GraphConfig, workdir: str):
+    def __init__(self, cfg: GraphConfig, workdir: str,
+                 checkpoint: Optional[bool] = None):
         self.cfg = cfg
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
         self.ledger = IOLedger()
+        self.gauge = MemoryGauge()
+        ck = cfg.checkpoint_phases if checkpoint is None else checkpoint
+        self._pcfg = plain_config(cfg)
+        if cfg.shuffle_variant == "external":
+            validate_external_shape(self._pcfg)
+        self.orchestrator = PhaseOrchestrator(
+            workdir, self.ledger, checkpoint=ck,
+            config_key=repr((self._pcfg, cfg.shuffle_variant)))
 
     # -- phase 1: permutation ------------------------------------------------
-    def permutation(self) -> np.ndarray:
-        """pv via the device shuffle (scale permitting) written to a memmap,
-        read back chunk-at-a-time by relabel.  (The paper also keeps shuffle
-        main-memory-resident and flags the external shuffle as future work —
-        §IV-A 'the limitation on the shuffle is artificial'.)"""
+    def permutation(self) -> List[BlockStore]:
+        """Build pv as nb disk-resident bucket stores; bucket i holds
+        pv[i*B : (i+1)*B] in run order."""
+        if self.cfg.shuffle_variant == "device":
+            return self._permutation_device()
+        if self.cfg.shuffle_variant == "external":
+            return self._permutation_external()
+        raise ValueError(self.cfg.shuffle_variant)
+
+    def _permutation_device(self) -> List[BlockStore]:
+        """pv via the device shuffle (scale permitting), spilled to bucket
+        files.  Holds the whole vector in RAM once — the §IV-A limitation —
+        which the gauge records honestly."""
         from ..distributed.collectives import flat_mesh
         from .shuffle import distributed_shuffle
 
         cfg1 = self.cfg.with_(nb=1)
         pv = np.asarray(distributed_shuffle(cfg1, flat_mesh(1)))
+        self.gauge.track(pv.size)
+        B, chunk = self.cfg.bucket_size, self.cfg.chunk_edges
+        buckets = []
+        for i in range(self.cfg.nb):
+            store = BlockStore(self.workdir, pv_store_name(self._pcfg.rounds, i),
+                               self.ledger, columns=("v",), gauge=self.gauge,
+                               fresh=True)
+            for lo in range(i * B, (i + 1) * B, chunk):
+                store.append_run(pv[lo : min(lo + chunk, (i + 1) * B)].astype(np.int64))
+            buckets.append(store)
+        return buckets
+
+    def _run_kernels_inline(self, kernel: str, argss) -> None:
+        """In-process map strategy for the shared phase drivers: same bucket
+        kernels the partitioned workers run, against this driver's ledger."""
+        from .phases import _KERNELS
+
+        for args in argss:
+            _KERNELS[kernel](self._pcfg, self.workdir, *args,
+                             ledger=self.ledger, gauge=self.gauge)
+
+    def _permutation_external(self) -> List[BlockStore]:
+        """Paper Alg. 2-4 on disk: rounds of {chunked local shuffle via
+        external sort by counter-hash key, positional bucket exchange}.
+        Peak RSS O(chunk_edges); every transfer sequential.  Bit-identical
+        to distributed_shuffle on an nb-shard mesh (tested)."""
+        p = self._pcfg
+        drive_shuffle(p, self.workdir, self._run_kernels_inline)
+        return attach_pv_buckets(p, self.workdir, self.ledger, self.gauge)
+
+    def export_pv(self, buckets: List[BlockStore]) -> np.ndarray:
+        """Assemble pv into one memmap for callers/validation — streamed in
+        chunk-sized blocks (the array returned is disk-backed, not resident)."""
         path = os.path.join(self.workdir, "pv.npy")
-        np.save(path, pv)
-        self.ledger.write(pv.nbytes)
+        out = np.lib.format.open_memmap(path, mode="w+", dtype=np.int64,
+                                        shape=(self.cfg.n,))
+        pos = 0
+        for store in buckets:
+            for (v,) in store.iter_blocks(self.cfg.chunk_edges):
+                out[pos : pos + v.size] = v
+                self.ledger.write(v.nbytes)
+                pos += v.size
+        out.flush()
+        del out
         return np.load(path, mmap_mode="r")
 
     # -- phase 2: edge generation ---------------------------------------------
     def generate_edges(self) -> RunStore:
-        from .rmat import rmat_edges_host
-
-        store = RunStore(self.workdir, "edges", self.ledger)
-        m = self.cfg.m
-        blk = self.cfg.chunk_edges
+        """Alg. 5 via the numpy counter-RNG mirror (bit-identical to the
+        device stream — tested), chunk-bounded runs."""
+        store = RunStore(self.workdir, "edges", self.ledger, gauge=self.gauge, fresh=True)
+        m, blk = self.cfg.m, self.cfg.chunk_edges
         for start in range(0, m, blk):
             cnt = min(blk, m - start)
-            s, d = rmat_edges_host(self.cfg, start, cnt)
+            s, d = rmat_edges_np_cfg(self.cfg, start, cnt)
             store.append_run(s, d)
         return store
 
     # -- phase 3: relabel (sort-merge-join, Alg. 6-7) --------------------------
-    def relabel(self, edges: RunStore, pv: np.ndarray) -> RunStore:
+    def relabel(self, edges: BlockStore, pv_buckets: List[BlockStore]) -> BlockStore:
         """Two passes, each keyed on column 1 and emitting (pv[col1], col0):
 
             pass 1: (src, dst)      -> (pv[dst], src)
             pass 2: (pv[dst], src)  -> (pv[src], pv[dst])
 
         i.e. the paper's order — destination field first, then source — with
-        a column swap instead of two different sort keys.
+        a column swap instead of two different sort keys.  The probe side is
+        the external-sorted edge stream; the build side is the pv *runs*
+        streamed forward by MonotoneLookup.  Both sides advance monotonically
+        => pure sequential I/O.
         """
         cur = edges
         for pass_ix in range(2):
-            sorted_store = RunStore(self.workdir, f"sorted_p{pass_ix}", self.ledger)
-            external_sort_runs(cur, sorted_store, key_col=1)
-            out = RunStore(self.workdir, f"relabeled_p{pass_ix}", self.ledger)
-            chunk_v = max(1, self.cfg.chunk_edges)
-            for s, d in external_merge(sorted_store, key_col=1):
-                key = d
-                new_key = np.empty_like(key)
-                # stream pv chunks that overlap this merged block only:
-                # both sides advance monotonically = sort-merge-join.
-                lo = 0
-                while lo < key.size:
-                    base = (int(key[lo]) // chunk_v) * chunk_v
-                    hi = int(np.searchsorted(key, base + chunk_v, side="left"))
-                    pv_chunk = np.asarray(pv[base : base + chunk_v])
-                    self.ledger.read(pv_chunk.nbytes)
-                    new_key[lo:hi] = pv_chunk[key[lo:hi] - base]
-                    lo = hi
-                out.append_run(new_key, s)
+            sorted_store = RunStore(self.workdir, f"sorted_p{pass_ix}",
+                                    self.ledger, gauge=self.gauge, fresh=True)
+            sort_runs(cur, sorted_store, key=1)
+            out = RunStore(self.workdir, f"relabeled_p{pass_ix}",
+                           self.ledger, gauge=self.gauge, fresh=True)
+            lookup = MonotoneLookup(pv_buckets, block_rows=self.cfg.chunk_edges)
+            for s, d in merge_runs(sorted_store, key=1,
+                                   block_rows=self.cfg.merge_block_rows):
+                out.append_run(lookup.lookup(d), s)
             sorted_store.destroy()
             if cur is not edges:
                 cur.destroy()
@@ -229,58 +233,46 @@ class StreamingGenerator:
         return cur
 
     # -- phase 4: redistribute (Alg. 8-9) --------------------------------------
-    def redistribute(self, edges: RunStore) -> List[RunStore]:
+    def redistribute(self, edges: BlockStore) -> List[RunStore]:
         nb, B = self.cfg.nb, self.cfg.bucket_size
-        owners = [RunStore(self.workdir, f"owned_{i:03d}", self.ledger) for i in range(nb)]
-        for s, d in edges.iter_runs():
-            dest = s // B
-            order = np.argsort(dest, kind="stable")
-            s, d, dest = s[order], d[order], dest[order]
-            starts = np.searchsorted(dest, np.arange(nb))
-            ends = np.searchsorted(dest, np.arange(nb), side="right")
-            for i in range(nb):
-                if ends[i] > starts[i]:
-                    owners[i].append_run(s[starts[i]:ends[i]], d[starts[i]:ends[i]])
+        owners = [RunStore(self.workdir, f"owned_{i:03d}", self.ledger,
+                           gauge=self.gauge, fresh=True) for i in range(nb)]
+        partition_runs(edges, owners, lambda s, d: s // B)
         return owners
 
     # -- phase 5: CSR ----------------------------------------------------------
-    def build_csr_sorted(self, owners: List[RunStore]) -> List[Tuple[np.ndarray, np.ndarray]]:
-        """§III-B7: external sort by src + streaming Alg. 1.  Sequential."""
-        nb, B = self.cfg.nb, self.cfg.bucket_size
+    def build_csr_sorted(self, owners: List[BlockStore]) -> List[Tuple[np.ndarray, np.ndarray]]:
+        """§III-B7: external sort by src + streaming Alg. 1.  Sequential;
+        adjv streams into a per-bucket memmap, never resident.  Delegates to
+        the shared bucket kernel (phases.csr_bucket_sorted) so both drivers
+        build CSR with literally the same code."""
         results = []
         for i, store in enumerate(owners):
-            sorted_store = RunStore(self.workdir, f"owned_sorted_{i:03d}", self.ledger)
-            external_sort_runs(store, sorted_store, key_col=0)
-            base = i * B
-            degv = np.zeros(B, np.int64)
-            adj_parts = []
-            for s, d in external_merge(sorted_store, key_col=0):
-                np.add.at(degv, s - base, 1)  # sorted -> this is a segment count
-                adj_parts.append(d)
-            offv = np.concatenate([[0], np.cumsum(degv)]).astype(np.int64)
-            adjv = np.concatenate(adj_parts) if adj_parts else np.zeros(0, np.int64)
-            self.ledger.write(adjv.nbytes)
-            results.append((offv, adjv))
-            sorted_store.destroy()
+            offv_path, adjv_path = csr_bucket_sorted(
+                self._pcfg, self.workdir, i, ledger=self.ledger,
+                gauge=self.gauge, in_name=store.name)
+            results.append((np.load(offv_path), np.load(adjv_path, mmap_mode="r")))
         return results
 
-    def build_csr_scatter(self, owners: List[RunStore]) -> List[Tuple[np.ndarray, np.ndarray]]:
+    def build_csr_scatter(self, owners: List[BlockStore]) -> List[Tuple[np.ndarray, np.ndarray]]:
         """Alg. 10-11: unordered scan with a bounded associative map flushed
         into a memmap'd adjv — every flush is a RANDOM write burst.  This is
         the variant whose I/O the paper measured blowing up (Fig. 2)."""
-        nb, B = self.cfg.nb, self.cfg.bucket_size
+        B = self.cfg.bucket_size
         flush_at = max(16, self.cfg.chunk_edges // 256)  # mmc analogue
         results = []
         for i, store in enumerate(owners):
             base = i * B
             degv = np.zeros(B, np.int64)
+            self.gauge.track(B)
             for s, _ in store.iter_runs():
                 np.add.at(degv, s - base, 1)
             offv = np.concatenate([[0], np.cumsum(degv)]).astype(np.int64)
             path = os.path.join(self.workdir, f"adjv_{i:03d}.npy")
-            adjv = np.lib.format.open_memmap(path, mode="w+", dtype=np.int64, shape=(int(offv[-1]),))
+            adjv = np.lib.format.open_memmap(path, mode="w+", dtype=np.int64,
+                                             shape=(int(offv[-1]),))
             cursor = np.zeros(B, np.int64)
-            adjvh: Dict[int, List[int]] = {}
+            adjvh = {}
             held = 0
             for s, d in store.iter_runs():
                 for sv, dv in zip((s - base).tolist(), d.tolist()):
@@ -303,14 +295,34 @@ class StreamingGenerator:
         return results
 
     # -- driver ----------------------------------------------------------------
+    def _save_stores(self, stores) -> dict:
+        if isinstance(stores, BlockStore):
+            return {"stores": [stores.manifest()], "single": True}
+        return {"stores": [s.manifest() for s in stores], "single": False}
+
+    def _load_stores(self, payload: dict):
+        stores = [BlockStore.from_manifest(m, self.workdir, self.ledger, self.gauge)
+                  for m in payload["stores"]]
+        return stores[0] if payload["single"] else stores
+
     def run(self, csr_variant: Optional[str] = None):
+        """Run all phases through the orchestrator.  Returns
+        (pv memmap, [(offv, adjv)] per bucket, IOLedger); per-phase ledger
+        deltas via `self.orchestrator.report()`."""
         csr_variant = csr_variant or self.cfg.csr_variant
-        pv = self.permutation()
-        edges = self.generate_edges()
-        relabeled = self.relabel(edges, pv)
-        owners = self.redistribute(relabeled)
+        orch = self.orchestrator
+        sv, ld = self._save_stores, self._load_stores
+        pv_buckets = orch.run_phase("shuffle", self.permutation, save=sv, load=ld)
+        edges = orch.run_phase("generate", self.generate_edges, save=sv, load=ld)
+        relabeled = orch.run_phase(
+            "relabel", lambda: self.relabel(edges, pv_buckets), save=sv, load=ld)
+        owners = orch.run_phase(
+            "redistribute", lambda: self.redistribute(relabeled), save=sv, load=ld)
         if csr_variant == "sorted":
-            csr = self.build_csr_sorted(owners)
+            csr = orch.run_phase("csr_sorted", lambda: self.build_csr_sorted(owners))
+        elif csr_variant == "scatter":
+            csr = orch.run_phase("csr_scatter", lambda: self.build_csr_scatter(owners))
         else:
-            csr = self.build_csr_scatter(owners)
+            raise ValueError(csr_variant)
+        pv = orch.run_phase("export_pv", lambda: self.export_pv(pv_buckets))
         return pv, csr, self.ledger

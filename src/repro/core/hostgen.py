@@ -1,0 +1,96 @@
+"""Pure-numpy mirrors of the counter-based generation math (no jax import).
+
+The disk tier and the multi-process partitioned mode (core/phases.py) run on
+the host, often inside worker processes where pulling in a jit stack per
+phase call is pure overhead.  These mirrors perform the *identical* uint32
+arithmetic as core/rmat.py's jnp reference — tests assert bit-exact equality
+— so every consumer (device pipeline, streaming generator, partitioned
+workers) observes the same edge stream and the same shuffle schedule.
+
+All arithmetic is wrapping uint32, matching XLA's integer semantics.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import numpy as np
+
+# Same avalanche constants as core/rmat.py.
+_M1 = np.uint32(0x7FEB352D)
+_M2 = np.uint32(0x846CA68B)
+_GOLDEN = 0x9E3779B9
+
+
+def mix32_np(x: np.ndarray) -> np.ndarray:
+    """Numpy twin of rmat.mix32 (murmur3-finalizer variant, bijective)."""
+    x = np.asarray(x, np.uint32)
+    x = x ^ (x >> np.uint32(16))
+    x = x * _M1
+    x = x ^ (x >> np.uint32(15))
+    x = x * _M2
+    x = x ^ (x >> np.uint32(16))
+    return x
+
+
+def counter_uniform_u32_np(seed: int, index: np.ndarray, stream: int) -> np.ndarray:
+    s = np.uint32((seed ^ (stream * _GOLDEN)) & 0xFFFFFFFF)
+    return mix32_np(mix32_np(np.asarray(index, np.uint32) + s) ^ s)
+
+
+def round_salt(seed: int, r: int) -> np.uint32:
+    """Per-round shuffle salt — twin of shuffle._shuffle_rounds_body's
+    mix32(seed + r * GOLDEN)."""
+    s = (seed + r * _GOLDEN) & 0xFFFFFFFF
+    return mix32_np(np.asarray([s], np.uint32))[0]
+
+
+def shuffle_keys(values: np.ndarray, salt: np.uint32) -> np.ndarray:
+    """Twin of shuffle._local_shuffle's sort keys: mix32(value ^ salt).
+
+    Bijective in `value`, so keys are unique within any set of distinct
+    vertex ids — external sort by these keys reproduces the device local
+    shuffle exactly."""
+    return mix32_np(np.asarray(values).astype(np.uint32) ^ salt)
+
+
+def rmat_thresholds(a: float, b: float, c: float, d: float) -> Tuple[int, int, int]:
+    """Integer cut points on the uint32 lattice (twin of types.quadrant_thresholds,
+    duplicated here so worker processes need no jax-importing module)."""
+    two32 = float(1 << 32)
+    t_src = int((c + d) * two32)
+    t_dst0 = int((b / (a + b)) * two32)
+    t_dst1 = int((d / (c + d)) * two32)
+    return t_src, t_dst0, t_dst1
+
+
+def rmat_edges_np(
+    scale: int,
+    seed: int,
+    start: int,
+    count: int,
+    a: float,
+    b: float,
+    c: float,
+    d: float,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Numpy twin of rmat.rmat_edge_block: `count` edges with global ids
+    [start, start+count), bit-identical to the jnp reference."""
+    t_src, t_dst0, t_dst1 = rmat_thresholds(a, b, c, d)
+    idx = np.uint32(start) + np.arange(count, dtype=np.uint32)
+    src = np.zeros(count, np.uint32)
+    dst = np.zeros(count, np.uint32)
+    for level in range(scale):
+        r1 = counter_uniform_u32_np(seed, idx, 2 * level)
+        r2 = counter_uniform_u32_np(seed, idx, 2 * level + 1)
+        src_bit = r1 < np.uint32(t_src)
+        t_d = np.where(src_bit, np.uint32(t_dst1), np.uint32(t_dst0))
+        dst_bit = r2 < t_d
+        src = (src << np.uint32(1)) | src_bit.astype(np.uint32)
+        dst = (dst << np.uint32(1)) | dst_bit.astype(np.uint32)
+    return src.astype(np.int64), dst.astype(np.int64)
+
+
+def rmat_edges_np_cfg(cfg, start: int, count: int) -> Tuple[np.ndarray, np.ndarray]:
+    """Config-object convenience (any object with scale/seed/a/b/c/d)."""
+    return rmat_edges_np(cfg.scale, cfg.seed, start, count, cfg.a, cfg.b, cfg.c, cfg.d)

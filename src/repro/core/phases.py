@@ -1,0 +1,536 @@
+"""Phase orchestration for the disk tier + the partitioned multi-process mode.
+
+Three things live here, none of which touches jax directly (worker
+processes still pay the package-level jax import once at startup — Python
+runs repro/core/__init__ when unpickling the kernel reference — but no jit
+tracing or device state is involved in any kernel):
+
+  PhaseOrchestrator    declares the pipeline as named, resumable,
+                       individually-measurable phases.  Each phase records a
+                       per-phase I/O-ledger delta (the paper's Fig. 2/4 are
+                       per-phase measurements — the orchestrator is what
+                       makes the host tier measurable the same way) and,
+                       with checkpointing on, persists a JSON manifest of its
+                       output stores so a crashed/killed run resumes at the
+                       first incomplete phase.
+
+  bucket-level kernels the unit of distribution: every pipeline phase is a
+                       function of (config, workdir, bucket_id) operating on
+                       BlockStores addressed *by naming convention* —
+                       `pv_r{round}_b{bucket}`, `edges_b{bucket}`, … — so the
+                       filesystem plays the role of the paper's MPI
+                       interconnect and a phase is the same code whether one
+                       process runs all buckets (StreamingGenerator) or nb
+                       workers run one each (PartitionedGenerator).
+
+  PartitionedGenerator the single-host stand-in for the paper's 64-node
+                       cluster: nb `concurrent.futures` workers, each owning
+                       the vertex range [i*B, (i+1)*B), with a barrier after
+                       every phase (the paper's bulk-synchronous MPI
+                       structure).  Workers account I/O into private ledgers
+                       that the parent merges, so the aggregate ledger is
+                       comparable with the sequential driver's.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from multiprocessing import get_context
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .blockstore import (
+    BlockStore,
+    IOLedger,
+    MemoryGauge,
+    MonotoneLookup,
+    clean_store,
+    merge_runs,
+    partition_runs,
+    sort_runs,
+)
+from .hostgen import rmat_edges_np_cfg, round_salt, shuffle_keys
+
+# ---------------------------------------------------------------------------
+# Worker-safe config (GraphConfig carries a jnp dtype; workers get this mirror)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class PlainCfg:
+    """Picklable, numpy-only mirror of GraphConfig for phase kernels."""
+
+    scale: int
+    edge_factor: int
+    seed: int
+    a: float
+    b: float
+    c: float
+    d: float
+    nb: int
+    chunk_edges: int
+    rounds: int
+    merge_block_rows: int = 0
+
+    @property
+    def n(self) -> int:
+        return 1 << self.scale
+
+    @property
+    def m(self) -> int:
+        return self.n * self.edge_factor
+
+    @property
+    def bucket_size(self) -> int:
+        return self.n // self.nb
+
+    @property
+    def edges_per_bucket(self) -> int:
+        return self.m // self.nb
+
+
+def plain_config(cfg) -> PlainCfg:
+    """Accepts GraphConfig (or anything duck-typed like it)."""
+    p = PlainCfg(
+        scale=int(cfg.scale), edge_factor=int(cfg.edge_factor), seed=int(cfg.seed),
+        a=float(cfg.a), b=float(cfg.b), c=float(cfg.c), d=float(cfg.d),
+        nb=int(cfg.nb), chunk_edges=int(cfg.chunk_edges), rounds=int(cfg.rounds),
+        merge_block_rows=int(getattr(cfg, "merge_block_rows", 0)),
+    )
+    if p.n % p.nb != 0:
+        raise ValueError(f"nb={p.nb} must divide n={p.n}")
+    return p
+
+
+def validate_external_shape(p: PlainCfg) -> PlainCfg:
+    """Shape requirements specific to the nb-way external shuffle/exchange
+    (the device-spill path only needs nb | n).  Same constraints the device
+    shuffle asserts inside jit; here they must fail before any store is
+    written."""
+    if p.bucket_size % p.nb != 0:
+        raise ValueError(
+            f"bucket size B={p.bucket_size} must split into nb={p.nb} "
+            f"exchange slices (need nb**2 <= n)")
+    if p.m % p.nb != 0:
+        raise ValueError(f"nb={p.nb} must divide m={p.m}")
+    return p
+
+
+# ---------------------------------------------------------------------------
+# Store naming convention (the "wire format" between phases)
+# ---------------------------------------------------------------------------
+
+
+def pv_store_name(r: int, i: int) -> str:
+    return f"pv_r{r}_b{i:03d}"
+
+
+def edges_store_name(i: int, pass_ix: Optional[int] = None) -> str:
+    return f"edges_b{i:03d}" if pass_ix is None else f"edges_p{pass_ix}_b{i:03d}"
+
+
+def relabel_inbox_name(pass_ix: int, j: int) -> str:
+    return f"rl{pass_ix}_b{j:03d}"
+
+
+def owned_store_name(j: int) -> str:
+    return f"owned_b{j:03d}"
+
+
+def attach_pv_buckets(pcfg: PlainCfg, workdir: str, ledger: IOLedger,
+                      gauge: Optional[MemoryGauge] = None) -> List[BlockStore]:
+    """Re-open the final-round pv bucket stores (they ARE the permutation)."""
+    return [
+        BlockStore.attach(workdir, pv_store_name(pcfg.rounds, i), ledger,
+                          columns=("v",), gauge=gauge)
+        for i in range(pcfg.nb)
+    ]
+
+
+# ---------------------------------------------------------------------------
+# Bucket-level phase kernels (shared by sequential + partitioned drivers)
+# ---------------------------------------------------------------------------
+
+
+def init_pv_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
+                   ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Round-0 shuffle buffer: bucket i holds its range partition of [0:n)
+    (the paper's RP(n, nb)), written as chunk-bounded runs."""
+    B, chunk = pcfg.bucket_size, pcfg.chunk_edges
+    store = BlockStore(workdir, pv_store_name(0, i), ledger, columns=("v",), gauge=gauge,
+                       fresh=True)
+    for lo in range(i * B, (i + 1) * B, chunk):
+        hi = min(lo + chunk, (i + 1) * B)
+        store.append_run(np.arange(lo, hi, dtype=np.int64))
+
+
+def shuffle_bucket_round(pcfg: PlainCfg, workdir: str, i: int, r: int, *,
+                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """One round of the external shuffle for bucket i (paper Alg. 2-4 on disk).
+
+    (i)  local shuffle = external sort of the bucket by the counter-hash key
+         mix32(value ^ salt_r) — sorting distinct values by a bijective hash
+         is a uniform permutation, and exactly reproduces the device
+         shuffle's argsort because the keys are unique;
+    (ii) bucket exchange = the sorted stream is cut into nb equal positional
+         slices, slice j appended to next-round bucket j with a
+         `{sender}_{seq}` run tag, so receivers recover sender order
+         lexicographically — the disk twin of `lax.all_to_all`.
+
+    Every access is a sequential scan: the shuffle phase does zero random I/O.
+    """
+    nb, B = pcfg.nb, pcfg.bucket_size
+    blk = B // nb
+    salt = round_salt(pcfg.seed, r)
+
+    def key(v):
+        return shuffle_keys(v, salt)
+
+    src = BlockStore.attach(workdir, pv_store_name(r, i), ledger, columns=("v",), gauge=gauge)
+    tmp = BlockStore(workdir, pv_store_name(r, i) + "_sorted", ledger, columns=("v",),
+                     gauge=gauge, fresh=True)
+    sort_runs(src, tmp, key=key)
+    outs = [
+        BlockStore(workdir, pv_store_name(r + 1, j), ledger, columns=("v",), gauge=gauge)
+        for j in range(nb)
+    ]
+    seq = [0] * nb
+    pos = 0
+    for (v,) in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows):
+        o = 0
+        while o < v.size:
+            j = pos // blk
+            take = min(v.size - o, (j + 1) * blk - pos)
+            outs[j].append_run(v[o : o + take], tag=f"{i:03d}_{seq[j]:05d}")
+            seq[j] += 1
+            o += take
+            pos += take
+    tmp.destroy()
+    src.destroy()
+
+
+def generate_bucket_edges(pcfg: PlainCfg, workdir: str, i: int, *,
+                          ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Paper Alg. 5: bucket i generates its bin of edges [i*eps, (i+1)*eps).
+    Counter-based RNG => the stream is independent of nb and of which
+    process generates it (regeneration-friendly)."""
+    eps, chunk = pcfg.edges_per_bucket, pcfg.chunk_edges
+    store = BlockStore(workdir, edges_store_name(i), ledger, gauge=gauge, fresh=True)
+    start = i * eps
+    for lo in range(start, start + eps, chunk):
+        cnt = min(chunk, start + eps - lo)
+        s, d = rmat_edges_np_cfg(pcfg, lo, cnt)
+        store.append_run(s, d)
+
+
+def relabel_scatter_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
+                           ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Relabel pass `pass_ix`, scatter half (paper Alg. 6): ship each record
+    to the owner of its key field (column 1) so the owner can join it against
+    its pv bucket.  Bucket partition = sequential scan + stable chunk sort."""
+    B = pcfg.bucket_size
+    in_name = edges_store_name(i) if pass_ix == 0 else edges_store_name(i, pass_ix - 1)
+    store = BlockStore.attach(workdir, in_name, ledger, gauge=gauge)
+    outs = [
+        BlockStore(workdir, relabel_inbox_name(pass_ix, j), ledger, gauge=gauge)
+        for j in range(pcfg.nb)
+    ]
+    partition_runs(store, outs, lambda a, b: b // B, tag_prefix=f"{i:03d}")
+
+
+def relabel_apply_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
+                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Relabel pass `pass_ix`, join half (paper Alg. 7): external-sort my
+    inbox by the key field, stream pv blocks past it (sort-merge-join), emit
+    (pv[key], other) — the column swap makes pass 1 relabel dst and pass 2
+    relabel src with identical code."""
+    B, chunk = pcfg.bucket_size, pcfg.chunk_edges
+    inbox = BlockStore.attach(workdir, relabel_inbox_name(pass_ix, i), ledger, gauge=gauge)
+    tmp = BlockStore(workdir, relabel_inbox_name(pass_ix, i) + "_sorted", ledger,
+                     gauge=gauge, fresh=True)
+    sort_runs(inbox, tmp, key=1)
+    pv = BlockStore.attach(workdir, pv_store_name(pcfg.rounds, i), ledger,
+                           columns=("v",), gauge=gauge)
+    lookup = MonotoneLookup([pv], block_rows=chunk, base=i * B)
+    out = BlockStore(workdir, edges_store_name(i, pass_ix), ledger, gauge=gauge, fresh=True)
+    for a, b in merge_runs(tmp, key=1, block_rows=pcfg.merge_block_rows):
+        out.append_run(lookup.lookup(b), a)
+    tmp.destroy()
+    inbox.destroy()
+
+
+def redistribute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
+                        ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Paper Alg. 8-9: ship each relabeled edge to owner(new_src)."""
+    B = pcfg.bucket_size
+    store = BlockStore.attach(workdir, edges_store_name(i, 1), ledger, gauge=gauge)
+    outs = [
+        BlockStore(workdir, owned_store_name(j), ledger, gauge=gauge)
+        for j in range(pcfg.nb)
+    ]
+    partition_runs(store, outs, lambda a, b: a // B, tag_prefix=f"{i:03d}")
+
+
+def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
+                      ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                      in_name: Optional[str] = None) -> Tuple[str, str]:
+    """§III-B7: external sort owned edges by src, then one sequential pass
+    emits degrees + adjacency.  adjv streams straight into a memmap — the
+    adjacency never materializes in RAM.  `in_name` overrides the input
+    store (the sequential driver's owner stores are named differently)."""
+    B, base = pcfg.bucket_size, i * pcfg.bucket_size
+    if in_name is None:
+        in_name = owned_store_name(i)
+    owned = BlockStore.attach(workdir, in_name, ledger, gauge=gauge)
+    tmp = BlockStore(workdir, in_name + "_sorted", ledger, gauge=gauge, fresh=True)
+    sort_runs(owned, tmp, key=0)
+    degv = np.zeros(B, np.int64)
+    if gauge is not None:
+        gauge.track(B)
+    adjv_path = os.path.join(workdir, f"csr_adjv_{i:03d}.npy")
+    total = tmp.total_rows()
+    adjv = np.lib.format.open_memmap(adjv_path, mode="w+", dtype=np.int64, shape=(total,))
+    pos = 0
+    for s, d in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows):
+        np.add.at(degv, s - base, 1)
+        adjv[pos : pos + d.size] = d
+        ledger.write(d.nbytes)
+        pos += d.size
+    adjv.flush()
+    del adjv
+    offv = np.concatenate([[0], np.cumsum(degv)]).astype(np.int64)
+    offv_path = os.path.join(workdir, f"csr_offv_{i:03d}.npy")
+    np.save(offv_path, offv)
+    ledger.write(offv.nbytes)
+    tmp.destroy()
+    return offv_path, adjv_path
+
+
+def drive_shuffle(pcfg: PlainCfg, workdir: str, map_kernel) -> None:
+    """The shuffle round loop, shared by both drivers.  `map_kernel(name,
+    argss)` runs one bucket kernel for every args tuple and acts as the
+    barrier.  Receiver stores are multi-writer, so each round's outputs are
+    cleaned BEFORE the senders run — a correctness invariant (attach() would
+    merge in stale runs from a previous attempt)."""
+    map_kernel("init_pv", [(i,) for i in range(pcfg.nb)])
+    for r in range(pcfg.rounds):
+        for j in range(pcfg.nb):
+            clean_store(workdir, pv_store_name(r + 1, j))
+        map_kernel("shuffle_round", [(i, r) for i in range(pcfg.nb)])
+
+
+# ---------------------------------------------------------------------------
+# PhaseOrchestrator
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class PhaseRecord:
+    name: str
+    status: str                      # "done" | "resumed"
+    seconds: float
+    ledger_delta: Dict[str, int]
+
+
+class PhaseOrchestrator:
+    """Runs named phases with per-phase ledger deltas and checkpoint/resume.
+
+    With `checkpoint=True`, each completed phase's `save()` payload (e.g.
+    BlockStore manifests) is persisted to `<workdir>/phases.json`; a new
+    orchestrator over the same workdir replays completed phases through
+    `load()` instead of recomputing them — intermediate stores are reused
+    in place, so resume does (almost) no I/O.
+    """
+
+    def __init__(self, workdir: str, ledger: IOLedger, checkpoint: bool = False,
+                 config_key: Optional[str] = None):
+        self.workdir = workdir
+        self.ledger = ledger
+        self.checkpoint = checkpoint
+        self.records: List[PhaseRecord] = []
+        self._state_path = os.path.join(workdir, "phases.json")
+        self._config_key = config_key
+        self._completed: Dict[str, Dict] = {}
+        if checkpoint and os.path.exists(self._state_path):
+            try:
+                with open(self._state_path) as f:
+                    state = json.load(f)
+            except (json.JSONDecodeError, OSError):
+                # A torn/corrupt state file is exactly the crash this feature
+                # recovers from — fall back to recomputing everything.
+                state = {}
+            # A checkpoint taken under a different config describes a
+            # DIFFERENT graph — resuming from it would be silent corruption
+            # (e.g. same workdir, new seed).  Invalidate wholesale.
+            if config_key is not None and state.get("__config__") != config_key:
+                state = {}
+            self._completed = {k: v for k, v in state.items() if k != "__config__"}
+
+    def run_phase(
+        self,
+        name: str,
+        fn: Callable[[], object],
+        save: Optional[Callable[[object], Dict]] = None,
+        load: Optional[Callable[[Dict], object]] = None,
+    ):
+        if self.checkpoint and load is not None and name in self._completed:
+            result = load(self._completed[name])
+            self.records.append(PhaseRecord(name, "resumed", 0.0,
+                                            {k: 0 for k in self.ledger.as_dict()}))
+            return result
+        snap = self.ledger.snapshot()
+        t0 = time.perf_counter()
+        result = fn()
+        self.records.append(PhaseRecord(
+            name, "done", time.perf_counter() - t0, self.ledger.delta_since(snap)))
+        if self.checkpoint and save is not None:
+            self._completed[name] = save(result)
+            state = dict(self._completed)
+            if self._config_key is not None:
+                state["__config__"] = self._config_key
+            tmp = self._state_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(state, f)
+            os.replace(tmp, self._state_path)  # atomic: never a torn state file
+        return result
+
+    def delta(self, name: str) -> Dict[str, int]:
+        """Ledger delta of the most recent run of phase `name`."""
+        for rec in reversed(self.records):
+            if rec.name == name:
+                return rec.ledger_delta
+        raise KeyError(name)
+
+    def report(self) -> List[Dict]:
+        return [
+            {"phase": r.name, "status": r.status, "seconds": round(r.seconds, 4),
+             **r.ledger_delta}
+            for r in self.records
+        ]
+
+
+# ---------------------------------------------------------------------------
+# PartitionedGenerator: nb workers, one vertex range each
+# ---------------------------------------------------------------------------
+
+_KERNELS = {
+    "init_pv": init_pv_bucket,
+    "shuffle_round": shuffle_bucket_round,
+    "generate": generate_bucket_edges,
+    "relabel_scatter": relabel_scatter_bucket,
+    "relabel_apply": relabel_apply_bucket,
+    "redistribute": redistribute_bucket,
+    "csr_sorted": csr_bucket_sorted,
+}
+
+
+def _run_kernel(task):
+    """Worker entry point: run one bucket kernel with a private ledger/gauge
+    and ship the accounting back to the parent."""
+    kernel, pcfg, workdir, args = task
+    ledger = IOLedger()
+    gauge = MemoryGauge()
+    out = _KERNELS[kernel](pcfg, workdir, *args, ledger=ledger, gauge=gauge)
+    return out, ledger.as_dict(), gauge.peak_rows
+
+
+class PartitionedGenerator:
+    """Multi-process out-of-core generator: the paper's cluster on one host.
+
+    nb workers (a `concurrent.futures` pool over a spawn context — safe with
+    an initialized jax parent), each owning vertex range [i*B, (i+1)*B);
+    the shared filesystem carries the bucket exchanges that MPI would.
+    Phases are bulk-synchronous: scatter kernels for every bucket complete
+    (barrier) before any join kernel starts, exactly the paper's structure.
+
+    `max_workers=0` runs the same kernels in-process (the sequential
+    debugging mode); the stores, and therefore the result, are identical.
+    """
+
+    def __init__(self, cfg, workdir: str, max_workers: Optional[int] = None):
+        self.pcfg = validate_external_shape(
+            cfg if isinstance(cfg, PlainCfg) else plain_config(cfg))
+        self.workdir = workdir
+        os.makedirs(workdir, exist_ok=True)
+        self.ledger = IOLedger()
+        self.gauge = MemoryGauge()
+        if max_workers is None:
+            max_workers = min(self.pcfg.nb, os.cpu_count() or 1)
+        self.max_workers = max_workers
+        self._pool: Optional[ProcessPoolExecutor] = None
+        self.orchestrator = PhaseOrchestrator(workdir, self.ledger)
+
+    def close(self):
+        if self._pool is not None:
+            self._pool.shutdown()
+            self._pool = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, *exc):
+        self.close()
+
+    # -- the barrier ----------------------------------------------------------
+    def _map(self, kernel: str, argss: Sequence[Tuple]) -> List:
+        tasks = [(kernel, self.pcfg, self.workdir, args) for args in argss]
+        if self.max_workers == 0:
+            results = [_run_kernel(t) for t in tasks]
+        else:
+            if self._pool is None:
+                # One persistent pool for the whole run: workers pay their
+                # interpreter/import startup once, not once per barrier.
+                self._pool = ProcessPoolExecutor(
+                    max_workers=self.max_workers, mp_context=get_context("spawn"))
+            results = list(self._pool.map(_run_kernel, tasks))
+        outs = []
+        for out, ldict, peak in results:
+            for k, v in ldict.items():
+                setattr(self.ledger, k, getattr(self.ledger, k) + v)
+            self.gauge.track(peak)
+            outs.append(out)
+        return outs
+
+    # -- phases ----------------------------------------------------------------
+    def _shuffle(self):
+        drive_shuffle(self.pcfg, self.workdir, self._map)
+
+    def _relabel(self):
+        nb = self.pcfg.nb
+        for pass_ix in (0, 1):
+            for j in range(nb):
+                clean_store(self.workdir, relabel_inbox_name(pass_ix, j))
+            self._map("relabel_scatter", [(i, pass_ix) for i in range(nb)])
+            self._map("relabel_apply", [(i, pass_ix) for i in range(nb)])
+
+    def run(self, csr_variant: str = "sorted"):
+        """Returns ([(offv, adjv_memmap)] per bucket, aggregate IOLedger)."""
+        if csr_variant != "sorted":
+            raise ValueError("partitioned mode implements csr_variant='sorted' only")
+        nb = self.pcfg.nb
+        orch = self.orchestrator
+        orch.run_phase("shuffle", self._shuffle)
+        orch.run_phase("generate", lambda: self._map("generate", [(i,) for i in range(nb)]))
+        orch.run_phase("relabel", self._relabel)
+
+        def _redistribute():
+            for j in range(nb):
+                clean_store(self.workdir, owned_store_name(j))
+            return self._map("redistribute", [(i,) for i in range(nb)])
+
+        orch.run_phase("redistribute", _redistribute)
+        paths = orch.run_phase("csr_sorted", lambda: self._map("csr_sorted", [(i,) for i in range(nb)]))
+        self.close()
+        csr = [
+            (np.load(offv_path), np.load(adjv_path, mmap_mode="r"))
+            for offv_path, adjv_path in paths
+        ]
+        return csr, self.ledger
+
+    def pv_buckets(self) -> List[BlockStore]:
+        return attach_pv_buckets(self.pcfg, self.workdir, self.ledger, self.gauge)

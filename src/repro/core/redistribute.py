@@ -32,7 +32,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..distributed.collectives import capacity_all_to_all, merge_sorted_runs
+from ..distributed.collectives import capacity_all_to_all, merge_sorted_runs, shard_map
 from .types import GraphConfig
 
 
@@ -74,7 +74,7 @@ def redistribute(
         ex = capacity_all_to_all(pair, src_l // B, axis=axis, capacity=cap)
         return ex.data[..., 0], ex.data[..., 1], ex.valid, ex.dropped
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis), P()),
@@ -124,7 +124,7 @@ def redistribute_sorted(
             ex.dropped,
         )
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis), P()),

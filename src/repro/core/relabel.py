@@ -37,7 +37,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
-from ..distributed.collectives import capacity_all_to_all, return_all_to_all, ring_shift
+from ..distributed.collectives import capacity_all_to_all, return_all_to_all, ring_shift, shard_map
 from .types import GraphConfig
 
 
@@ -89,7 +89,7 @@ def relabel_ring(
         new_src = _relabel_field_ring(src_l, pv_l, bid=bid, nb=nb, B=B, axis=axis)
         return new_src, new_dst
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_shard,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),
@@ -130,7 +130,7 @@ def relabel_alltoall(
         new_src, new_dst = jnp.split(back, 2)
         return new_src, new_dst, ex.dropped
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_shard,
         mesh=mesh,
         in_specs=(P(axis), P(axis), P(axis)),

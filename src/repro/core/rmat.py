@@ -80,15 +80,6 @@ def rmat_edge_block(cfg: GraphConfig, start: jnp.ndarray, count: int) -> Tuple[j
     return src.astype(cfg.vertex_dtype), dst.astype(cfg.vertex_dtype)
 
 
-def rmat_edges_host(cfg: GraphConfig, start: int, count: int):
-    """Host-friendly wrapper returning numpy arrays (used by the external-
-    memory streaming path, where edge blocks are generated on demand)."""
-    import numpy as np
-
-    s, d = rmat_edge_block(cfg, jnp.uint32(start), count)
-    return np.asarray(s), np.asarray(d)
-
-
 def degree_bias_stat(src: jnp.ndarray, dst: jnp.ndarray, n: int) -> float:
     """Fraction of edge endpoints landing in the lowest n/16 vertex ids.
 

@@ -31,6 +31,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from ..distributed.collectives import shard_map
 from .rmat import mix32
 from .types import GraphConfig
 
@@ -77,7 +78,7 @@ def distributed_shuffle(cfg: GraphConfig, mesh: Mesh, axis: str = "shards") -> j
         sbuf = lax.fori_loop(0, rounds, _shuffle_rounds_body(nb, axis, cfg.seed), sbuf)
         return sbuf
 
-    shard_fn = jax.shard_map(
+    shard_fn = shard_map(
         per_shard, mesh=mesh, in_specs=(P(axis),), out_specs=P(axis)
     )
     dummy = jnp.zeros((nb,), jnp.int32)  # carries the axis, no data

@@ -57,6 +57,19 @@ class GraphConfig:
     relabel_variant: str = "ring"         # "ring" (paper-faithful) | "alltoall" (optimized)
     csr_variant: str = "sorted"           # "sorted" (paper §III-B7) | "scatter" (paper Alg.10/11)
     vertex_dtype: jnp.dtype = jnp.int32
+    # --- disk tier (core/external.py + core/phases.py) --------------------
+    # "device": pv via the on-device shuffle, spilled to bucket files (holds
+    #           pv in RAM once — the paper's §IV-A "artificial limitation").
+    # "external": paper Alg. 2-4 on disk — pv built as nb bucket files via
+    #           rounds of chunked local shuffle + bucket exchange; peak RSS
+    #           stays O(chunk_edges) at any scale.
+    shuffle_variant: str = "device"
+    # Rows per cursor block in external merges; 0 = auto (one chunk of
+    # memory split evenly across the merge fan-in).
+    merge_block_rows: int = 0
+    # Persist per-phase output manifests to <workdir>/phases.json and resume
+    # completed phases on re-run (PhaseOrchestrator).
+    checkpoint_phases: bool = False
 
     # --- derived ----------------------------------------------------------
     @property

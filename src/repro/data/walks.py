@@ -31,18 +31,9 @@ import numpy as np
 from jax import lax
 from jax.sharding import Mesh, PartitionSpec as P
 
+from ..core.hostgen import mix32_np as _mix32_np
 from ..core.types import GraphConfig, owner_of
-from ..distributed.collectives import capacity_all_to_all
-
-
-def _mix32_np(x: np.ndarray) -> np.ndarray:
-    x = x.astype(np.uint32)
-    x ^= x >> np.uint32(16)
-    x = (x * np.uint32(0x7FEB352D)) & np.uint32(0xFFFFFFFF)
-    x ^= x >> np.uint32(15)
-    x = (x * np.uint32(0x846CA68B)) & np.uint32(0xFFFFFFFF)
-    x ^= x >> np.uint32(16)
-    return x
+from ..distributed.collectives import capacity_all_to_all, pvary, shard_map
 
 
 def _mix32_jnp(x: jnp.ndarray) -> jnp.ndarray:
@@ -154,7 +145,7 @@ def distributed_walks(
         pos, wid = pad_to(pos), pad_to(wid, -1)
         # alive starts axis-invariant but becomes axis-varying through the
         # exchange; mark it varying so the scan carry types match
-        alive = lax.pvary(pad_to(alive), (axis,))
+        alive = pvary(pad_to(alive), (axis,))
         hist = jnp.zeros((cap, length + 1), jnp.int32).at[:, 0].set(pos)
 
         def step(carry, t):
@@ -190,7 +181,7 @@ def distributed_walks(
         # per-step totals; sum over steps, report one copy per shard.
         return hist, alive, wid, jnp.sum(dropped)[None]
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_shard, mesh=mesh,
         in_specs=(P(axis), P(axis)),
         out_specs=(P(axis), P(axis), P(axis), P(axis)),

@@ -31,6 +31,33 @@ import jax.numpy as jnp
 from jax import lax
 
 # ---------------------------------------------------------------------------
+# Version compat
+# ---------------------------------------------------------------------------
+
+# `jax.shard_map` graduated from `jax.experimental.shard_map.shard_map` only
+# in jax >= 0.4.38; on 0.4.37 the top-level attribute raises AttributeError.
+# Every module in this repo imports `shard_map` from here so the fallback
+# lives in exactly one place.
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on jax <= 0.4.37 only
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+if hasattr(lax, "axis_size"):
+    axis_size = lax.axis_size
+else:  # pragma: no cover - jax <= 0.4.37
+    def axis_size(axis: str) -> int:
+        # psum of a Python literal is constant-folded to the axis size.
+        return lax.psum(1, axis)
+
+if hasattr(lax, "pvary"):
+    pvary = lax.pvary
+else:  # pragma: no cover - jax <= 0.4.37
+    def pvary(x, axis_names):
+        # Older shard_map has no varying-type system; identity is correct.
+        return x
+
+# ---------------------------------------------------------------------------
 # Mesh helpers
 # ---------------------------------------------------------------------------
 
@@ -140,7 +167,7 @@ def capacity_all_to_all(
     records, `dest` [N] destination shard ids in [0, k).  Rows with
     valid=False are discarded without consuming capacity.
     """
-    k = lax.axis_size(axis)
+    k = axis_size(axis)
     b = bucket_by_destination(data, dest, k, capacity, valid=valid)
     recv = lax.all_to_all(b.data, axis, split_axis=0, concat_axis=0, tiled=False)
     recv_valid = lax.all_to_all(b.valid, axis, split_axis=0, concat_axis=0, tiled=False)
@@ -179,7 +206,7 @@ def ring_shift(x: jnp.ndarray, axis: str, shift: int = 1) -> jnp.ndarray:
     past every shard in nb rounds — sequential access on the ICI, the exact
     analogue of the paper turning random disk I/O into sequential scans.
     """
-    k = lax.axis_size(axis)
+    k = axis_size(axis)
     perm = [(i, (i - shift) % k) for i in range(k)]  # (source, destination)
     return lax.ppermute(x, axis, perm)
 
