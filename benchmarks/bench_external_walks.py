@@ -1,0 +1,76 @@
+"""The out-of-core walk sampler vs the in-memory host oracle.
+
+Three measurements per scale:
+
+  hops/s    walker advancement throughput of external_walks (frontier
+            sort -> CSR sort-merge-join -> owner partition, all on disk)
+            against host_walks over the same resident CSR — the price of
+            never materializing the graph.
+  seq_frac  fraction of external I/O transfers that are sequential (the
+            paper's Fig.-2 discipline applied to traversal: must be 1.0).
+  peak      MemoryGauge peak resident rows at fixed chunk_edges — flat
+            across scales, while the host oracle's working set is the CSR.
+"""
+
+from __future__ import annotations
+
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.blockstore import IOLedger, MemoryGauge
+from repro.core.external import StreamingGenerator
+from repro.core.types import GraphConfig
+from repro.data.walks import (
+    concat_bucket_csr, external_walks, host_walks, start_vertex)
+
+from .common import print_table, save_json
+
+
+def run(scales=(10, 12, 14), chunk=1 << 10, nb=4, walkers=256, length=16):
+    rows = []
+    for s in scales:
+        cfg = GraphConfig(scale=s, nb=nb, chunk_edges=chunk, edge_factor=4,
+                          shuffle_variant="external")
+        with tempfile.TemporaryDirectory() as d:
+            _, csr, _ = StreamingGenerator(cfg, d).run()
+            offv, adjv = concat_bucket_csr(csr)
+
+            wid = np.arange(walkers, dtype=np.uint32)
+            starts = start_vertex(0, wid, cfg.n)
+            t0 = time.perf_counter()
+            ref = host_walks(offv, adjv, starts, length, 0, n=cfg.n,
+                             walker_ids=wid)
+            host_s = time.perf_counter() - t0
+
+            ledger, gauge = IOLedger(), MemoryGauge()
+            t0 = time.perf_counter()
+            res = external_walks(cfg, d, num_walkers=walkers, length=length,
+                                 seed=0, ledger=ledger, gauge=gauge)
+            ext_s = time.perf_counter() - t0
+            np.testing.assert_array_equal(np.asarray(res.walks), ref)
+
+            hops = walkers * length
+            ops = (ledger.seq_reads + ledger.seq_writes
+                   + ledger.rand_reads + ledger.rand_writes)
+            rows.append({
+                "scale": s, "n": cfg.n,
+                "host_hops_s": hops / max(host_s, 1e-9),
+                "ext_hops_s": hops / max(ext_s, 1e-9),
+                "slowdown": ext_s / max(host_s, 1e-9),
+                "seq_frac": (ledger.seq_reads + ledger.seq_writes) / max(ops, 1),
+                "peak_rows": gauge.peak_rows,
+                "csr_rows": int(offv.shape[0] + adjv.shape[0]),
+            })
+    print_table(
+        "external vs host walk sampler (walkers=%d, length=%d, chunk=%d)"
+        % (walkers, length, chunk),
+        rows, ["scale", "n", "host_hops_s", "ext_hops_s", "slowdown",
+               "seq_frac", "peak_rows", "csr_rows"])
+    save_json("external_walks", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

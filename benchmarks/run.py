@@ -9,6 +9,8 @@ One module per paper table/figure (DESIGN.md §6):
   bench_csr_variants    Fig. 2 CSR + §III-B7  scatter vs sorted (+ I/O ledger)
   bench_external_shuffle §IV-A  external vs device-spill shuffle: peak RSS,
                         per-phase ledger, partitioned-mode wall time
+  bench_external_walks  out-of-core walk sampler vs host oracle: hops/s,
+                        sequential fraction, peak resident rows
   bench_lm              substrate sanity: train/serve throughput
   bench_roofline        deliverable (g): render the dry-run roofline table
 """
@@ -29,8 +31,8 @@ def main():
     args = ap.parse_args()
 
     from . import (bench_csr_variants, bench_external_shuffle,
-                   bench_hash_vs_sort, bench_lm, bench_roofline,
-                   bench_single_node, bench_strong_scaling,
+                   bench_external_walks, bench_hash_vs_sort, bench_lm,
+                   bench_roofline, bench_single_node, bench_strong_scaling,
                    bench_weak_scaling)
 
     benches = {
@@ -48,6 +50,10 @@ def main():
         "external_shuffle": lambda: bench_external_shuffle.run(
             scales=(10, 12) if args.fast else (10, 12, 14),
             worker_counts=(0, 2) if args.fast else (0, 2, 4)),
+        "external_walks": lambda: bench_external_walks.run(
+            scales=(9, 10) if args.fast else (10, 12, 14),
+            walkers=64 if args.fast else 256,
+            length=8 if args.fast else 16),
         "lm": bench_lm.run,
         "roofline": bench_roofline.run,
     }

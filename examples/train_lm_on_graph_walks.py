@@ -1,7 +1,8 @@
 """End-to-end driver (deliverable b): generate a graph with the paper's
 pipeline, stream random-walk token batches from it, and train a ~small LM
 for a few hundred steps with checkpointing — then resume once to prove
-restartability.
+restartability, and finally train from the OUT-OF-CORE data path (disk-tier
+generation + external_walks corpus: the CSR never materializes in RAM).
 
     PYTHONPATH=src python examples/train_lm_on_graph_walks.py
 """
@@ -32,3 +33,16 @@ print(f"phase-2 (resumed) continued to {np.mean(losses2[-10:]):.3f} "
 assert len(losses2) < 200, "second run must resume, not restart"
 assert np.mean(losses2[-10:]) < np.mean(losses1[:10])
 print("end-to-end train + resume OK")
+
+# phase 3: the same training loop fed from the external-memory tier —
+# out-of-core generation, walk corpus streamed from a disk memmap
+with tempfile.TemporaryDirectory() as wd:
+    losses3 = train_main([
+        "--arch", "internlm2-1.8b", "--scale", "11",
+        "--steps", "60", "--batch", "8", "--seq", "64",
+        "--lr", "2e-3", "--data", "external", "--workdir", wd,
+    ])
+print(f"external-data loss: {np.mean(losses3[:10]):.3f} -> "
+      f"{np.mean(losses3[-10:]):.3f}")
+assert np.mean(losses3[-10:]) < np.mean(losses3[:10])
+print("out-of-core data path train OK")

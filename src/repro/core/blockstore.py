@@ -204,13 +204,17 @@ class BlockStore:
         for i in range(self.num_runs):
             yield self.read_run(i)
 
-    def iter_blocks(self, block_rows: int) -> Iterator[Tuple[np.ndarray, ...]]:
-        """Stream the whole store in buffers of <= block_rows (run order)."""
+    def iter_blocks(self, block_rows: int,
+                    sequential: bool = True) -> Iterator[Tuple[np.ndarray, ...]]:
+        """Stream the whole store in buffers of <= block_rows (run order).
+        `sequential` classifies the reads in the ledger — a consumer that
+        probes the stream non-contiguously (see MonotoneLookup) can account
+        its loads honestly instead of defaulting everything to sequential."""
         for i in range(self.num_runs):
             mm = self.open_run(i)
             for lo in range(0, mm.shape[0], block_rows):
                 blk = np.asarray(mm[lo : lo + block_rows])
-                self.ledger.read(blk.nbytes)
+                self.ledger.read(blk.nbytes, sequential)
                 self.gauge.track(blk.shape[0])
                 yield tuple(blk[:, c] for c in range(blk.shape[1]))
 
@@ -408,6 +412,34 @@ def partition_runs(
     return outs
 
 
+class NpyColumnStore:
+    """Read-only, single-column BlockStore look-alike over one flat .npy
+    vector (e.g. a bucket's CSR offv file), streamed in ledger-charged,
+    gauge-tracked blocks.
+
+    Exists so MonotoneLookup can sort-merge-join against plain array files
+    with the SAME I/O accounting as real stores — before this adapter, flat
+    .npy tables could only be memmapped directly, and those block loads never
+    landed in the IOLedger (breaking the Fig.-2-style sequential-vs-random
+    bookkeeping for any phase that joined against them).
+    """
+
+    def __init__(self, path: str, ledger: IOLedger,
+                 gauge: Optional[MemoryGauge] = None):
+        self.path = path
+        self.ledger = ledger
+        self.gauge = gauge if gauge is not None else MemoryGauge()
+
+    def iter_blocks(self, block_rows: int,
+                    sequential: bool = True) -> Iterator[Tuple[np.ndarray]]:
+        mm = np.load(self.path, mmap_mode="r")
+        for lo in range(0, mm.shape[0], block_rows):
+            blk = np.asarray(mm[lo : lo + block_rows], np.int64)
+            self.ledger.read(blk.nbytes, sequential)
+            self.gauge.track(blk.shape[0])
+            yield (blk,)
+
+
 class MonotoneLookup:
     """Streaming table lookup for sort-merge-joins: `lookup(keys)` returns
     table[keys - base] for a globally NONDECREASING key stream, reading the
@@ -417,10 +449,13 @@ class MonotoneLookup:
     This is the paper's Alg. 6-7 join half: both the probe stream (sorted
     edges) and the build stream (pv blocks) advance monotonically, so the
     join is two synchronized sequential scans — no random I/O, resident
-    memory one block.
+    memory one block.  Block loads are charged to the stores' ledger through
+    iter_blocks; the output buffer of every `lookup` call is reported to
+    `gauge` so the join's working set is auditable too.
     """
 
-    def __init__(self, stores: Sequence[BlockStore], block_rows: int, base: int = 0):
+    def __init__(self, stores: Sequence[BlockStore], block_rows: int, base: int = 0,
+                 gauge: Optional[MemoryGauge] = None):
         def blocks():
             for s in stores:
                 for (vals,) in s.iter_blocks(block_rows):
@@ -429,9 +464,12 @@ class MonotoneLookup:
         self._blocks = blocks()
         self._g0 = base
         self._vals = np.zeros(0, np.int64)
+        self._gauge = gauge
 
     def lookup(self, keys: np.ndarray) -> np.ndarray:
         out = np.empty(keys.shape[0], np.int64)
+        if self._gauge is not None:
+            self._gauge.track(out.shape[0])
         i = 0
         while i < keys.shape[0]:
             g1 = self._g0 + self._vals.shape[0]

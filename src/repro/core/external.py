@@ -62,6 +62,7 @@ from .phases import (
     attach_pv_buckets,
     csr_bucket_sorted,
     drive_shuffle,
+    load_bucket_csr,
     plain_config,
     pv_store_name,
     validate_external_shape,
@@ -221,7 +222,8 @@ class StreamingGenerator:
             sort_runs(cur, sorted_store, key=1)
             out = RunStore(self.workdir, f"relabeled_p{pass_ix}",
                            self.ledger, gauge=self.gauge, fresh=True)
-            lookup = MonotoneLookup(pv_buckets, block_rows=self.cfg.chunk_edges)
+            lookup = MonotoneLookup(pv_buckets, block_rows=self.cfg.chunk_edges,
+                                    gauge=self.gauge)
             for s, d in merge_runs(sorted_store, key=1,
                                    block_rows=self.cfg.merge_block_rows):
                 out.append_run(lookup.lookup(d), s)
@@ -251,7 +253,8 @@ class StreamingGenerator:
             offv_path, adjv_path = csr_bucket_sorted(
                 self._pcfg, self.workdir, i, ledger=self.ledger,
                 gauge=self.gauge, in_name=store.name)
-            results.append((np.load(offv_path), np.load(adjv_path, mmap_mode="r")))
+            results.append(load_bucket_csr(offv_path, adjv_path,
+                                           self.ledger, self.gauge))
         return results
 
     def build_csr_scatter(self, owners: List[BlockStore]) -> List[Tuple[np.ndarray, np.ndarray]]:

@@ -94,3 +94,20 @@ def rmat_edges_np(
 def rmat_edges_np_cfg(cfg, start: int, count: int) -> Tuple[np.ndarray, np.ndarray]:
     """Config-object convenience (any object with scale/seed/a/b/c/d)."""
     return rmat_edges_np(cfg.scale, cfg.seed, start, count, cfg.a, cfg.b, cfg.c, cfg.d)
+
+
+def walk_rand_np(seed: int, walker: np.ndarray, step: int) -> np.ndarray:
+    """Counter RNG of the random-walk samplers (data/walks.py), keyed by
+    (seed, walker_id, step).  Lives here, jax-free, because the external walk
+    kernels (phases.py) run inside worker processes; data/walks.py aliases
+    this same function so all three samplers share one bit-exact stream."""
+    s = np.uint32(seed & 0xFFFFFFFF)
+    return mix32_np(mix32_np(np.asarray(walker, np.uint32) ^ s)
+                    + np.uint32((step * _GOLDEN) & 0xFFFFFFFF))
+
+
+def walk_start_np(seed: int, walker: np.ndarray, n: int, base: int = 0) -> np.ndarray:
+    """Deterministic start vertex of a walker (numpy half of
+    walks.start_vertex; int64 per the walk dtype contract)."""
+    return base + (walk_rand_np(seed ^ 0xA5A5, walker, 0)
+                   % np.uint32(n)).astype(np.int64)

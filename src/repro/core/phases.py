@@ -49,12 +49,19 @@ from .blockstore import (
     IOLedger,
     MemoryGauge,
     MonotoneLookup,
+    NpyColumnStore,
     clean_store,
     merge_runs,
     partition_runs,
     sort_runs,
 )
-from .hostgen import rmat_edges_np_cfg, round_salt, shuffle_keys
+from .hostgen import (
+    rmat_edges_np_cfg,
+    round_salt,
+    shuffle_keys,
+    walk_rand_np,
+    walk_start_np,
+)
 
 # ---------------------------------------------------------------------------
 # Worker-safe config (GraphConfig carries a jnp dtype; workers get this mirror)
@@ -140,6 +147,44 @@ def relabel_inbox_name(pass_ix: int, j: int) -> str:
 
 def owned_store_name(j: int) -> str:
     return f"owned_b{j:03d}"
+
+
+def csr_offv_path(workdir: str, i: int) -> str:
+    return os.path.join(workdir, f"csr_offv_{i:03d}.npy")
+
+
+def csr_adjv_path(workdir: str, i: int) -> str:
+    return os.path.join(workdir, f"csr_adjv_{i:03d}.npy")
+
+
+def wfront_store_name(t: int, j: int) -> str:
+    """Walker frontier inbox of bucket j at walk step t (multi-writer)."""
+    return f"wfront_s{t:04d}_b{j:03d}"
+
+
+def whist_store_name(s: int, j: int) -> str:
+    """History rows (wid, step=s, vertex) emitted by bucket j (single-writer:
+    written fresh by the kernel that advances step s, so a crashed attempt's
+    partial rows can never leak into a rerun)."""
+    return f"whist_s{s:04d}_b{j:03d}"
+
+
+def whist_inbox_name(j: int) -> str:
+    """Walker-block inbox of the history collect phase (multi-writer)."""
+    return f"whout_b{j:03d}"
+
+
+def load_bucket_csr(offv_path: str, adjv_path: str, ledger: IOLedger,
+                    gauge: Optional[MemoryGauge] = None
+                    ) -> Tuple[np.ndarray, np.ndarray]:
+    """Open one bucket's CSR result files: offsets resident (charged to the
+    ledger — loading them back is I/O too), adjacency as a memmap (charged
+    by whoever streams it)."""
+    offv = np.load(offv_path)
+    ledger.read(offv.nbytes)
+    if gauge is not None:
+        gauge.track(offv.shape[0])
+    return offv, np.load(adjv_path, mmap_mode="r")
 
 
 def attach_pv_buckets(pcfg: PlainCfg, workdir: str, ledger: IOLedger,
@@ -256,7 +301,7 @@ def relabel_apply_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
     sort_runs(inbox, tmp, key=1)
     pv = BlockStore.attach(workdir, pv_store_name(pcfg.rounds, i), ledger,
                            columns=("v",), gauge=gauge)
-    lookup = MonotoneLookup([pv], block_rows=chunk, base=i * B)
+    lookup = MonotoneLookup([pv], block_rows=chunk, base=i * B, gauge=gauge)
     out = BlockStore(workdir, edges_store_name(i, pass_ix), ledger, gauge=gauge, fresh=True)
     for a, b in merge_runs(tmp, key=1, block_rows=pcfg.merge_block_rows):
         out.append_run(lookup.lookup(b), a)
@@ -292,7 +337,7 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     degv = np.zeros(B, np.int64)
     if gauge is not None:
         gauge.track(B)
-    adjv_path = os.path.join(workdir, f"csr_adjv_{i:03d}.npy")
+    adjv_path = csr_adjv_path(workdir, i)
     total = tmp.total_rows()
     adjv = np.lib.format.open_memmap(adjv_path, mode="w+", dtype=np.int64, shape=(total,))
     pos = 0
@@ -304,7 +349,7 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     adjv.flush()
     del adjv
     offv = np.concatenate([[0], np.cumsum(degv)]).astype(np.int64)
-    offv_path = os.path.join(workdir, f"csr_offv_{i:03d}.npy")
+    offv_path = csr_offv_path(workdir, i)
     np.save(offv_path, offv)
     ledger.write(offv.nbytes)
     tmp.destroy()
@@ -322,6 +367,246 @@ def drive_shuffle(pcfg: PlainCfg, workdir: str, map_kernel) -> None:
         for j in range(pcfg.nb):
             clean_store(workdir, pv_store_name(r + 1, j))
         map_kernel("shuffle_round", [(i, r) for i in range(pcfg.nb)])
+
+
+# ---------------------------------------------------------------------------
+# Out-of-core random walks (the redistribute phase re-run once per hop)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class WalkCfg:
+    """Picklable walk-corpus parameters (the walk twin of PlainCfg).
+
+    Walk semantics are the data/walks.py contract: counter RNG keyed by
+    (seed, walker_id, step), sink vertices teleport to rand % n, histories
+    are int64.  `out_name` is the corpus memmap written into the workdir,
+    shape [num_walkers, length + 1]."""
+
+    num_walkers: int
+    length: int
+    seed: int = 0
+    out_name: str = "walks.npy"
+
+
+def walker_block(wcfg: WalkCfg, nb: int, j: int) -> Tuple[int, int]:
+    """Walker-id range [w0, w1) whose history bucket j collects (blocks of
+    ceil(W/nb) ids; owner(w) = w // block)."""
+    wpb = -(-wcfg.num_walkers // nb)
+    return min(j * wpb, wcfg.num_walkers), min((j + 1) * wpb, wcfg.num_walkers)
+
+
+def _gather_adjv(adjv_mm: np.ndarray, idx: np.ndarray, chunk: int,
+                 ledger: IOLedger, gauge: MemoryGauge) -> np.ndarray:
+    """adjv[idx] for idx sorted by CSR row (the frontier's sort order), read
+    as a strictly-forward scan of <=chunk-row blocks.  Within one row walkers
+    land at random offsets, but rows are nondecreasing, so every block load
+    moves forward — sequential I/O, bounded memory, and all of it ledgered."""
+    order = np.argsort(idx, kind="stable")
+    si = idx[order]
+    out = np.empty(idx.shape[0], np.int64)
+    i = 0
+    while i < si.size:
+        lo = int(si[i])
+        hi_ix = int(np.searchsorted(si, lo + chunk, side="left"))
+        hi = int(si[hi_ix - 1]) + 1
+        blk = np.asarray(adjv_mm[lo:hi], np.int64)
+        ledger.read(blk.nbytes)
+        gauge.track(blk.shape[0])
+        out[order[i:hi_ix]] = blk[si[i:hi_ix] - lo]
+        i = hi_ix
+    return out
+
+
+def walk_init_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
+                     ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Launch bucket j's walker block: deterministic start vertices, step-0
+    history rows, and the step-0 frontier exchange (partition_runs to the
+    owner bucket of each start — paper Alg. 8 with walkers for edges)."""
+    gauge = gauge if gauge is not None else MemoryGauge()
+    B, chunk = pcfg.bucket_size, pcfg.chunk_edges
+    w0, w1 = walker_block(wcfg, pcfg.nb, j)
+    hist = BlockStore(workdir, whist_store_name(0, j), ledger,
+                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
+    adv = BlockStore(workdir, f"wadv_init_b{j:03d}", ledger,
+                     columns=("pos", "wid"), gauge=gauge, fresh=True)
+    for lo in range(w0, w1, chunk):
+        hi = min(lo + chunk, w1)
+        wid = np.arange(lo, hi, dtype=np.int64)
+        pos = walk_start_np(wcfg.seed, wid.astype(np.uint32), pcfg.n)
+        hist.append_run(wid, np.zeros(wid.size, np.int64), pos)
+        adv.append_run(pos, wid)
+    outs = [
+        BlockStore(workdir, wfront_store_name(0, d), ledger,
+                   columns=("pos", "wid"), gauge=gauge)
+        for d in range(pcfg.nb)
+    ]
+    partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
+    adv.destroy()
+
+
+def walk_hop_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg, *,
+                    ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Advance every walker currently owned by bucket j one hop (step t+1).
+
+    The paper's discipline applied to traversal: (i) external-sort the
+    frontier inbox by current vertex, (ii) sort-merge-join it against the
+    bucket's CSR — offv probed through two MonotoneLookups (row starts and
+    row ends both advance monotonically), adjv gathered as a forward scan —
+    and (iii) partition the advanced walkers to their new owner's step-t+1
+    inbox.  Every access is a bounded sequential block; no random CSR I/O.
+    """
+    gauge = gauge if gauge is not None else MemoryGauge()
+    B, chunk, n = pcfg.bucket_size, pcfg.chunk_edges, pcfg.n
+    base = j * B
+    front = BlockStore.attach(workdir, wfront_store_name(t, j), ledger,
+                              columns=("pos", "wid"), gauge=gauge)
+    tmp = BlockStore(workdir, wfront_store_name(t, j) + "_sorted", ledger,
+                     columns=("pos", "wid"), gauge=gauge, fresh=True)
+    sort_runs(front, tmp, key=0)
+    offv_file = csr_offv_path(workdir, j)
+    # Two independent offv cursors, one per row end: a single interleaved
+    # probe stream (row, row+1, row', row'+1, ...) is NOT monotone when
+    # consecutive walkers share a vertex (5,6,5,6), so the 2x offv scan is
+    # the price of keeping each stream strictly nondecreasing.
+    lk_lo = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
+                           block_rows=chunk, gauge=gauge)
+    lk_hi = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
+                           block_rows=chunk, gauge=gauge)
+    adjv_mm = np.load(csr_adjv_path(workdir, j), mmap_mode="r")
+    hist = BlockStore(workdir, whist_store_name(t + 1, j), ledger,
+                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
+    adv = None
+    if t + 1 < wcfg.length:
+        adv = BlockStore(workdir, f"wadv_s{t:04d}_b{j:03d}", ledger,
+                         columns=("pos", "wid"), gauge=gauge, fresh=True)
+    for pos, wid in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows):
+        row = pos - base
+        start = lk_lo.lookup(row)
+        end = lk_hi.lookup(row + 1)
+        deg = end - start
+        r = walk_rand_np(wcfg.seed, wid.astype(np.uint32), t + 1).astype(np.int64)
+        sink = deg == 0
+        idx = start + np.where(sink, 0, r % np.maximum(deg, 1))
+        nxt = np.where(sink, r % n, 0).astype(np.int64)
+        live = ~sink
+        if live.any():
+            nxt[live] = _gather_adjv(adjv_mm, idx[live], chunk, ledger, gauge)
+        hist.append_run(wid, np.full(wid.size, t + 1, np.int64), nxt)
+        if adv is not None:
+            adv.append_run(nxt, wid)
+    if adv is not None:
+        outs = [
+            BlockStore(workdir, wfront_store_name(t + 1, d), ledger,
+                       columns=("pos", "wid"), gauge=gauge)
+            for d in range(pcfg.nb)
+        ]
+        partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
+        adv.destroy()
+    tmp.destroy()
+
+
+def walk_hist_scatter_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
+                             ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Collect phase, scatter half: ship every history row bucket j emitted
+    to the walker-block owner of its walker id."""
+    gauge = gauge if gauge is not None else MemoryGauge()
+    wpb = -(-wcfg.num_walkers // pcfg.nb)
+    outs = [
+        BlockStore(workdir, whist_inbox_name(d), ledger,
+                   columns=("wid", "step", "v"), gauge=gauge)
+        for d in range(pcfg.nb)
+    ]
+    for s in range(wcfg.length + 1):
+        src = BlockStore.attach(workdir, whist_store_name(s, j), ledger,
+                                columns=("wid", "step", "v"), gauge=gauge)
+        partition_runs(src, outs, lambda w, st, v: w // wpb,
+                       tag_prefix=f"{j:03d}_{s:04d}")
+
+
+def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
+                            ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+    """Collect phase, join half: external-sort bucket j's inbox by the flat
+    key wid*(L+1)+step; the merged stream covers exactly the walker block's
+    cells once each, so writing it out is one sequential pass over the
+    block's slice of the corpus memmap."""
+    gauge = gauge if gauge is not None else MemoryGauge()
+    L = wcfg.length
+
+    def key(w, s, v):
+        return w * (L + 1) + s
+
+    inbox = BlockStore.attach(workdir, whist_inbox_name(j), ledger,
+                              columns=("wid", "step", "v"), gauge=gauge)
+    tmp = BlockStore(workdir, whist_inbox_name(j) + "_sorted", ledger,
+                     columns=("wid", "step", "v"), gauge=gauge, fresh=True)
+    sort_runs(inbox, tmp, key=key)
+    out = np.load(os.path.join(workdir, wcfg.out_name), mmap_mode="r+")
+    flat = out.reshape(-1)
+    for w, s, v in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows):
+        flat[w * (L + 1) + s] = v
+        ledger.write(v.nbytes)
+    out.flush()
+    del out
+    tmp.destroy()
+
+
+def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
+                orchestrator: "PhaseOrchestrator") -> str:
+    """The walk phase loop, shared by the inline driver (data/walks.py's
+    external_walks) and PartitionedGenerator.walk_corpus.  `map_kernel` is
+    the barrier, exactly as in drive_shuffle.  Requires the csr_sorted phase
+    outputs (csr_offv_*/csr_adjv_* bucket files) in `workdir`.
+
+    Resume discipline: each phase pre-cleans its own multi-writer outputs
+    (stale runs from a crashed attempt) and the PREVIOUS phase's consumed
+    frontier — inputs are never destroyed by the phase that reads them, so a
+    phase can always be rerun after a mid-phase crash.  walk_gc reclaims
+    everything once the corpus memmap is on disk.
+    """
+    nb, L = pcfg.nb, wcfg.length
+    orch = orchestrator
+    mark = lambda _res: {"done": True}  # noqa: E731  (filesystem is the manifest)
+    skip = lambda _m: None              # noqa: E731
+
+    def _init():
+        for d in range(nb):
+            clean_store(workdir, wfront_store_name(0, d))
+        map_kernel("walk_init", [(j, wcfg) for j in range(nb)])
+
+    orch.run_phase("walk_init", _init, save=mark, load=skip)
+    for t in range(L):
+        def _hop(t=t):
+            if t > 0:
+                for d in range(nb):
+                    clean_store(workdir, wfront_store_name(t - 1, d))
+            for d in range(nb):
+                clean_store(workdir, wfront_store_name(t + 1, d))
+            map_kernel("walk_hop", [(j, t, wcfg) for j in range(nb)])
+
+        orch.run_phase(f"walk_hop_{t:04d}", _hop, save=mark, load=skip)
+    out_path = os.path.join(workdir, wcfg.out_name)
+
+    def _collect():
+        for d in range(nb):
+            clean_store(workdir, whist_inbox_name(d))
+        out = np.lib.format.open_memmap(out_path, mode="w+", dtype=np.int64,
+                                        shape=(wcfg.num_walkers, L + 1))
+        del out
+        map_kernel("walk_hist_scatter", [(j, wcfg) for j in range(nb)])
+        map_kernel("walk_hist_gather", [(j, wcfg) for j in range(nb)])
+
+    orch.run_phase("walk_collect", _collect, save=mark, load=skip)
+
+    def _gc():
+        for d in range(nb):
+            for t in range(L + 1):
+                clean_store(workdir, wfront_store_name(t, d))
+                clean_store(workdir, whist_store_name(t, d))
+            clean_store(workdir, whist_inbox_name(d))
+
+    orch.run_phase("walk_gc", _gc, save=mark, load=skip)
+    return out_path
 
 
 # ---------------------------------------------------------------------------
@@ -348,12 +633,15 @@ class PhaseOrchestrator:
     """
 
     def __init__(self, workdir: str, ledger: IOLedger, checkpoint: bool = False,
-                 config_key: Optional[str] = None):
+                 config_key: Optional[str] = None, state_name: str = "phases.json"):
+        # `state_name` separates checkpoint namespaces sharing one workdir
+        # (the walk pipeline resumes independently of the generation pipeline
+        # whose CSR it reads — see drive_walks).
         self.workdir = workdir
         self.ledger = ledger
         self.checkpoint = checkpoint
         self.records: List[PhaseRecord] = []
-        self._state_path = os.path.join(workdir, "phases.json")
+        self._state_path = os.path.join(workdir, state_name)
         self._config_key = config_key
         self._completed: Dict[str, Dict] = {}
         if checkpoint and os.path.exists(self._state_path):
@@ -426,6 +714,10 @@ _KERNELS = {
     "relabel_apply": relabel_apply_bucket,
     "redistribute": redistribute_bucket,
     "csr_sorted": csr_bucket_sorted,
+    "walk_init": walk_init_bucket,
+    "walk_hop": walk_hop_bucket,
+    "walk_hist_scatter": walk_hist_scatter_bucket,
+    "walk_hist_gather": walk_hist_gather_bucket,
 }
 
 
@@ -526,11 +818,26 @@ class PartitionedGenerator:
         orch.run_phase("redistribute", _redistribute)
         paths = orch.run_phase("csr_sorted", lambda: self._map("csr_sorted", [(i,) for i in range(nb)]))
         self.close()
-        csr = [
-            (np.load(offv_path), np.load(adjv_path, mmap_mode="r"))
-            for offv_path, adjv_path in paths
-        ]
+        csr = [load_bucket_csr(offv_path, adjv_path, self.ledger, self.gauge)
+               for offv_path, adjv_path in paths]
         return csr, self.ledger
 
     def pv_buckets(self) -> List[BlockStore]:
         return attach_pv_buckets(self.pcfg, self.workdir, self.ledger, self.gauge)
+
+    def walk_corpus(self, num_walkers: int, length: int, seed: int = 0,
+                    out_name: str = "walks.npy",
+                    checkpoint: bool = False) -> np.ndarray:
+        """Out-of-core walk corpus [num_walkers, length+1] over this
+        generator's CSR bucket files — the walk-frontier exchange running
+        through the same worker pool and `{sender}_{seq}` filesystem
+        transport as generation.  Requires run() to have completed (the
+        csr_sorted phase writes the bucket CSR files the hops join against).
+        Bit-identical to data/walks.host_walks on the assembled CSR."""
+        wcfg = WalkCfg(num_walkers=num_walkers, length=length, seed=seed,
+                       out_name=out_name)
+        orch = PhaseOrchestrator(self.workdir, self.ledger, checkpoint=checkpoint,
+                                 state_name="walk_phases.json",
+                                 config_key=repr((self.pcfg, wcfg)))
+        path = drive_walks(self.pcfg, self.workdir, wcfg, self._map, orch)
+        return np.load(path, mmap_mode="r")

@@ -1,2 +1,8 @@
-from .loader import LoaderConfig, WalkLoader  # noqa: F401
-from .walks import distributed_walks, host_walks, walks_to_tokens  # noqa: F401
+from .loader import ExternalWalkLoader, LoaderConfig, WalkLoader  # noqa: F401
+from .walks import (  # noqa: F401
+    concat_bucket_csr,
+    distributed_walks,
+    external_walks,
+    host_walks,
+    walks_to_tokens,
+)

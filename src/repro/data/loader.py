@@ -6,15 +6,25 @@ checkpoint consumes exactly the batches it would have seen without the
 failure — no data-order drift across restarts (and no loader state to
 checkpoint at all).  This is the data-side half of fault tolerance.
 
-The loader samples with the host sampler by default (sequential CSR access,
-memmap-friendly — the paper's external-memory tier); mesh/sharding hooks
-place each global batch over the dp axes.
+Two loaders share that contract:
+
+  WalkLoader          samples each batch on demand with the host sampler
+                      (sequential CSR access over a resident/memmapped CSR);
+  ExternalWalkLoader  streams batches out of an external_walks corpus memmap
+                      built from the disk tier's CSR bucket files — neither
+                      the CSR nor the corpus is ever resident, so token
+                      batches flow from graphs that never fit in RAM.
+                      Batch b equals WalkLoader's batch b (same CSR layout)
+                      while (b+1)*batch_size <= num_walkers; past that the
+                      corpus wraps around.
+
+Mesh/sharding hooks place each global batch over the dp axes.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, Optional
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -23,7 +33,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..core.csr import CSRShards, csr_to_host
 from ..core.types import GraphConfig
-from .walks import host_walks, start_vertex, walks_to_tokens
+from .walks import external_walks, host_walks, start_vertex, walks_to_tokens
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,18 +44,39 @@ class LoaderConfig:
     seed: int = 0
 
 
+def _batch_sharding(mesh: Optional[Mesh]) -> Optional[NamedSharding]:
+    """Placement of a global batch over the data axes (both loaders)."""
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, P(tuple(a for a in mesh.axis_names
+                                       if a != "model")))
+
+
+def _package_batch(tokens: np.ndarray, labels: np.ndarray,
+                   sharding: Optional[NamedSharding]) -> Dict[str, jnp.ndarray]:
+    out = {"tokens": tokens, "labels": labels}
+    if sharding is not None:
+        return {k: jax.device_put(v, sharding) for k, v in out.items()}
+    return {k: jnp.asarray(v) for k, v in out.items()}
+
+
 class WalkLoader:
     """Deterministic batches of random-walk token sequences."""
 
-    def __init__(self, graph_cfg: GraphConfig, csr: CSRShards,
-                 cfg: LoaderConfig, mesh: Optional[Mesh] = None):
+    def __init__(self, graph_cfg: GraphConfig, csr: Optional[CSRShards],
+                 cfg: LoaderConfig, mesh: Optional[Mesh] = None,
+                 host_csr: Optional[Tuple[np.ndarray, np.ndarray]] = None):
+        # `host_csr` takes a pre-assembled (offv, adjv) pair — e.g. the disk
+        # tier's bucket CSR via walks.concat_bucket_csr — in place of device
+        # CSRShards (within-row adjacency order differs between the two
+        # pipelines, and walks are order-sensitive, so parity comparisons
+        # must pin the layout).
         self.gcfg = graph_cfg
         self.cfg = cfg
-        self.offv, self.adjv = csr_to_host(csr, graph_cfg)
+        self.offv, self.adjv = (host_csr if host_csr is not None
+                                else csr_to_host(csr, graph_cfg))
         self.mesh = mesh
-        self._sharding = (
-            NamedSharding(mesh, P(tuple(a for a in mesh.axis_names if a != "model")))
-            if mesh is not None else None)
+        self._sharding = _batch_sharding(mesh)
 
     def batch(self, step: int) -> Dict[str, jnp.ndarray]:
         """{tokens [B,S], labels [B,S]} for train step `step` (pure fn)."""
@@ -56,12 +87,45 @@ class WalkLoader:
         walks = host_walks(self.offv, self.adjv, starts, c.seq_len,
                            c.seed, n=self.gcfg.n, walker_ids=wid)
         tokens, labels = walks_to_tokens(walks, c.vocab)
-        out = {"tokens": tokens, "labels": labels}
-        if self._sharding is not None:
-            out = {k: jax.device_put(v, self._sharding) for k, v in out.items()}
-        else:
-            out = {k: jnp.asarray(v) for k, v in out.items()}
-        return out
+        return _package_batch(tokens, labels, self._sharding)
+
+    def __iter__(self):
+        step = 0
+        while True:
+            yield self.batch(step)
+            step += 1
+
+
+class ExternalWalkLoader:
+    """Deterministic walk-token batches from an out-of-core corpus.
+
+    Builds (or, with checkpoint=True, resumes) an external_walks corpus of
+    `num_walkers` walks over the CSR bucket files in `workdir`, then serves
+    batch(step) as rows [step*B : (step+1)*B) of the memmap (mod W) — the
+    same pure-function-of-step contract as WalkLoader, with the CSR on disk
+    the whole time.  Walk length is seq_len (tokens drop the last vertex's
+    label shift, exactly like WalkLoader).
+    """
+
+    def __init__(self, graph_cfg: GraphConfig, workdir: str, cfg: LoaderConfig,
+                 *, num_walkers: int, mesh: Optional[Mesh] = None,
+                 checkpoint: bool = True):
+        self.gcfg = graph_cfg
+        self.cfg = cfg
+        self.result = external_walks(
+            graph_cfg, workdir, num_walkers=num_walkers, length=cfg.seq_len,
+            seed=cfg.seed, checkpoint=checkpoint)
+        self.walks = self.result.walks
+        self.mesh = mesh
+        self._sharding = _batch_sharding(mesh)
+
+    def batch(self, step: int) -> Dict[str, jnp.ndarray]:
+        """{tokens [B,S], labels [B,S]} for train step `step` (pure fn)."""
+        c = self.cfg
+        W = self.walks.shape[0]
+        wid = (np.int64(step) * c.batch_size + np.arange(c.batch_size)) % W
+        tokens, labels = walks_to_tokens(np.asarray(self.walks[wid]), c.vocab)
+        return _package_batch(tokens, labels, self._sharding)
 
     def __iter__(self):
         step = 0

@@ -1,0 +1,226 @@
+"""Out-of-core random walks: oracle parity, bounded memory, resumability.
+
+The external sampler (data/walks.external_walks + the walk kernels in
+core/phases.py) must be bit-identical to the host oracle on the same CSR
+layout, keep its working set independent of graph size, do zero random I/O,
+and survive a mid-corpus crash without changing a single byte of output.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import IOLedger, MemoryGauge
+from repro.core.external import StreamingGenerator
+from repro.core.phases import PartitionedGenerator, _KERNELS
+from repro.core.types import GraphConfig
+from repro.data import ExternalWalkLoader, LoaderConfig, WalkLoader
+from repro.data.walks import (
+    concat_bucket_csr, external_walks, host_walks, start_vertex)
+
+
+def _external_graph(cfg, workdir):
+    """Generate via the disk tier and return the assembled oracle CSR."""
+    _, csr, _ = StreamingGenerator(cfg, workdir).run()
+    return concat_bucket_csr(csr)
+
+
+def _oracle(offv, adjv, n, W, L, seed):
+    wid = np.arange(W, dtype=np.uint32)
+    starts = start_vertex(seed, wid, n)
+    return host_walks(offv, adjv, starts, L, seed, n=n, walker_ids=wid)
+
+
+# ---------------------------------------------------------------------------
+# oracle parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("scale,nb,edge_factor,seed,W,L", [
+    (8, 1, 4, 0, 13, 6),        # single bucket (degenerate exchange)
+    (9, 4, 4, 1, 64, 10),       # multi-bucket, generic
+    (9, 4, 1, 2, 50, 12),       # sink-heavy: edge_factor 1 leaves deg-0 rows
+    (10, 8, 2, 3, 33, 7),       # walkers not divisible by nb
+])
+def test_external_walks_match_host_oracle(tmp_path, scale, nb, edge_factor,
+                                          seed, W, L):
+    cfg = GraphConfig(scale=scale, nb=nb, chunk_edges=256,
+                      edge_factor=edge_factor, shuffle_variant="external")
+    offv, adjv = _external_graph(cfg, str(tmp_path))
+    ref = _oracle(offv, adjv, cfg.n, W, L, seed)
+    res = external_walks(cfg, str(tmp_path), num_walkers=W, length=L, seed=seed)
+    assert res.walks.dtype == np.int64 == ref.dtype
+    np.testing.assert_array_equal(np.asarray(res.walks), ref)
+
+
+def test_external_walks_exercises_sink_teleport(tmp_path):
+    """The sink-heavy config must actually hit the teleport branch — a walk
+    leaving a deg-0 vertex can land anywhere, and both samplers must agree."""
+    cfg = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=1,
+                      shuffle_variant="external")
+    offv, adjv = _external_graph(cfg, str(tmp_path))
+    deg = np.diff(offv)
+    assert (deg == 0).any(), "config no longer produces sink vertices"
+    W, L, seed = 40, 15, 7
+    ref = _oracle(offv, adjv, cfg.n, W, L, seed)
+    visited_sink = (deg[ref[:, :-1]] == 0)
+    assert visited_sink.any(), "no walk ever visited a sink"
+    res = external_walks(cfg, str(tmp_path), num_walkers=W, length=L, seed=seed)
+    np.testing.assert_array_equal(np.asarray(res.walks), ref)
+
+
+def test_external_walks_seed_sensitivity(tmp_path):
+    cfg = GraphConfig(scale=8, nb=2, chunk_edges=256, edge_factor=4,
+                      shuffle_variant="external")
+    _external_graph(cfg, str(tmp_path))
+    a = np.asarray(external_walks(cfg, str(tmp_path), num_walkers=16, length=8,
+                                  seed=1, out_name="wa.npy").walks)
+    b = np.asarray(external_walks(cfg, str(tmp_path), num_walkers=16, length=8,
+                                  seed=2, out_name="wb.npy").walks)
+    assert (a != b).any()
+
+
+# ---------------------------------------------------------------------------
+# bounded memory + sequential I/O
+# ---------------------------------------------------------------------------
+
+
+def test_external_walks_bounded_memory_and_sequential(tmp_path):
+    """Peak resident rows are O(chunk_edges + walkers_per_bucket) — the bound
+    has no n in it, and the measured peak at 4x the graph size is no larger
+    than at 1x.  All walk I/O is sequential."""
+    chunk, nb, W, L = 256, 4, 64, 8
+    peaks = {}
+    for scale in (10, 12):
+        cfg = GraphConfig(scale=scale, nb=nb, chunk_edges=chunk, edge_factor=2,
+                          shuffle_variant="external")
+        d = str(tmp_path / f"s{scale}")
+        _external_graph(cfg, d)
+        gauge, ledger = MemoryGauge(), IOLedger()
+        res = external_walks(cfg, d, num_walkers=W, length=L, seed=0,
+                             ledger=ledger, gauge=gauge)
+        assert res.walks.shape == (W, L + 1)
+        wpb = -(-W // nb)
+        assert gauge.peak_rows <= 4 * (chunk + wpb)
+        assert gauge.peak_rows < cfg.n
+        assert ledger.rand_reads == 0 == ledger.rand_writes
+        peaks[scale] = gauge.peak_rows
+    # independence of graph size: 4x the vertices, same working set
+    assert peaks[12] <= peaks[10]
+
+
+def test_walk_phase_ledger_deltas_sum_to_total(tmp_path):
+    cfg = GraphConfig(scale=9, nb=2, chunk_edges=256, edge_factor=2,
+                      shuffle_variant="external")
+    _external_graph(cfg, str(tmp_path))
+    res = external_walks(cfg, str(tmp_path), num_walkers=20, length=5, seed=0)
+    report = res.orchestrator.report()
+    assert [r["phase"] for r in report][:2] == ["walk_init", "walk_hop_0000"]
+    for field in ("seq_reads", "seq_writes", "bytes_read", "bytes_written"):
+        assert sum(r[field] for r in report) == getattr(res.ledger, field)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint / resume
+# ---------------------------------------------------------------------------
+
+
+def test_external_walks_checkpoint_resume_mid_corpus(tmp_path):
+    """Kill the pipeline inside hop 3, resume, and require the corpus to be
+    byte-for-byte the uninterrupted one — hops before the crash replay from
+    the checkpoint, the crashed hop reruns over its pre-cleaned stores."""
+    cfg = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=2,
+                      shuffle_variant="external")
+    kw = dict(num_walkers=23, length=6, seed=9, checkpoint=True)
+    d1, d2 = str(tmp_path / "a"), str(tmp_path / "b")
+    _external_graph(cfg, d1)
+    _external_graph(cfg, d2)
+    full = np.asarray(external_walks(cfg, d1, **kw).walks).copy()
+
+    orig = _KERNELS["walk_hop"]
+
+    def crashing_hop(pcfg, workdir, j, t, wcfg, **kws):
+        if t == 3 and j == 2:
+            raise RuntimeError("injected mid-walk crash")
+        return orig(pcfg, workdir, j, t, wcfg, **kws)
+
+    _KERNELS["walk_hop"] = crashing_hop
+    try:
+        with pytest.raises(RuntimeError, match="injected"):
+            external_walks(cfg, d2, **kw)
+    finally:
+        _KERNELS["walk_hop"] = orig
+
+    res = external_walks(cfg, d2, **kw)
+    statuses = {r["phase"]: r["status"] for r in res.orchestrator.report()}
+    for done_phase in ("walk_init", "walk_hop_0000", "walk_hop_0001",
+                      "walk_hop_0002"):
+        assert statuses[done_phase] == "resumed", statuses
+    assert statuses["walk_hop_0003"] == "done", statuses
+    np.testing.assert_array_equal(np.asarray(res.walks), full)
+
+
+def test_external_walks_checkpoint_invalidated_on_walk_config_change(tmp_path):
+    """A walk checkpoint taken under a different (seed, W, L) must not be
+    resumed — and it must not disturb the GENERATOR's own checkpoint, which
+    lives in a separate state file."""
+    cfg = GraphConfig(scale=9, nb=2, chunk_edges=256, edge_factor=2,
+                      shuffle_variant="external", checkpoint_phases=True)
+    offv, adjv = _external_graph(cfg, str(tmp_path))
+    external_walks(cfg, str(tmp_path), num_walkers=16, length=5, seed=1,
+                   checkpoint=True)
+    res = external_walks(cfg, str(tmp_path), num_walkers=16, length=5, seed=2,
+                         checkpoint=True)
+    assert all(r["status"] == "done" for r in res.orchestrator.report())
+    np.testing.assert_array_equal(
+        np.asarray(res.walks), _oracle(offv, adjv, cfg.n, 16, 5, 2))
+    # the generator still resumes from its own phases.json
+    g = StreamingGenerator(cfg, str(tmp_path))
+    g.run()
+    assert {r["phase"]: r["status"] for r in g.orchestrator.report()}[
+        "shuffle"] == "resumed"
+
+
+# ---------------------------------------------------------------------------
+# partitioned mode
+# ---------------------------------------------------------------------------
+
+
+def test_partitioned_walk_corpus_matches_oracle(tmp_path):
+    cfg = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=2,
+                      shuffle_variant="external")
+    part = PartitionedGenerator(cfg, str(tmp_path), max_workers=0)
+    csr, _ = part.run()
+    offv, adjv = concat_bucket_csr(csr)
+    walks = np.asarray(part.walk_corpus(31, 9, seed=4))
+    np.testing.assert_array_equal(walks, _oracle(offv, adjv, cfg.n, 31, 9, 4))
+
+
+# ---------------------------------------------------------------------------
+# loader
+# ---------------------------------------------------------------------------
+
+
+def test_external_walk_loader_matches_walk_loader(tmp_path):
+    """Same CSR layout, same LoaderConfig => identical batches while the
+    corpus covers the step range; beyond it the loader wraps (still pure)."""
+    cfg = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=2,
+                      shuffle_variant="external")
+    offv, adjv = _external_graph(cfg, str(tmp_path))
+    lcfg = LoaderConfig(batch_size=4, seq_len=12, vocab=64, seed=3)
+    host_ld = WalkLoader(cfg, None, lcfg, host_csr=(offv, adjv))
+    ext_ld = ExternalWalkLoader(cfg, str(tmp_path), lcfg, num_walkers=12,
+                                checkpoint=False)
+    for step in range(3):                       # 3 * 4 == num_walkers
+        a, b = host_ld.batch(step), ext_ld.batch(step)
+        np.testing.assert_array_equal(np.asarray(a["tokens"]),
+                                      np.asarray(b["tokens"]))
+        np.testing.assert_array_equal(np.asarray(a["labels"]),
+                                      np.asarray(b["labels"]))
+    # wrap-around: step 3 re-serves walkers 0..3
+    np.testing.assert_array_equal(np.asarray(ext_ld.batch(3)["tokens"]),
+                                  np.asarray(ext_ld.batch(0)["tokens"]))
+
+
+# Hypothesis property tests for the frontier sort->join->partition round
+# trips live in tests/test_walks_property.py (module-level importorskip —
+# keeping them separate means THIS module still runs without hypothesis).

@@ -1,0 +1,110 @@
+"""Hypothesis property tests on the external walk sampler's primitives:
+frontier sort -> sort-merge-join -> owner partition round trips (the per-hop
+pipeline of data/walks.external_walks, exercised on random inputs)."""
+
+import tempfile
+
+import numpy as np
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.blockstore import (  # noqa: E402
+    BlockStore, IOLedger, MemoryGauge, MonotoneLookup, NpyColumnStore,
+    merge_runs, partition_runs, sort_runs)
+from repro.core.hostgen import walk_rand_np, walk_start_np  # noqa: E402
+
+SETTINGS = settings(max_examples=25, deadline=None)
+
+
+@SETTINGS
+@given(
+    n_walkers=st.integers(1, 200),
+    nb=st.integers(1, 6),
+    log_b=st.integers(2, 6),
+    chunk=st.integers(4, 64),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_frontier_partition_sort_round_trip(n_walkers, nb, log_b, chunk, seed):
+    """partition-by-owner -> per-bucket external sort is lossless: the union
+    of the sorted buckets is the original (pos, wid) multiset, every row
+    lands in its owner bucket, and each bucket streams out pos-sorted."""
+    B = 1 << log_b
+    rng = np.random.default_rng(seed)
+    pos = rng.integers(0, nb * B, n_walkers).astype(np.int64)
+    wid = np.arange(n_walkers, dtype=np.int64)
+    ledger = IOLedger()
+    with tempfile.TemporaryDirectory() as d:
+        src = BlockStore(d, "front", ledger, columns=("pos", "wid"))
+        for lo in range(0, n_walkers, chunk):
+            src.append_run(pos[lo:lo + chunk], wid[lo:lo + chunk])
+        outs = [BlockStore(d, f"b{j}", ledger, columns=("pos", "wid"))
+                for j in range(nb)]
+        partition_runs(src, outs, lambda p, w: p // B)
+        got = []
+        for j, out in enumerate(outs):
+            srt = BlockStore(d, f"s{j}", ledger, columns=("pos", "wid"))
+            sort_runs(out, srt, key=0)
+            blocks = list(merge_runs(srt, key=0, block_rows=chunk))
+            if not blocks:
+                continue
+            p = np.concatenate([b[0] for b in blocks])
+            w = np.concatenate([b[1] for b in blocks])
+            assert (p // B == j).all()          # ownership
+            assert (np.diff(p) >= 0).all()      # sorted stream
+            got.append(np.stack([p, w], 1))
+        got = np.concatenate(got) if got else np.zeros((0, 2), np.int64)
+        order_got = np.lexsort((got[:, 0], got[:, 1]))
+        order_ref = np.lexsort((pos, wid))
+        np.testing.assert_array_equal(got[order_got][:, 0], pos[order_ref])
+        np.testing.assert_array_equal(got[order_got][:, 1], wid[order_ref])
+    assert ledger.rand_reads == 0 == ledger.rand_writes
+
+
+@SETTINGS
+@given(
+    rows=st.integers(1, 120),
+    probes=st.integers(1, 300),
+    block=st.integers(1, 32),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_monotone_lookup_join_matches_gather(rows, probes, block, seed):
+    """The offv sort-merge-join half: MonotoneLookup over an NpyColumnStore
+    equals a direct table gather for any nondecreasing probe stream, charges
+    every block load to the ledger, and reports its buffers to the gauge."""
+    rng = np.random.default_rng(seed)
+    table = rng.integers(0, 1 << 40, rows).astype(np.int64)
+    keys = np.sort(rng.integers(0, rows, probes)).astype(np.int64)
+    ledger, gauge = IOLedger(), MemoryGauge()
+    with tempfile.TemporaryDirectory() as d:
+        path = f"{d}/offv.npy"
+        np.save(path, table)
+        lk = MonotoneLookup([NpyColumnStore(path, ledger, gauge)],
+                            block_rows=block, gauge=gauge)
+        cut = probes // 2
+        got = np.concatenate([lk.lookup(keys[:cut]), lk.lookup(keys[cut:])])
+    np.testing.assert_array_equal(got, table[keys])
+    assert ledger.bytes_read > 0 and ledger.rand_reads == 0
+    assert gauge.peak_rows <= max(block, probes)
+
+
+@SETTINGS
+@given(
+    walkers=st.integers(1, 64),
+    seed=st.integers(0, 2**31 - 1),
+    step=st.integers(0, 40),
+    log_n=st.integers(1, 20),
+)
+def test_walk_rng_counter_properties(walkers, seed, step, log_n):
+    """The shared walk RNG is a pure counter function: order-independent,
+    and start vertices always land in [0, n)."""
+    wid = np.arange(walkers, dtype=np.uint32)
+    a = walk_rand_np(seed, wid, step)
+    perm = np.random.default_rng(seed).permutation(walkers)
+    b = walk_rand_np(seed, wid[perm], step)
+    np.testing.assert_array_equal(a[perm], b)   # value depends only on (w, t)
+    n = 1 << log_n
+    starts = walk_start_np(seed, wid, n)
+    assert starts.dtype == np.int64
+    assert ((starts >= 0) & (starts < n)).all()
