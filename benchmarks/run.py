@@ -11,6 +11,8 @@ One module per paper table/figure (DESIGN.md §6):
                         per-phase ledger, partitioned-mode wall time
   bench_external_walks  out-of-core walk sampler vs host oracle: hops/s,
                         sequential fraction, peak resident rows
+  bench_merge_fanin     cascaded external merge fan-in sweep: pass-count x
+                        bytes trade-off, bit-identity asserted per point
   bench_lm              substrate sanity: train/serve throughput
   bench_roofline        deliverable (g): render the dry-run roofline table
 """
@@ -32,8 +34,8 @@ def main():
 
     from . import (bench_csr_variants, bench_external_shuffle,
                    bench_external_walks, bench_hash_vs_sort, bench_lm,
-                   bench_roofline, bench_single_node, bench_strong_scaling,
-                   bench_weak_scaling)
+                   bench_merge_fanin, bench_roofline, bench_single_node,
+                   bench_strong_scaling, bench_weak_scaling)
 
     benches = {
         "single_node": lambda: bench_single_node.run(
@@ -50,6 +52,10 @@ def main():
         "external_shuffle": lambda: bench_external_shuffle.run(
             scales=(10, 12) if args.fast else (10, 12, 14),
             worker_counts=(0, 2) if args.fast else (0, 2, 4)),
+        "merge_fanin": lambda: bench_merge_fanin.run(
+            nruns=128 if args.fast else 512,
+            run_rows=512 if args.fast else 2048,
+            fanins=(0, 4, 16) if args.fast else (0, 4, 8, 16, 64, 256)),
         "external_walks": lambda: bench_external_walks.run(
             scales=(9, 10) if args.fast else (10, 12, 14),
             walkers=64 if args.fast else 256,

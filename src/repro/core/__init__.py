@@ -6,7 +6,7 @@ from .types import GraphConfig, owner_of, quadrant_thresholds  # noqa: F401
 from .rmat import rmat_edge_block, mix32, counter_uniform_u32  # noqa: F401
 from .blockstore import (  # noqa: F401
     BlockStore, IOLedger, MemoryGauge, MonotoneLookup,
-    merge_runs, partition_runs, sort_runs,
+    clean_cascade_stores, merge_runs, partition_runs, sort_runs,
 )
 from .phases import PhaseOrchestrator, PartitionedGenerator, plain_config  # noqa: F401
 from .external import StreamingGenerator, RunStore, external_merge, external_sort_runs  # noqa: F401

@@ -13,8 +13,12 @@ reduce to, each with *bounded* main memory and ledger-accounted I/O:
   sort_runs            pass 1 of external merge sort: sort each run in RAM
                        (<= chunk rows at a time), rewrite (paper Alg. 7 l.1-5).
   merge_runs           pass 2: streaming k-way merge over *block-buffered*
-                       cursors — resident memory is num_runs x merge block,
+                       cursors — resident memory is fan-in x merge block,
                        never a whole store (the paper's bounded-buffer merge).
+                       With max_fanin set, stores with more runs than the
+                       fan-in budget cascade through log-depth intermediate
+                       merge passes (STXXL-style multiway merge), so open
+                       files and heap size are bounded at ANY store size.
   partition_runs       bounded-memory bucket partition: stream runs, stable
                        sort each chunk by destination bucket, append slices
                        to per-bucket stores (paper Alg. 8's "append to elp_d,
@@ -284,101 +288,230 @@ def sort_runs(store: BlockStore, out: BlockStore, key: KeySpec = 0) -> BlockStor
 
 
 class _MergeCursor:
-    """Block-buffered read cursor over one sorted run (merge_runs helper)."""
+    """Block-buffered read cursor over one sorted *segment*: an ordered list
+    of run files of a single store that together form one globally sorted
+    sequence — a plain run, or a cascade intermediate store's runs back to
+    back (merge_runs helper).
 
-    __slots__ = ("mm", "rows", "pos", "block_keys", "block_cols", "bstart", "store", "key", "block_rows")
+    At most ONE memmap is held open at a time (run files are streamed back to
+    back and released as they drain), so a k-way merge keeps exactly k run
+    files open no matter how many runs each segment spans.
+    """
 
-    def __init__(self, store: BlockStore, run: int, key: KeySpec, block_rows: int):
+    __slots__ = ("store", "key", "block_rows", "runs", "_ri", "_mm", "_off",
+                 "block_keys", "block_cols", "_rel", "_done")
+
+    def __init__(self, store: BlockStore, runs: Sequence[int], key: KeySpec,
+                 block_rows: int):
         self.store = store
         self.key = key
-        self.block_rows = block_rows
-        self.mm = store.open_run(run)
-        self.rows = self.mm.shape[0]
-        self.pos = 0
-        self.bstart = 0
+        self.block_rows = max(1, int(block_rows))
+        self.runs = [r for r in runs if store.run_rows(r) > 0]
+        self._ri = 0
+        self._mm: Optional[np.ndarray] = None
+        self._off = 0
         self.block_keys: Optional[np.ndarray] = None
         self.block_cols: Optional[Tuple[np.ndarray, ...]] = None
-        if self.rows:
-            self._load(0)
+        self._rel = 0
+        self._done = False
+        self._advance()
 
-    def _load(self, at: int):
-        blk = np.asarray(self.mm[at : at + self.block_rows])
-        self.store.ledger.read(blk.nbytes)
-        self.block_cols = tuple(blk[:, c] for c in range(blk.shape[1]))
-        self.block_keys = _keys_of(self.key, self.block_cols)
-        self.bstart = at
+    def _advance(self):
+        """Load the next block, crossing run-file boundaries; the previous
+        run's memmap reference is dropped as soon as it drains (closes the
+        file — the open-file bound of the bounded-fan-in merge)."""
+        while True:
+            if self._mm is None:
+                if self._ri >= len(self.runs):
+                    self._done = True
+                    self.block_keys = self.block_cols = None
+                    return
+                self._mm = self.store.open_run(self.runs[self._ri])
+                self._off = 0
+            if self._off >= self._mm.shape[0]:
+                self._mm = None
+                self._ri += 1
+                continue
+            blk = np.asarray(self._mm[self._off : self._off + self.block_rows])
+            self.store.ledger.read(blk.nbytes)
+            self._off += blk.shape[0]
+            self.block_cols = tuple(blk[:, c] for c in range(blk.shape[1]))
+            self.block_keys = _keys_of(self.key, self.block_cols)
+            self._rel = 0
+            return
 
     def head_key(self) -> int:
-        rel = self.pos - self.bstart
-        if rel >= self.block_keys.shape[0]:
-            self._load(self.pos)
-            rel = 0
-        return int(self.block_keys[rel])
+        if self._rel >= self.block_keys.shape[0]:
+            self._advance()
+        # Python int: unbounded, so uint64 hash keys >= 2^63 survive the heap.
+        return int(self.block_keys[self._rel])
 
-    def take_below(self, bound: int) -> Optional[Tuple[np.ndarray, ...]]:
-        """Pop the maximal prefix of the current block with key <= bound.
-        Returns None when the block head already exceeds bound."""
-        rel = self.pos - self.bstart
-        if rel >= self.block_keys.shape[0]:
-            self._load(self.pos)
-            rel = 0
-        end = int(np.searchsorted(self.block_keys[rel:], bound, side="right")) + rel
-        if end == rel:
+    def take_below(self, bound: Optional[int],
+                   inclusive: bool) -> Optional[Tuple[np.ndarray, ...]]:
+        """Pop the maximal prefix of the current block with key <= bound
+        (inclusive=True) or key < bound (False — this cursor ranks AFTER the
+        bound's cursor, so keys equal to the bound are not yet its turn: the
+        strict-stability rule that makes equal-key order independent of merge
+        topology).  `bound=None` means "no bound at all" (the final-drain
+        sentinel — a max-int bound would under-drain key dtypes with values
+        above it, e.g. callable uint64 hash keys >= 2^63).  Returns None
+        when the block head already reaches bound."""
+        if self._done:
             return None
-        out = tuple(c[rel:end] for c in self.block_cols)
-        self.pos = self.bstart + end
+        if self._rel >= self.block_keys.shape[0]:
+            self._advance()
+            if self._done:
+                return None
+        if bound is None:
+            end = self.block_keys.shape[0]
+        else:
+            end = int(np.searchsorted(self.block_keys[self._rel :], bound,
+                                      side="right" if inclusive else "left")
+                      ) + self._rel
+        if end == self._rel:
+            return None
+        out = tuple(c[self._rel : end] for c in self.block_cols)
+        self._rel = end
         return out
 
     @property
     def exhausted(self) -> bool:
-        return self.pos >= self.rows
+        if self._done:
+            return True
+        if self._rel < self.block_keys.shape[0]:
+            return False
+        self._advance()
+        return self._done
 
 
-def merge_runs(
-    store: BlockStore, key: KeySpec = 0, block_rows: int = 0
-) -> Iterator[Tuple[np.ndarray, ...]]:
-    """External-sort pass 2: streaming k-way merge of sorted runs.
+def _merge_cursors(cursors: List[_MergeCursor], ncols: int,
+                   flush_rows: int) -> Iterator[Tuple[np.ndarray, ...]]:
+    """STABLE heap merge of sorted segment cursors, ~flush_rows blocks out.
 
-    Resident memory: num_runs x block_rows rows (cursor buffers) + one output
-    block — never the whole store.  block_rows defaults to an even split of
-    the largest run across cursors, so total buffer memory stays around one
-    run regardless of fan-in.  Yields tuples of column arrays in globally
-    sorted order.
+    The winning cursor drains up to the next heap head (key, index) in
+    LEXICOGRAPHIC order — keys equal to the bound belong to this cursor only
+    if its index ranks first — so equal keys are emitted strictly in cursor
+    order.  That stability is what makes the cascaded merge bit-identical to
+    the flat one: equal-key order depends only on run order, never on merge
+    topology or block sizes.  With an empty heap the bound is None (no
+    bound), NOT a max int — see take_below.  Output is flushed inside the
+    drain loop so even a final cursor spanning a huge cascade segment never
+    accumulates more than ~flush_rows resident rows.
     """
-    nruns = store.num_runs
-    if nruns == 0:
-        return
-    max_run = max(store.run_rows(i) for i in range(nruns))
-    if block_rows <= 0:
-        # Split one run's worth of memory across the cursors, so total buffer
-        # memory stays ~one chunk at ANY fan-in (k cursors x max_run/k rows).
-        block_rows = max(1, max_run // nruns)
-    cursors = [_MergeCursor(store, i, key, block_rows) for i in range(nruns)]
-    store.gauge.track(block_rows * nruns)
-    heap = [(c.head_key(), i) for i, c in enumerate(cursors) if c.rows]
+    heap = [(c.head_key(), i) for i, c in enumerate(cursors) if not c.exhausted]
     heapq.heapify(heap)
     out_parts: List[Tuple[np.ndarray, ...]] = []
     out_rows = 0
-    flush_rows = max(block_rows, max_run)
     while heap:
         _, ci = heapq.heappop(heap)
         cur = cursors[ci]
-        bound = heap[0][0] if heap else np.iinfo(np.int64).max
+        bound, inclusive = (heap[0][0], ci < heap[0][1]) if heap else (None, True)
         while True:
-            part = cur.take_below(bound)
+            part = cur.take_below(bound, inclusive)
             if part is None:
                 break
             out_parts.append(part)
             out_rows += part[0].shape[0]
+            if out_rows >= flush_rows:
+                yield tuple(np.concatenate([p[c] for p in out_parts])
+                            for c in range(ncols))
+                out_parts, out_rows = [], 0
             if cur.exhausted:
                 break
         if not cur.exhausted:
             heapq.heappush(heap, (cur.head_key(), ci))
-        if out_rows >= flush_rows:
-            yield tuple(np.concatenate([p[c] for p in out_parts]) for c in range(store.ncols))
-            out_parts, out_rows = [], 0
     if out_parts:
-        yield tuple(np.concatenate([p[c] for p in out_parts]) for c in range(store.ncols))
+        yield tuple(np.concatenate([p[c] for p in out_parts]) for c in range(ncols))
+
+
+CASCADE_MARKER = "__cas_l"  # substring naming cascade intermediate store dirs
+
+
+def clean_cascade_stores(workdir: str) -> None:
+    """Remove leftover cascade intermediate stores from a crashed merge.
+    merge_runs wipes (fresh=True) and destroys its own intermediates; ones
+    that survive a crash are dead weight that must never be mistaken for
+    phase outputs, so resume paths (PhaseOrchestrator) sweep them first."""
+    if not os.path.isdir(workdir):
+        return
+    for d in os.listdir(workdir):
+        if CASCADE_MARKER in d and os.path.isdir(os.path.join(workdir, d)):
+            shutil.rmtree(os.path.join(workdir, d), ignore_errors=True)
+
+
+def merge_runs(
+    store: BlockStore, key: KeySpec = 0, block_rows: int = 0,
+    max_fanin: int = 0,
+) -> Iterator[Tuple[np.ndarray, ...]]:
+    """External-sort pass 2: streaming k-way merge of sorted runs, with a
+    bounded-fan-in cascade (the STXXL-style log-depth multiway merge).
+
+    Flat path (num_runs <= max_fanin, or max_fanin=0): resident memory is
+    fan-in x block_rows rows (cursor buffers) + one output block — never the
+    whole store.  block_rows defaults to an even split of the largest run
+    across the cursors, so total buffer memory stays ~one run at any fan-in.
+
+    Cascade path (max_fanin >= 2 and num_runs > max_fanin): groups of
+    <= max_fanin segments are merged into intermediate stores (sibling dirs
+    named `{store.name}__cas_l{level}_g{group}`, ledger- and gauge-accounted
+    like any other store), recursing until <= max_fanin segments remain for
+    one final streaming merge.  Open run files and heap size are then
+    bounded by max_fanin REGARDLESS of store size — per-cursor blocks stay
+    max_run/max_fanin instead of shrinking to max_run/num_runs — at the cost
+    of O(log_max_fanin(num_runs)) extra sequential read+write passes over
+    the data.  A consumed cascade level is destroyed as soon as the next
+    level is built (and on generator close), so scratch disk is bounded by
+    ~2x the store; output is bit-identical to the flat merge because the
+    merge is STABLE (equal keys emit in run order — see _merge_cursors) and
+    groups are consecutive runs, so cascading never reorders anything.
+
+    Yields tuples of column arrays in globally sorted order; merge_runs over
+    sort_runs output is therefore a stable external sort of the store.
+    """
+    if max_fanin == 1 or max_fanin < 0:
+        raise ValueError(f"max_fanin must be 0 (flat) or >= 2, got {max_fanin}")
+    nruns = store.num_runs
+    if nruns == 0:
+        return
+    max_run = max(store.run_rows(i) for i in range(nruns))
+    flush_rows = max(block_rows, max_run)
+    workdir = os.path.dirname(store.dir)
+    # A segment = (store, ordered run indices) forming one sorted sequence.
+    segments: List[Tuple[BlockStore, List[int]]] = [
+        (store, [i]) for i in range(nruns)]
+    scratch: List[BlockStore] = []
+
+    def cursors_of(segs):
+        fan = len(segs)
+        brows = block_rows if block_rows > 0 else max(1, max_run // max(1, fan))
+        store.gauge.track(brows * fan)
+        return [_MergeCursor(s, runs, key, brows) for s, runs in segs]
+
+    try:
+        level = 0
+        while max_fanin >= 2 and len(segments) > max_fanin:
+            nxt: List[Tuple[BlockStore, List[int]]] = []
+            for g, lo in enumerate(range(0, len(segments), max_fanin)):
+                grp = segments[lo : lo + max_fanin]
+                out = BlockStore(
+                    workdir, f"{store.name}{CASCADE_MARKER}{level}_g{g:04d}",
+                    store.ledger, columns=store.columns, dtype=store.dtype,
+                    gauge=store.gauge, fresh=True)
+                scratch.append(out)
+                for cols in _merge_cursors(cursors_of(grp), store.ncols, flush_rows):
+                    out.append_run(*cols)
+                # This group's input segments are consumed; reclaim the ones
+                # that are cascade intermediates (never the caller's store).
+                for s, _ in grp:
+                    if s is not store:
+                        s.destroy()
+                nxt.append((out, list(range(out.num_runs))))
+            segments = nxt
+            level += 1
+        yield from _merge_cursors(cursors_of(segments), store.ncols, flush_rows)
+    finally:
+        for s in scratch:
+            s.destroy()
 
 
 def partition_runs(
@@ -399,6 +532,13 @@ def partition_runs(
     seq = [0] * nparts
     for cols in store.iter_runs():
         dest = np.asarray(part_of(*cols))
+        if dest.size and (int(dest.min()) < 0 or int(dest.max()) >= nparts):
+            bad = dest[(dest < 0) | (dest >= nparts)]
+            raise ValueError(
+                f"partition_runs: part_of produced bucket {int(bad[0])} outside "
+                f"[0, {nparts}) for {bad.size} record(s) of store "
+                f"'{store.name}' — a bad owner function would silently "
+                "shrink the record stream")
         order = np.argsort(dest, kind="stable")
         cols = tuple(c[order] for c in cols)
         dest = dest[order]
@@ -467,11 +607,24 @@ class MonotoneLookup:
         self._gauge = gauge
 
     def lookup(self, keys: np.ndarray) -> np.ndarray:
+        keys = np.asarray(keys)
+        if keys.size and np.any(keys[1:] < keys[:-1]):
+            i = int(np.argmax(keys[1:] < keys[:-1]))
+            raise ValueError(
+                f"MonotoneLookup probe stream regressed within a call: "
+                f"keys[{i + 1}]={int(keys[i + 1])} < keys[{i}]={int(keys[i])}")
         out = np.empty(keys.shape[0], np.int64)
         if self._gauge is not None:
             self._gauge.track(out.shape[0])
         i = 0
         while i < keys.shape[0]:
+            if keys[i] < self._g0:
+                # A regressed probe would index _vals with a NEGATIVE offset,
+                # wrapping to the wrong table entry instead of erroring.
+                raise ValueError(
+                    f"MonotoneLookup probe stream regressed: key "
+                    f"{int(keys[i])} is below the already-consumed table "
+                    f"prefix ending at {self._g0}")
             g1 = self._g0 + self._vals.shape[0]
             if keys[i] >= g1:
                 try:

@@ -35,6 +35,14 @@ Phase algebra and I/O complexity (paper Alg. 2-11, §III-B):
   csr_scatter   O(b) RANDOM                             (Alg. 10-11 — the Fig. 2 blowup)
   csr_sorted    O(B / C_e) sequential                   (§III-B7 — the predicted fix)
 
+Every external merge above pays an extra O(log_merge_fanin(nruns))-deep
+cascade of sequential read+write passes whenever a store's run count exceeds
+cfg.merge_fanin (blockstore.merge_runs): the bounded-fan-in multiway merge
+trades those log-depth passes for an open-file count and merge heap bounded
+by merge_fanin at ANY store size — with nruns <= merge_fanin (the common
+case at paper scales) the term is zero and the costs are exactly the flat
+merge's.
+
 `StreamingGenerator(cfg, dir).run()` returns (pv memmap, per-bucket CSR,
 ledger); `gen.orchestrator.report()` gives the per-phase ledger deltas that
 benchmarks/bench_csr_variants.py and bench_external_shuffle.py print.
@@ -91,12 +99,14 @@ def external_sort_runs(store: BlockStore, out: BlockStore, key_col: int = 0,
     return sort_runs(store, out, key=key_col)
 
 
-def external_merge(store: BlockStore, key_col: int = 0,
-                   block_rows: int = 0) -> Iterator[Tuple[np.ndarray, ...]]:
+def external_merge(store: BlockStore, key_col: int = 0, block_rows: int = 0,
+                   max_fanin: int = 0) -> Iterator[Tuple[np.ndarray, ...]]:
     """Phase 2: streaming k-way merge of sorted runs (paper's bounded-buffer
     merge, fig. 1).  Resident memory is one chunk split across the run
-    cursors — never the whole store."""
-    return merge_runs(store, key=key_col, block_rows=block_rows)
+    cursors — never the whole store.  `max_fanin` >= 2 bounds the cursor
+    count via the log-depth cascade (see blockstore.merge_runs)."""
+    return merge_runs(store, key=key_col, block_rows=block_rows,
+                      max_fanin=max_fanin)
 
 
 class StreamingGenerator:
@@ -225,7 +235,8 @@ class StreamingGenerator:
             lookup = MonotoneLookup(pv_buckets, block_rows=self.cfg.chunk_edges,
                                     gauge=self.gauge)
             for s, d in merge_runs(sorted_store, key=1,
-                                   block_rows=self.cfg.merge_block_rows):
+                                   block_rows=self.cfg.merge_block_rows,
+                                   max_fanin=self.cfg.merge_fanin):
                 out.append_run(lookup.lookup(d), s)
             sorted_store.destroy()
             if cur is not edges:

@@ -50,6 +50,7 @@ from .blockstore import (
     MemoryGauge,
     MonotoneLookup,
     NpyColumnStore,
+    clean_cascade_stores,
     clean_store,
     merge_runs,
     partition_runs,
@@ -83,6 +84,7 @@ class PlainCfg:
     chunk_edges: int
     rounds: int
     merge_block_rows: int = 0
+    merge_fanin: int = 64
 
     @property
     def n(self) -> int:
@@ -108,9 +110,13 @@ def plain_config(cfg) -> PlainCfg:
         a=float(cfg.a), b=float(cfg.b), c=float(cfg.c), d=float(cfg.d),
         nb=int(cfg.nb), chunk_edges=int(cfg.chunk_edges), rounds=int(cfg.rounds),
         merge_block_rows=int(getattr(cfg, "merge_block_rows", 0)),
+        merge_fanin=int(getattr(cfg, "merge_fanin", 64)),
     )
     if p.n % p.nb != 0:
         raise ValueError(f"nb={p.nb} must divide n={p.n}")
+    if p.merge_fanin == 1 or p.merge_fanin < 0:
+        raise ValueError(
+            f"merge_fanin must be 0 (flat) or >= 2, got {p.merge_fanin}")
     return p
 
 
@@ -246,7 +252,8 @@ def shuffle_bucket_round(pcfg: PlainCfg, workdir: str, i: int, r: int, *,
     ]
     seq = [0] * nb
     pos = 0
-    for (v,) in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows):
+    for (v,) in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
+                           max_fanin=pcfg.merge_fanin):
         o = 0
         while o < v.size:
             j = pos // blk
@@ -303,7 +310,8 @@ def relabel_apply_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
                            columns=("v",), gauge=gauge)
     lookup = MonotoneLookup([pv], block_rows=chunk, base=i * B, gauge=gauge)
     out = BlockStore(workdir, edges_store_name(i, pass_ix), ledger, gauge=gauge, fresh=True)
-    for a, b in merge_runs(tmp, key=1, block_rows=pcfg.merge_block_rows):
+    for a, b in merge_runs(tmp, key=1, block_rows=pcfg.merge_block_rows,
+                           max_fanin=pcfg.merge_fanin):
         out.append_run(lookup.lookup(b), a)
     tmp.destroy()
     inbox.destroy()
@@ -341,7 +349,8 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     total = tmp.total_rows()
     adjv = np.lib.format.open_memmap(adjv_path, mode="w+", dtype=np.int64, shape=(total,))
     pos = 0
-    for s, d in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows):
+    for s, d in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
+                           max_fanin=pcfg.merge_fanin):
         np.add.at(degv, s - base, 1)
         adjv[pos : pos + d.size] = d
         ledger.write(d.nbytes)
@@ -480,7 +489,8 @@ def walk_hop_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg,
     if t + 1 < wcfg.length:
         adv = BlockStore(workdir, f"wadv_s{t:04d}_b{j:03d}", ledger,
                          columns=("pos", "wid"), gauge=gauge, fresh=True)
-    for pos, wid in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows):
+    for pos, wid in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
+                               max_fanin=pcfg.merge_fanin):
         row = pos - base
         start = lk_lo.lookup(row)
         end = lk_hi.lookup(row + 1)
@@ -543,7 +553,8 @@ def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg,
     sort_runs(inbox, tmp, key=key)
     out = np.load(os.path.join(workdir, wcfg.out_name), mmap_mode="r+")
     flat = out.reshape(-1)
-    for w, s, v in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows):
+    for w, s, v in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
+                              max_fanin=pcfg.merge_fanin):
         flat[w * (L + 1) + s] = v
         ledger.write(v.nbytes)
     out.flush()
@@ -644,6 +655,11 @@ class PhaseOrchestrator:
         self._state_path = os.path.join(workdir, state_name)
         self._config_key = config_key
         self._completed: Dict[str, Dict] = {}
+        # Cascade intermediate stores are merge-private scratch: a crash mid
+        # merge leaves them behind, and they are never part of any phase's
+        # checkpointed manifest — sweep them before resuming so a resumed run
+        # starts from exactly the stores the manifests describe.
+        clean_cascade_stores(workdir)
         if checkpoint and os.path.exists(self._state_path):
             try:
                 with open(self._state_path) as f:

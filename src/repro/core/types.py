@@ -67,6 +67,13 @@ class GraphConfig:
     # Rows per cursor block in external merges; 0 = auto (one chunk of
     # memory split evenly across the merge fan-in).
     merge_block_rows: int = 0
+    # Maximum merge fan-in (open run files / heap entries) of any external
+    # merge.  Stores with more runs cascade through log-depth intermediate
+    # merge passes (blockstore.merge_runs), bounding open files and keeping
+    # per-cursor blocks at max_run/merge_fanin instead of max_run/num_runs —
+    # the scale-safe default.  0 = flat (unbounded fan-in); must be >= 2
+    # otherwise.
+    merge_fanin: int = 64
     # Persist per-phase output manifests to <workdir>/phases.json and resume
     # completed phases on re-run (PhaseOrchestrator).
     checkpoint_phases: bool = False

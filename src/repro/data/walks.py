@@ -286,6 +286,11 @@ def external_walks(cfg, workdir: str, *, num_walkers: int, length: int,
     Runs the bucket kernels in-process; for real process parallelism use
     PartitionedGenerator.walk_corpus, which drives the same kernels through
     its worker pool.
+
+    Every per-hop frontier sort and the history gather merge through
+    cfg.merge_fanin-bounded cascades (blockstore.merge_runs via PlainCfg),
+    so walking a store with millions of frontier runs never exceeds the
+    open-file budget — identical corpus at any fan-in.
     """
     pcfg = cfg if isinstance(cfg, PlainCfg) else plain_config(cfg)
     ledger = IOLedger() if ledger is None else ledger

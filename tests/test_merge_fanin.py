@@ -1,0 +1,297 @@
+"""Bounded-fan-in cascaded external merge + disk-tier silent-corruption
+guards.
+
+The scale regime these tests simulate is num_runs >> max_run rows: the flat
+merge's per-cursor block shrinks to max(1, max_run // nruns) rows (per-row
+heap pops) and its open-memmap count grows with the store, while the cascade
+keeps both bounded by max_fanin.  Bit-identity between the two paths is the
+acceptance bar — the cascade is an I/O-shape optimization, never a semantic
+change.
+"""
+
+import os
+import resource
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import (
+    BlockStore,
+    IOLedger,
+    MemoryGauge,
+    MonotoneLookup,
+    clean_cascade_stores,
+    merge_runs,
+    partition_runs,
+    sort_runs,
+)
+from repro.core.phases import PhaseOrchestrator, plain_config
+from repro.core.types import GraphConfig
+
+
+def _many_run_store(workdir, nruns, run_rows, seed=0, name="runs",
+                    key_lo=0, key_hi=1000):
+    """A store of `nruns` sorted runs with heavy key collisions ACROSS runs
+    and payloads unique per record, so bit-identity checks catch any
+    equal-key stability difference between merge paths."""
+    ledger, gauge = IOLedger(), MemoryGauge()
+    store = BlockStore(workdir, name, ledger, columns=("k", "p"), gauge=gauge)
+    rng = np.random.default_rng(seed)
+    for i in range(nruns):
+        k = np.sort(rng.integers(key_lo, key_hi, run_rows))
+        p = i * run_rows + np.arange(run_rows)
+        store.append_run(k, p)
+    return store
+
+
+def _merged_cols(store, **kw):
+    blocks = list(merge_runs(store, key=0, **kw))
+    if not blocks:
+        return tuple(np.zeros(0, np.int64) for _ in range(store.ncols))
+    return tuple(np.concatenate([b[c] for b in blocks])
+                 for c in range(store.ncols))
+
+
+# ---------------------------------------------------------------------------
+# cascade vs flat: bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_cascade_bit_identical_across_fanin_sweep(tmp_path):
+    """57 runs of 13 rows (nruns >> max_run): every fan-in — including the
+    two-level regime max_fanin < nruns < max_fanin**2 and the degenerate
+    max_fanin >= nruns — yields the flat merge's exact record stream."""
+    store = _many_run_store(str(tmp_path), nruns=57, run_rows=13)
+    flat_k, flat_p = _merged_cols(store, max_fanin=0)
+    assert flat_k.size == 57 * 13
+    np.testing.assert_array_equal(flat_k, np.sort(flat_k))
+    for fanin in (2, 3, 7, 8, 16, 56, 57, 64):
+        k, p = _merged_cols(store, max_fanin=fanin)
+        np.testing.assert_array_equal(k, flat_k)
+        np.testing.assert_array_equal(p, flat_p)
+        # cascade scratch is destroyed once the generator is exhausted
+        assert not [d for d in os.listdir(str(tmp_path)) if "__cas_l" in d]
+
+
+def test_cascade_bit_identical_with_callable_key_and_blocks(tmp_path):
+    """Callable (recomputed) keys and explicit block_rows through a 3-level
+    cascade (2 < 37 runs < no bound)."""
+    ledger = IOLedger()
+    store = BlockStore(str(tmp_path), "hashed", ledger, columns=("v", "p"))
+    rng = np.random.default_rng(3)
+
+    def key(v, p):
+        return (v * 2654435761) % 977
+
+    for i in range(37):
+        v = rng.integers(0, 10_000, 29)
+        p = i * 29 + np.arange(29)
+        order = np.argsort(key(v, p), kind="stable")
+        store.append_run(v[order], p[order])
+
+    def merged(fanin):
+        blocks = list(merge_runs(store, key=key, max_fanin=fanin, block_rows=5))
+        return tuple(np.concatenate([b[c] for b in blocks]) for c in range(2))
+
+    flat = merged(0)
+    # flat merge over stable-sorted runs == one global stable sort
+    allc = [np.concatenate([store.read_run(i)[c] for i in range(37)])
+            for c in range(2)]
+    order = np.argsort(key(*allc), kind="stable")
+    for a, b in zip(flat, allc):
+        np.testing.assert_array_equal(a, b[order])
+    for fanin in (2, 5, 36):
+        for a, b in zip(flat, merged(fanin)):
+            np.testing.assert_array_equal(a, b)
+
+
+def test_cascade_empty_and_single_run_edges(tmp_path):
+    ledger = IOLedger()
+    store = BlockStore(str(tmp_path), "edge", ledger, columns=("k",))
+    assert list(merge_runs(store, max_fanin=4)) == []
+    store.append_run(np.array([], np.int64))
+    store.append_run(np.array([5, 7], np.int64))
+    store.append_run(np.array([], np.int64))
+    store.append_run(np.array([1, 9], np.int64))
+    store.append_run(np.array([2], np.int64))
+    (k,) = _merged_cols(store, max_fanin=2)
+    np.testing.assert_array_equal(k, [1, 2, 5, 7, 9])
+
+
+def test_merge_fanin_one_rejected(tmp_path):
+    store = _many_run_store(str(tmp_path), nruns=3, run_rows=4)
+    with pytest.raises(ValueError, match="max_fanin"):
+        list(merge_runs(store, key=0, max_fanin=1))
+    with pytest.raises(ValueError, match="merge_fanin"):
+        plain_config(GraphConfig(scale=8, merge_fanin=1))
+
+
+# ---------------------------------------------------------------------------
+# cascade: bounded memory + bounded open files
+# ---------------------------------------------------------------------------
+
+
+def test_cascade_peak_rows_stays_o_chunk(tmp_path):
+    """With 300 tiny runs the FLAT merge's cursor-buffer gauge grows with
+    nruns; the cascade's stays O(max_run) — the measurable form of the
+    bounded-buffer claim at high fan-in."""
+    run_rows = 8
+    # flat contrast kept to 120 runs so it still fits when this suite runs
+    # under the CI step's lowered `ulimit -n`
+    flat = _many_run_store(str(tmp_path), 120, run_rows, name="flat")
+    _merged_cols(flat, max_fanin=0)
+    assert flat.gauge.peak_rows >= 120  # block_rows*nruns: grows with store
+
+    cas = _many_run_store(str(tmp_path), 300, run_rows, name="cas")
+    cas.gauge.peak_rows = 0  # ignore the build-side appends
+    k, p = _merged_cols(cas, max_fanin=8)
+    assert k.size == 300 * run_rows
+    # cursor buffers (<= max_run) + one flush block (< 2*max_run)
+    assert cas.gauge.peak_rows <= 4 * run_rows
+
+
+def _live_fds():
+    return len(os.listdir("/proc/self/fd"))
+
+
+@pytest.mark.skipif(not os.path.isdir("/proc/self/fd"),
+                    reason="needs /proc fd accounting")
+def test_cascade_open_files_bounded_under_rlimit(tmp_path):
+    """The ulimit failure mode itself: under a lowered RLIMIT_NOFILE a
+    200-cursor flat merge dies on open-file exhaustion, while the cascaded
+    merge (<= max_fanin runs open at any instant, by construction of the
+    one-memmap-per-cursor segment cursor) completes bit-identically."""
+    nruns, max_fanin = 200, 8
+    store = _many_run_store(str(tmp_path), nruns, run_rows=6, name="lim")
+    flat_k, flat_p = _merged_cols(store, max_fanin=0)
+    soft, hard = resource.getrlimit(resource.RLIMIT_NOFILE)
+    headroom = 40  # scratch fds: output .npy writes, pytest internals
+    limit = _live_fds() + headroom
+    assert limit < soft, "test environment already near its fd limit"
+    resource.setrlimit(resource.RLIMIT_NOFILE, (limit, hard))
+    try:
+        with pytest.raises(OSError):
+            _merged_cols(store, max_fanin=0)  # 200 memmaps > limit
+        k, p = _merged_cols(store, max_fanin=max_fanin)
+    finally:
+        resource.setrlimit(resource.RLIMIT_NOFILE, (soft, hard))
+    np.testing.assert_array_equal(k, flat_k)
+    np.testing.assert_array_equal(p, flat_p)
+
+
+# ---------------------------------------------------------------------------
+# silent-corruption guards
+# ---------------------------------------------------------------------------
+
+
+def test_uint64_keys_past_2_63_fully_drained(tmp_path):
+    """Callable uint64 hash keys >= 2^63 exceed any int64 bound: the final
+    drain must use the no-bound sentinel, not a max int (which under-drains
+    and previously live-locked the last cursor)."""
+    ledger = IOLedger()
+    store = BlockStore(str(tmp_path), "u64", ledger, columns=("v", "p"))
+
+    def key(v, p):
+        # strictly above 2^63 for v >= 0 — every key out of int64 range
+        return v.astype(np.uint64) + np.uint64(1 << 63)
+
+    rng = np.random.default_rng(11)
+    for i in range(5):
+        v = np.sort(rng.integers(0, 1 << 40, 50))
+        store.append_run(v, i * 50 + np.arange(50))
+    for fanin in (0, 2, 3):
+        blocks = list(merge_runs(store, key=key, max_fanin=fanin))
+        v = np.concatenate([b[0] for b in blocks])
+        assert v.size == 5 * 50  # nothing dropped
+        np.testing.assert_array_equal(v, np.sort(v))  # key order == v order
+
+
+def test_monotone_lookup_rejects_regressing_probe(tmp_path):
+    ledger = IOLedger()
+    table = np.arange(100, 200)
+    store = BlockStore(str(tmp_path), "pv", ledger, columns=("v",))
+    for lo in range(0, 100, 10):
+        store.append_run(table[lo:lo + 10])
+    # regression WITHIN one call
+    lk = MonotoneLookup([store], block_rows=8)
+    with pytest.raises(ValueError, match="regressed within"):
+        lk.lookup(np.array([5, 3]))
+    # regression ACROSS calls: consumed prefix may never be re-probed
+    lk = MonotoneLookup([store], block_rows=8)
+    np.testing.assert_array_equal(lk.lookup(np.array([40, 41])), [140, 141])
+    with pytest.raises(ValueError, match="regressed"):
+        lk.lookup(np.array([2]))
+    # probe below `base` (would index _vals negatively and WRAP, not error)
+    lk = MonotoneLookup([store], block_rows=8, base=50)
+    with pytest.raises(ValueError, match="regressed"):
+        lk.lookup(np.array([10]))
+
+
+def test_partition_runs_rejects_out_of_range_bucket(tmp_path):
+    ledger = IOLedger()
+    store = BlockStore(str(tmp_path), "src", ledger, columns=("a", "b"))
+    store.append_run(np.array([0, 1, 2, 3]), np.array([0, 10, 20, 30]))
+    outs = [BlockStore(str(tmp_path), f"out_{d}", ledger, columns=("a", "b"))
+            for d in range(2)]
+    with pytest.raises(ValueError, match="outside"):
+        partition_runs(store, outs, lambda a, b: a)  # buckets 2, 3 invalid
+    with pytest.raises(ValueError, match="outside"):
+        partition_runs(store, outs, lambda a, b: a - 1)  # bucket -1 invalid
+    # in-range still works, and nothing was half-written by the failures
+    partition_runs(store, outs, lambda a, b: a % 2)
+    assert sum(o.total_rows() for o in outs) == 4
+
+
+# ---------------------------------------------------------------------------
+# orchestration: resume sweeps crashed-cascade scratch; end-to-end parity
+# ---------------------------------------------------------------------------
+
+
+def test_orchestrator_sweeps_stale_cascade_stores(tmp_path):
+    stale = tmp_path / "edges_b000__cas_l0_g0000"
+    stale.mkdir()
+    (stale / "run_000000.npy").write_bytes(b"junk")
+    real = tmp_path / "edges_b000"
+    real.mkdir()
+    PhaseOrchestrator(str(tmp_path), IOLedger(), checkpoint=True)
+    assert not stale.exists()
+    assert real.exists()  # only cascade scratch is swept
+    clean_cascade_stores(str(tmp_path / "nonexistent"))  # no-op, no raise
+
+
+def test_generator_bit_identical_at_tiny_merge_fanin(tmp_path):
+    """End-to-end plumbing: the full external pipeline (shuffle rounds,
+    relabel joins, CSR build) at merge_fanin=2 — cascades in every phase —
+    produces byte-identical pv AND CSR to the flat-merge pipeline."""
+    from repro.core.external import StreamingGenerator
+
+    base = GraphConfig(scale=9, nb=4, chunk_edges=128, edge_factor=4,
+                       shuffle_variant="external")
+    pv_f, csr_f, _ = StreamingGenerator(
+        base.with_(merge_fanin=0), str(tmp_path / "flat")).run()
+    gen = StreamingGenerator(base.with_(merge_fanin=2), str(tmp_path / "cas"))
+    pv_c, csr_c, _ = gen.run()
+    np.testing.assert_array_equal(np.asarray(pv_f), np.asarray(pv_c))
+    for (of, af), (oc, ac) in zip(csr_f, csr_c):
+        np.testing.assert_array_equal(of, oc)
+        np.testing.assert_array_equal(np.asarray(af), np.asarray(ac))
+    # a fan-in this small forces cascades yet leaves no scratch behind
+    assert not [d for d in os.listdir(str(tmp_path / "cas")) if "__cas_l" in d]
+
+
+def test_external_walks_bit_identical_at_tiny_merge_fanin(tmp_path):
+    """The walk-hop frontier sorts and history gather also ride the cascade:
+    same corpus at merge_fanin=2 as at flat fan-in."""
+    from repro.core.external import StreamingGenerator
+    from repro.data.walks import external_walks
+
+    base = GraphConfig(scale=8, nb=2, chunk_edges=128, edge_factor=4,
+                       shuffle_variant="external")
+    corpora = {}
+    for tag, fanin in (("flat", 0), ("cas", 2)):
+        wd = str(tmp_path / tag)
+        cfg = base.with_(merge_fanin=fanin)
+        StreamingGenerator(cfg, wd).run()
+        res = external_walks(cfg, wd, num_walkers=48, length=6, seed=5)
+        corpora[tag] = np.asarray(res.walks).copy()
+    np.testing.assert_array_equal(corpora["flat"], corpora["cas"])
