@@ -1,0 +1,103 @@
+"""Exchange-transport throughput: filesystem vs framed-TCP bucket exchange.
+
+For each transport backend, run the full partitioned pipeline (generate +
+relabel + redistribute + CSR) plus a walk corpus — every exchange site rides
+the transport under test — and report:
+
+  wall time        end-to-end, and the exchange-heavy phases separately
+  exchanged bytes  exch_MB = bytes handed to the transport, counted once per
+                   run on BOTH backends (TransportStats); wire_MB = bytes
+                   actually framed over TCP (socket only — on a shared
+                   filesystem those same exch_MB cross the interconnect
+                   twice, the 2x term in core/external.py's cost table)
+  parity           per-column sha256 of the CSR bucket files + corpus —
+                   asserted identical across backends, every point
+
+Loopback sockets understate a real network's latency but exercise the full
+framing/ack path, so the comparison isolates protocol overhead: the fs
+backend does less syscall work per run on one host, while the socket backend
+is the one that scales past it.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import tempfile
+import time
+
+import numpy as np
+
+from repro.core.phases import PartitionedGenerator
+from repro.core.types import GraphConfig
+
+from .common import print_table, save_json
+
+
+def _pipeline(cfg, workdir, walkers, length):
+    t0 = time.perf_counter()
+    with PartitionedGenerator(cfg, workdir, max_workers=0,
+                              exchange_servers=2) as part:
+        csr, ledger = part.run()
+        t_gen = time.perf_counter() - t0
+        t1 = time.perf_counter()
+        walks = np.asarray(part.walk_corpus(walkers, length, seed=0)).copy()
+        t_walk = time.perf_counter() - t1
+        phase_secs = {r["phase"]: r["seconds"]
+                      for r in part.orchestrator.report()}
+        h = hashlib.sha256()
+        for o, a in csr:
+            h.update(np.asarray(o).tobytes())
+            h.update(np.asarray(a).tobytes())
+        h.update(walks.tobytes())
+        return {
+            "gen_s": t_gen,
+            "walk_s": t_walk,
+            "relabel_s": phase_secs.get("relabel", 0.0),
+            "redistribute_s": phase_secs.get("redistribute", 0.0),
+            "bytes_written": ledger.bytes_written,
+            "exch_bytes": part.exchange_stats.bytes_sent,
+            "exch_frames": part.exchange_stats.frames_sent,
+            "wire_bytes": part.exchange_stats.bytes_recv,
+            "sha": h.hexdigest(),
+        }
+
+
+def run(scales=(10, 12), nb=4, chunk=1 << 10, edge_factor=4,
+        walkers=64, length=8):
+    rows = []
+    for s in scales:
+        shas = {}
+        for transport in ("fs", "socket"):
+            cfg = GraphConfig(scale=s, nb=nb, chunk_edges=chunk,
+                              edge_factor=edge_factor,
+                              shuffle_variant="external", transport=transport)
+            with tempfile.TemporaryDirectory() as d:
+                r = _pipeline(cfg, d, walkers, length)
+            shas[transport] = r.pop("sha")
+            exch_mb = r["exch_bytes"] / 1e6
+            rows.append({
+                "scale": s, "transport": transport,
+                "gen_s": round(r["gen_s"], 3),
+                "walk_s": round(r["walk_s"], 3),
+                "relabel_s": round(r["relabel_s"], 3),
+                "redistribute_s": round(r["redistribute_s"], 3),
+                "exch_MB": round(exch_mb, 2),
+                "exch_frames": r["exch_frames"],
+                "wire_MB": round(r["wire_bytes"] / 1e6, 2),
+                "exch_MB_per_s": round(
+                    exch_mb / max(r["gen_s"] + r["walk_s"], 1e-9), 2),
+            })
+        assert shas["fs"] == shas["socket"], \
+            f"transport parity broken at scale {s}: {shas}"
+        print(f"scale {s}: fs/socket outputs bit-identical "
+              f"(sha256 {shas['fs'][:16]}...)")
+    print_table("exchange transport: fs vs framed TCP (loopback)", rows,
+                ["scale", "transport", "gen_s", "walk_s", "relabel_s",
+                 "redistribute_s", "exch_MB", "exch_frames", "wire_MB",
+                 "exch_MB_per_s"])
+    save_json("transport", {"rows": rows})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -13,6 +13,9 @@ One module per paper table/figure (DESIGN.md §6):
                         sequential fraction, peak resident rows
   bench_merge_fanin     cascaded external merge fan-in sweep: pass-count x
                         bytes trade-off, bit-identity asserted per point
+  bench_transport       bucket-exchange transport: filesystem {sender}_{seq}
+                        runs vs framed TCP (loopback), wall time + wire
+                        bytes, bit-identity asserted per point
   bench_lm              substrate sanity: train/serve throughput
   bench_roofline        deliverable (g): render the dry-run roofline table
 """
@@ -35,7 +38,7 @@ def main():
     from . import (bench_csr_variants, bench_external_shuffle,
                    bench_external_walks, bench_hash_vs_sort, bench_lm,
                    bench_merge_fanin, bench_roofline, bench_single_node,
-                   bench_strong_scaling, bench_weak_scaling)
+                   bench_strong_scaling, bench_transport, bench_weak_scaling)
 
     benches = {
         "single_node": lambda: bench_single_node.run(
@@ -56,6 +59,10 @@ def main():
             nruns=128 if args.fast else 512,
             run_rows=512 if args.fast else 2048,
             fanins=(0, 4, 16) if args.fast else (0, 4, 8, 16, 64, 256)),
+        "transport": lambda: bench_transport.run(
+            scales=(9, 10) if args.fast else (10, 12),
+            walkers=32 if args.fast else 64,
+            length=6 if args.fast else 8),
         "external_walks": lambda: bench_external_walks.run(
             scales=(9, 10) if args.fast else (10, 12, 14),
             walkers=64 if args.fast else 256,

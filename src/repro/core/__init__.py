@@ -9,6 +9,10 @@ from .blockstore import (  # noqa: F401
     clean_cascade_stores, merge_runs, partition_runs, sort_runs,
 )
 from .phases import PhaseOrchestrator, PartitionedGenerator, plain_config  # noqa: F401
+from .transport import (  # noqa: F401
+    ExchangeServer, FilesystemTransport, SocketTransport, Transport,
+    TransportError, TransportStats, make_transport, sweep_partial_frames,
+)
 from .external import StreamingGenerator, RunStore, external_merge, external_sort_runs  # noqa: F401
 from .hostgen import mix32_np, rmat_edges_np, rmat_edges_np_cfg  # noqa: F401
 from .shuffle import distributed_shuffle, shuffle_argsort, pv_is_permutation  # noqa: F401

@@ -51,6 +51,22 @@ def clean_store(workdir: str, name: str) -> None:
     shutil.rmtree(os.path.join(workdir, name), ignore_errors=True)
 
 
+def stack_columns(cols: Sequence[np.ndarray], columns: Sequence[str],
+                  dtype) -> np.ndarray:
+    """THE place record columns become a run array — shared by
+    BlockStore.append_run and the socket transport's frame encoder
+    (transport._SocketChannel), so both exchange backends stack and coerce
+    identically: any future change here changes both, preserving the
+    bit-identity contract between them."""
+    assert len(cols) == len(columns), (len(cols), columns)
+    return np.stack([np.asarray(c, np.dtype(dtype)) for c in cols], axis=1)
+
+
+def auto_run_tag(seq: int) -> str:
+    """Default (single-writer) run naming, shared for the same reason."""
+    return f"{seq:06d}"
+
+
 @dataclasses.dataclass
 class IOLedger:
     """Counts block-granular I/O, the paper's unit of cost (C_e edges/block)."""
@@ -147,9 +163,8 @@ class BlockStore:
         name — the multi-process mode uses `{sender}_{seq}` tags so that
         runs written concurrently by different workers never collide and
         `attach()` recovers them in sender order (lexicographic)."""
-        assert len(cols) == len(self.columns), (len(cols), self.columns)
-        arr = np.stack([np.asarray(c, self.dtype) for c in cols], axis=1)
-        name = tag if tag is not None else f"{len(self._runs):06d}"
+        arr = stack_columns(cols, self.columns, self.dtype)
+        name = tag if tag is not None else auto_run_tag(len(self._runs))
         path = os.path.join(self.dir, f"run_{name}.npy")
         np.save(path, arr)
         self.ledger.write(arr.nbytes)
@@ -221,6 +236,12 @@ class BlockStore:
                 self.ledger.read(blk.nbytes, sequential)
                 self.gauge.track(blk.shape[0])
                 yield tuple(blk[:, c] for c in range(blk.shape[1]))
+
+    def missing_runs(self) -> List[str]:
+        """Run files this store's manifest names but the filesystem lacks —
+        nonempty after checkpoint GC reclaimed them (drivers check this
+        before rerunning a non-checkpointable phase against old outputs)."""
+        return [p for p in self._runs if not os.path.exists(p)]
 
     # -- lifecycle --------------------------------------------------------------
     def destroy(self):
@@ -516,17 +537,22 @@ def merge_runs(
 
 def partition_runs(
     store: BlockStore,
-    outs: Sequence[BlockStore],
+    outs: Sequence,
     part_of: Callable[..., np.ndarray],
     tag_prefix: Optional[str] = None,
-) -> Sequence[BlockStore]:
+) -> Sequence:
     """Bounded-memory bucket partition (paper Alg. 8's bucket exchange).
 
     Streams `store` one run at a time; each run is stable-sorted by its
     destination bucket and the per-bucket slices appended to `outs[d]` —
-    all access sequential, resident memory one run.  `tag_prefix` names the
-    written runs `{tag_prefix}_{seq}` so concurrent senders into a shared
-    destination store never collide (multi-process mode).
+    all access sequential, resident memory one run.  `outs` are run sinks
+    with BlockStore's `append_run(*cols, tag=)` signature: destination
+    stores on a shared filesystem, or transport channels
+    (core/transport.py) that frame each emitted run to the destination
+    bucket's host — the emit path is transport-agnostic.  `tag_prefix`
+    names the written runs `{tag_prefix}_{seq}` so concurrent senders into
+    a shared destination inbox never collide (multi-process mode), and so
+    receivers recover sender order lexicographically on either backend.
     """
     nparts = len(outs)
     seq = [0] * nparts

@@ -35,6 +35,23 @@ Phase algebra and I/O complexity (paper Alg. 2-11, §III-B):
   csr_scatter   O(b) RANDOM                             (Alg. 10-11 — the Fig. 2 blowup)
   csr_sorted    O(B / C_e) sequential                   (§III-B7 — the predicted fix)
 
+Network-exchange term (core/transport.py): every bucket exchange above
+(shuffle slice exchange, relabel scatter, redistribute, per-hop walk-frontier
+exchange) moves E_x exchanged bytes through the configured Transport:
+
+  transport="fs"      O(2 * E_x / C_e) interconnect transfers — on a shared
+                      (network) filesystem every exchanged byte crosses the
+                      wire twice: sender -> shared store, then shared store
+                      -> receiver at drain time.  The reference backend, and
+                      exact on one host where "interconnect" is the disk.
+  transport="socket"  O(E_x / C_e) framed-TCP transfers + one O(E_x / C_e)
+                      sequential local write at the receiver — bytes cross
+                      the wire once (the paper's MPI shape: exchange overlaps
+                      the receiver's sequential disk I/O), acked per frame so
+                      the in-flight window is one writer-bounded run and the
+                      O(chunk_edges) memory bound holds end to end.  Output
+                      bytes are identical either way; only the motion differs.
+
 Every external merge above pays an extra O(log_merge_fanin(nruns))-deep
 cascade of sequential read+write passes whenever a store's run count exceeds
 cfg.merge_fanin (blockstore.merge_runs): the bounded-fan-in multiway merge
@@ -69,13 +86,31 @@ from .phases import (
     PhaseOrchestrator,
     attach_pv_buckets,
     csr_bucket_sorted,
+    csr_adjv_path,
+    csr_offv_path,
     drive_shuffle,
     load_bucket_csr,
     plain_config,
     pv_store_name,
+    result_config_key,
     validate_external_shape,
 )
+from .transport import FilesystemTransport
 from .types import GraphConfig
+
+
+# Store names of the sequential driver, shared by the producer sites AND the
+# checkpoint-GC frees declarations in run() — clean_store() ignores missing
+# dirs, so a name drifting between the two would silently disable GC.
+EDGES_STORE = "edges"
+
+
+def relabeled_store_name(pass_ix: int) -> str:
+    return f"relabeled_p{pass_ix}"
+
+
+def seq_owned_store_name(i: int) -> str:
+    return f"owned_{i:03d}"
 
 
 class RunStore(BlockStore):
@@ -129,11 +164,18 @@ class StreamingGenerator:
         self.gauge = MemoryGauge()
         ck = cfg.checkpoint_phases if checkpoint is None else checkpoint
         self._pcfg = plain_config(cfg)
+        if self._pcfg.transport != "fs":
+            raise ValueError(
+                "StreamingGenerator is the single-process reference driver "
+                "and exchanges through the filesystem only; use "
+                "PartitionedGenerator for transport='socket'")
+        self._transport = FilesystemTransport(workdir, self.ledger, self.gauge)
         if cfg.shuffle_variant == "external":
             validate_external_shape(self._pcfg)
         self.orchestrator = PhaseOrchestrator(
             workdir, self.ledger, checkpoint=ck,
-            config_key=repr((self._pcfg, cfg.shuffle_variant)))
+            config_key=repr((result_config_key(self._pcfg), cfg.shuffle_variant)),
+            keep_all=bool(getattr(cfg, "keep_phase_stores", False)))
 
     # -- phase 1: permutation ------------------------------------------------
     def permutation(self) -> List[BlockStore]:
@@ -168,12 +210,14 @@ class StreamingGenerator:
 
     def _run_kernels_inline(self, kernel: str, argss) -> None:
         """In-process map strategy for the shared phase drivers: same bucket
-        kernels the partitioned workers run, against this driver's ledger."""
+        kernels the partitioned workers run, against this driver's ledger
+        and (filesystem) transport."""
         from .phases import _KERNELS
 
         for args in argss:
             _KERNELS[kernel](self._pcfg, self.workdir, *args,
-                             ledger=self.ledger, gauge=self.gauge)
+                             ledger=self.ledger, gauge=self.gauge,
+                             transport=self._transport)
 
     def _permutation_external(self) -> List[BlockStore]:
         """Paper Alg. 2-4 on disk: rounds of {chunked local shuffle via
@@ -181,7 +225,8 @@ class StreamingGenerator:
         Peak RSS O(chunk_edges); every transfer sequential.  Bit-identical
         to distributed_shuffle on an nb-shard mesh (tested)."""
         p = self._pcfg
-        drive_shuffle(p, self.workdir, self._run_kernels_inline)
+        drive_shuffle(p, self.workdir, self._run_kernels_inline,
+                      transport=self._transport)
         return attach_pv_buckets(p, self.workdir, self.ledger, self.gauge)
 
     def export_pv(self, buckets: List[BlockStore]) -> np.ndarray:
@@ -204,7 +249,7 @@ class StreamingGenerator:
     def generate_edges(self) -> RunStore:
         """Alg. 5 via the numpy counter-RNG mirror (bit-identical to the
         device stream — tested), chunk-bounded runs."""
-        store = RunStore(self.workdir, "edges", self.ledger, gauge=self.gauge, fresh=True)
+        store = RunStore(self.workdir, EDGES_STORE, self.ledger, gauge=self.gauge, fresh=True)
         m, blk = self.cfg.m, self.cfg.chunk_edges
         for start in range(0, m, blk):
             cnt = min(blk, m - start)
@@ -230,7 +275,7 @@ class StreamingGenerator:
             sorted_store = RunStore(self.workdir, f"sorted_p{pass_ix}",
                                     self.ledger, gauge=self.gauge, fresh=True)
             sort_runs(cur, sorted_store, key=1)
-            out = RunStore(self.workdir, f"relabeled_p{pass_ix}",
+            out = RunStore(self.workdir, relabeled_store_name(pass_ix),
                            self.ledger, gauge=self.gauge, fresh=True)
             lookup = MonotoneLookup(pv_buckets, block_rows=self.cfg.chunk_edges,
                                     gauge=self.gauge)
@@ -248,7 +293,7 @@ class StreamingGenerator:
     # -- phase 4: redistribute (Alg. 8-9) --------------------------------------
     def redistribute(self, edges: BlockStore) -> List[RunStore]:
         nb, B = self.cfg.nb, self.cfg.bucket_size
-        owners = [RunStore(self.workdir, f"owned_{i:03d}", self.ledger,
+        owners = [RunStore(self.workdir, seq_owned_store_name(i), self.ledger,
                            gauge=self.gauge, fresh=True) for i in range(nb)]
         partition_runs(edges, owners, lambda s, d: s // B)
         return owners
@@ -322,21 +367,61 @@ class StreamingGenerator:
     def run(self, csr_variant: Optional[str] = None):
         """Run all phases through the orchestrator.  Returns
         (pv memmap, [(offv, adjv)] per bucket, IOLedger); per-phase ledger
-        deltas via `self.orchestrator.report()`."""
+        deltas via `self.orchestrator.report()`.
+
+        Checkpoint GC: every phase declares (via `frees`) the stores it is
+        the last consumer of, so unless cfg.keep_phase_stores the workdir
+        retains only the final artifacts (CSR bucket files + pv.npy) plus
+        whatever the pipeline's current frontier still needs — the disk
+        footprint is bounded instead of accumulating every intermediate.
+        """
         csr_variant = csr_variant or self.cfg.csr_variant
+        nb = self.cfg.nb
         orch = self.orchestrator
         sv, ld = self._save_stores, self._load_stores
         pv_buckets = orch.run_phase("shuffle", self.permutation, save=sv, load=ld)
         edges = orch.run_phase("generate", self.generate_edges, save=sv, load=ld)
         relabeled = orch.run_phase(
-            "relabel", lambda: self.relabel(edges, pv_buckets), save=sv, load=ld)
+            "relabel", lambda: self.relabel(edges, pv_buckets), save=sv, load=ld,
+            frees=[EDGES_STORE])
         owners = orch.run_phase(
-            "redistribute", lambda: self.redistribute(relabeled), save=sv, load=ld)
+            "redistribute", lambda: self.redistribute(relabeled), save=sv, load=ld,
+            frees=[relabeled_store_name(1)])
+
+        def _load_csr(_m):
+            return [load_bucket_csr(csr_offv_path(self.workdir, i),
+                                    csr_adjv_path(self.workdir, i),
+                                    self.ledger, self.gauge)
+                    for i in range(nb)]
+
         if csr_variant == "sorted":
-            csr = orch.run_phase("csr_sorted", lambda: self.build_csr_sorted(owners))
+            # The CSR files are the durable output; the manifest only needs
+            # to mark completion (paths are the naming convention's).
+            csr = orch.run_phase(
+                "csr_sorted", lambda: self.build_csr_sorted(owners),
+                save=lambda _res: {"nb": nb}, load=_load_csr,
+                frees=[seq_owned_store_name(i) for i in range(nb)])
         elif csr_variant == "scatter":
+            # scatter keeps offv in RAM only — not checkpointable, so its
+            # inputs are never freed by THIS run (a resume must be able to
+            # rerun it).  A prior 'sorted' run over the same checkpoint may
+            # have freed them already though — fail with guidance, not with
+            # a FileNotFoundError deep inside np.load.
+            gone = sum(len(s.missing_runs()) for s in owners)
+            if gone:
+                raise ValueError(
+                    f"csr_variant='scatter' needs the redistribute output "
+                    f"stores, but {gone} run file(s) were already "
+                    "garbage-collected by a checkpointed csr_sorted run; "
+                    "rerun with keep_phase_stores=True or a fresh workdir")
             csr = orch.run_phase("csr_scatter", lambda: self.build_csr_scatter(owners))
         else:
             raise ValueError(csr_variant)
-        pv = orch.run_phase("export_pv", lambda: self.export_pv(pv_buckets))
+        pv = orch.run_phase(
+            "export_pv", lambda: self.export_pv(pv_buckets),
+            save=lambda _res: {"path": "pv.npy"},
+            load=lambda m: np.load(os.path.join(self.workdir, m["path"]),
+                                   mmap_mode="r"),
+            frees=[pv_store_name(self._pcfg.rounds, i) for i in range(nb)]
+                  if csr_variant == "sorted" else [])
         return pv, csr, self.ledger

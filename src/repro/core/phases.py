@@ -17,23 +17,31 @@ tracing or device state is involved in any kernel):
   bucket-level kernels the unit of distribution: every pipeline phase is a
                        function of (config, workdir, bucket_id) operating on
                        BlockStores addressed *by naming convention* —
-                       `pv_r{round}_b{bucket}`, `edges_b{bucket}`, … — so the
-                       filesystem plays the role of the paper's MPI
-                       interconnect and a phase is the same code whether one
-                       process runs all buckets (StreamingGenerator) or nb
-                       workers run one each (PartitionedGenerator).
+                       `pv_r{round}_b{bucket}`, `edges_b{bucket}`, … — and
+                       exchanging runs through a pluggable Transport
+                       (core/transport.py) that plays the role of the
+                       paper's MPI interconnect: the shared filesystem
+                       (`{sender}_{seq}` run tags) or framed TCP to per-
+                       bucket ExchangeServers.  A phase is the same code
+                       whether one process runs all buckets
+                       (StreamingGenerator) or nb workers run one each
+                       (PartitionedGenerator), and whichever backend carries
+                       the exchange — outputs are bit-identical.
 
   PartitionedGenerator the single-host stand-in for the paper's 64-node
                        cluster: nb `concurrent.futures` workers, each owning
                        the vertex range [i*B, (i+1)*B), with a barrier after
                        every phase (the paper's bulk-synchronous MPI
                        structure).  Workers account I/O into private ledgers
-                       that the parent merges, so the aggregate ledger is
-                       comparable with the sequential driver's.
+                       that the parent merges (receiver-side ExchangeServer
+                       accounting folds in at the same barriers), so the
+                       aggregate ledger is comparable with the sequential
+                       driver's.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import json
 import os
@@ -55,6 +63,13 @@ from .blockstore import (
     merge_runs,
     partition_runs,
     sort_runs,
+)
+from .transport import (
+    ExchangeServer,
+    Transport,
+    TransportStats,
+    make_transport,
+    sweep_partial_frames,
 )
 from .hostgen import (
     rmat_edges_np_cfg,
@@ -85,6 +100,10 @@ class PlainCfg:
     rounds: int
     merge_block_rows: int = 0
     merge_fanin: int = 64
+    # Exchange transport: "fs" (shared-filesystem {sender}_{seq} runs) or
+    # "socket" (framed TCP to the ExchangeServer at peer_addrs[bucket]).
+    transport: str = "fs"
+    peer_addrs: Optional[Tuple[str, ...]] = None
 
     @property
     def n(self) -> int:
@@ -111,13 +130,36 @@ def plain_config(cfg) -> PlainCfg:
         nb=int(cfg.nb), chunk_edges=int(cfg.chunk_edges), rounds=int(cfg.rounds),
         merge_block_rows=int(getattr(cfg, "merge_block_rows", 0)),
         merge_fanin=int(getattr(cfg, "merge_fanin", 64)),
+        # "filesystem" is accepted as an alias and canonicalized, so every
+        # downstream comparison can test == "fs" alone.
+        transport={"filesystem": "fs"}.get(
+            str(getattr(cfg, "transport", "fs")),
+            str(getattr(cfg, "transport", "fs"))),
+        peer_addrs=(None if getattr(cfg, "peer_addrs", None) is None
+                    else tuple(str(a) for a in cfg.peer_addrs)),
     )
     if p.n % p.nb != 0:
         raise ValueError(f"nb={p.nb} must divide n={p.n}")
     if p.merge_fanin == 1 or p.merge_fanin < 0:
         raise ValueError(
             f"merge_fanin must be 0 (flat) or >= 2, got {p.merge_fanin}")
+    if p.transport not in ("fs", "socket"):
+        raise ValueError(
+            f"transport must be 'fs' or 'socket', got {p.transport!r}")
+    if p.peer_addrs is not None and len(p.peer_addrs) != p.nb:
+        raise ValueError(
+            f"peer_addrs must hold one address per bucket: "
+            f"got {len(p.peer_addrs)} for nb={p.nb}")
     return p
+
+
+def result_config_key(pcfg: PlainCfg) -> PlainCfg:
+    """The subset of a config that determines the RESULT bytes.  Transport
+    choice and peer addresses move data differently but produce bit-identical
+    stores, and socket ports are ephemeral — keying checkpoints on them would
+    spuriously invalidate (or worse, a changed port would block resuming a
+    crashed run).  Normalize them out."""
+    return dataclasses.replace(pcfg, transport="fs", peer_addrs=None)
 
 
 def validate_external_shape(p: PlainCfg) -> PlainCfg:
@@ -208,10 +250,33 @@ def attach_pv_buckets(pcfg: PlainCfg, workdir: str, ledger: IOLedger,
 # ---------------------------------------------------------------------------
 
 
+@contextlib.contextmanager
+def _exchange(pcfg: PlainCfg, workdir: str, ledger: IOLedger,
+              gauge: Optional[MemoryGauge], transport: Optional[Transport]):
+    """The transport a kernel exchanges through: the caller's if provided
+    (inline drivers reuse one), else one built from the config (worker
+    processes — transports hold sockets and are not picklable, so workers
+    reconstruct from PlainCfg and tear down with the kernel).  Flushed on
+    clean exit either way; only owned transports are closed."""
+    if transport is not None:
+        yield transport
+        transport.flush()
+        return
+    tr = make_transport(pcfg, workdir, ledger, gauge)
+    try:
+        yield tr
+        tr.flush()
+    finally:
+        tr.close()
+
+
 def init_pv_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
-                   ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                   ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                   transport: Optional[Transport] = None):
     """Round-0 shuffle buffer: bucket i holds its range partition of [0:n)
-    (the paper's RP(n, nb)), written as chunk-bounded runs."""
+    (the paper's RP(n, nb)), written as chunk-bounded runs.  Local-only
+    (no exchange): `transport` is accepted for the uniform kernel signature
+    and unused."""
     B, chunk = pcfg.bucket_size, pcfg.chunk_edges
     store = BlockStore(workdir, pv_store_name(0, i), ledger, columns=("v",), gauge=gauge,
                        fresh=True)
@@ -221,7 +286,8 @@ def init_pv_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
 
 
 def shuffle_bucket_round(pcfg: PlainCfg, workdir: str, i: int, r: int, *,
-                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                         transport: Optional[Transport] = None):
     """One round of the external shuffle for bucket i (paper Alg. 2-4 on disk).
 
     (i)  local shuffle = external sort of the bucket by the counter-hash key
@@ -229,9 +295,10 @@ def shuffle_bucket_round(pcfg: PlainCfg, workdir: str, i: int, r: int, *,
          is a uniform permutation, and exactly reproduces the device
          shuffle's argsort because the keys are unique;
     (ii) bucket exchange = the sorted stream is cut into nb equal positional
-         slices, slice j appended to next-round bucket j with a
-         `{sender}_{seq}` run tag, so receivers recover sender order
-         lexicographically — the disk twin of `lax.all_to_all`.
+         slices, slice j shipped to next-round bucket j through the transport
+         with a `{sender}_{seq}` run tag, so receivers recover sender order
+         lexicographically — the disk twin of `lax.all_to_all`, over either
+         the shared filesystem or framed TCP.
 
     Every access is a sequential scan: the shuffle phase does zero random I/O.
     """
@@ -242,35 +309,35 @@ def shuffle_bucket_round(pcfg: PlainCfg, workdir: str, i: int, r: int, *,
     def key(v):
         return shuffle_keys(v, salt)
 
-    src = BlockStore.attach(workdir, pv_store_name(r, i), ledger, columns=("v",), gauge=gauge)
-    tmp = BlockStore(workdir, pv_store_name(r, i) + "_sorted", ledger, columns=("v",),
-                     gauge=gauge, fresh=True)
-    sort_runs(src, tmp, key=key)
-    outs = [
-        BlockStore(workdir, pv_store_name(r + 1, j), ledger, columns=("v",), gauge=gauge)
-        for j in range(nb)
-    ]
-    seq = [0] * nb
-    pos = 0
-    for (v,) in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
-                           max_fanin=pcfg.merge_fanin):
-        o = 0
-        while o < v.size:
-            j = pos // blk
-            take = min(v.size - o, (j + 1) * blk - pos)
-            outs[j].append_run(v[o : o + take], tag=f"{i:03d}_{seq[j]:05d}")
-            seq[j] += 1
-            o += take
-            pos += take
-    tmp.destroy()
-    src.destroy()
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        src = tr.drain_inbox(pv_store_name(r, i), columns=("v",))
+        tmp = BlockStore(workdir, pv_store_name(r, i) + "_sorted", ledger, columns=("v",),
+                         gauge=gauge, fresh=True)
+        sort_runs(src, tmp, key=key)
+        outs = tr.channels(lambda j: pv_store_name(r + 1, j), nb, columns=("v",))
+        seq = [0] * nb
+        pos = 0
+        for (v,) in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
+                               max_fanin=pcfg.merge_fanin):
+            o = 0
+            while o < v.size:
+                j = pos // blk
+                take = min(v.size - o, (j + 1) * blk - pos)
+                outs[j].append_run(v[o : o + take], tag=f"{i:03d}_{seq[j]:05d}")
+                seq[j] += 1
+                o += take
+                pos += take
+        tmp.destroy()
+        src.destroy()
 
 
 def generate_bucket_edges(pcfg: PlainCfg, workdir: str, i: int, *,
-                          ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                          ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                          transport: Optional[Transport] = None):
     """Paper Alg. 5: bucket i generates its bin of edges [i*eps, (i+1)*eps).
     Counter-based RNG => the stream is independent of nb and of which
-    process generates it (regeneration-friendly)."""
+    process generates it (regeneration-friendly).  Local-only (no exchange):
+    `transport` is accepted for the uniform kernel signature and unused."""
     eps, chunk = pcfg.edges_per_bucket, pcfg.chunk_edges
     store = BlockStore(workdir, edges_store_name(i), ledger, gauge=gauge, fresh=True)
     start = i * eps
@@ -281,28 +348,30 @@ def generate_bucket_edges(pcfg: PlainCfg, workdir: str, i: int, *,
 
 
 def relabel_scatter_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
-                           ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                           ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                           transport: Optional[Transport] = None):
     """Relabel pass `pass_ix`, scatter half (paper Alg. 6): ship each record
-    to the owner of its key field (column 1) so the owner can join it against
-    its pv bucket.  Bucket partition = sequential scan + stable chunk sort."""
+    through the transport to the owner of its key field (column 1) so the
+    owner can join it against its pv bucket.  Bucket partition = sequential
+    scan + stable chunk sort."""
     B = pcfg.bucket_size
     in_name = edges_store_name(i) if pass_ix == 0 else edges_store_name(i, pass_ix - 1)
     store = BlockStore.attach(workdir, in_name, ledger, gauge=gauge)
-    outs = [
-        BlockStore(workdir, relabel_inbox_name(pass_ix, j), ledger, gauge=gauge)
-        for j in range(pcfg.nb)
-    ]
-    partition_runs(store, outs, lambda a, b: b // B, tag_prefix=f"{i:03d}")
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        outs = tr.channels(lambda j: relabel_inbox_name(pass_ix, j), pcfg.nb)
+        partition_runs(store, outs, lambda a, b: b // B, tag_prefix=f"{i:03d}")
 
 
 def relabel_apply_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
-                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                         transport: Optional[Transport] = None):
     """Relabel pass `pass_ix`, join half (paper Alg. 7): external-sort my
     inbox by the key field, stream pv blocks past it (sort-merge-join), emit
     (pv[key], other) — the column swap makes pass 1 relabel dst and pass 2
     relabel src with identical code."""
     B, chunk = pcfg.bucket_size, pcfg.chunk_edges
-    inbox = BlockStore.attach(workdir, relabel_inbox_name(pass_ix, i), ledger, gauge=gauge)
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        inbox = tr.drain_inbox(relabel_inbox_name(pass_ix, i))   # post-barrier
     tmp = BlockStore(workdir, relabel_inbox_name(pass_ix, i) + "_sorted", ledger,
                      gauge=gauge, fresh=True)
     sort_runs(inbox, tmp, key=1)
@@ -318,20 +387,21 @@ def relabel_apply_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
 
 
 def redistribute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
-                        ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
-    """Paper Alg. 8-9: ship each relabeled edge to owner(new_src)."""
+                        ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                        transport: Optional[Transport] = None):
+    """Paper Alg. 8-9: ship each relabeled edge to owner(new_src) through
+    the transport."""
     B = pcfg.bucket_size
     store = BlockStore.attach(workdir, edges_store_name(i, 1), ledger, gauge=gauge)
-    outs = [
-        BlockStore(workdir, owned_store_name(j), ledger, gauge=gauge)
-        for j in range(pcfg.nb)
-    ]
-    partition_runs(store, outs, lambda a, b: a // B, tag_prefix=f"{i:03d}")
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        outs = tr.channels(owned_store_name, pcfg.nb)
+        partition_runs(store, outs, lambda a, b: a // B, tag_prefix=f"{i:03d}")
 
 
 def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
                       ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
-                      in_name: Optional[str] = None) -> Tuple[str, str]:
+                      in_name: Optional[str] = None,
+                      transport: Optional[Transport] = None) -> Tuple[str, str]:
     """§III-B7: external sort owned edges by src, then one sequential pass
     emits degrees + adjacency.  adjv streams straight into a memmap — the
     adjacency never materializes in RAM.  `in_name` overrides the input
@@ -339,7 +409,8 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     B, base = pcfg.bucket_size, i * pcfg.bucket_size
     if in_name is None:
         in_name = owned_store_name(i)
-    owned = BlockStore.attach(workdir, in_name, ledger, gauge=gauge)
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        owned = tr.drain_inbox(in_name)   # redistribute's multi-writer inbox
     tmp = BlockStore(workdir, in_name + "_sorted", ledger, gauge=gauge, fresh=True)
     sort_runs(owned, tmp, key=0)
     degv = np.zeros(B, np.int64)
@@ -365,17 +436,20 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     return offv_path, adjv_path
 
 
-def drive_shuffle(pcfg: PlainCfg, workdir: str, map_kernel) -> None:
+def drive_shuffle(pcfg: PlainCfg, workdir: str, map_kernel,
+                  transport: Optional[Transport] = None) -> None:
     """The shuffle round loop, shared by both drivers.  `map_kernel(name,
     argss)` runs one bucket kernel for every args tuple and acts as the
     barrier.  Receiver stores are multi-writer, so each round's outputs are
-    cleaned BEFORE the senders run — a correctness invariant (attach() would
-    merge in stale runs from a previous attempt)."""
-    map_kernel("init_pv", [(i,) for i in range(pcfg.nb)])
-    for r in range(pcfg.rounds):
-        for j in range(pcfg.nb):
-            clean_store(workdir, pv_store_name(r + 1, j))
-        map_kernel("shuffle_round", [(i, r) for i in range(pcfg.nb)])
+    cleaned BEFORE the senders run — a correctness invariant for BOTH
+    transports (attach() would merge in stale runs from a previous attempt;
+    a partial socket frame would linger as a `.part` stray).  The driver's
+    `transport` carries the clean to whichever host owns each inbox."""
+    with _exchange(pcfg, workdir, IOLedger(), None, transport) as tr:
+        map_kernel("init_pv", [(i,) for i in range(pcfg.nb)])
+        for r in range(pcfg.rounds):
+            tr.clean_inboxes([pv_store_name(r + 1, j) for j in range(pcfg.nb)])
+            map_kernel("shuffle_round", [(i, r) for i in range(pcfg.nb)])
 
 
 # ---------------------------------------------------------------------------
@@ -428,7 +502,8 @@ def _gather_adjv(adjv_mm: np.ndarray, idx: np.ndarray, chunk: int,
 
 
 def walk_init_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
-                     ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                     ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                     transport: Optional[Transport] = None):
     """Launch bucket j's walker block: deterministic start vertices, step-0
     history rows, and the step-0 frontier exchange (partition_runs to the
     owner bucket of each start — paper Alg. 8 with walkers for edges)."""
@@ -445,97 +520,94 @@ def walk_init_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
         pos = walk_start_np(wcfg.seed, wid.astype(np.uint32), pcfg.n)
         hist.append_run(wid, np.zeros(wid.size, np.int64), pos)
         adv.append_run(pos, wid)
-    outs = [
-        BlockStore(workdir, wfront_store_name(0, d), ledger,
-                   columns=("pos", "wid"), gauge=gauge)
-        for d in range(pcfg.nb)
-    ]
-    partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        outs = tr.channels(lambda d: wfront_store_name(0, d), pcfg.nb,
+                           columns=("pos", "wid"))
+        partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
     adv.destroy()
 
 
 def walk_hop_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg, *,
-                    ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                    ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                    transport: Optional[Transport] = None):
     """Advance every walker currently owned by bucket j one hop (step t+1).
 
     The paper's discipline applied to traversal: (i) external-sort the
     frontier inbox by current vertex, (ii) sort-merge-join it against the
     bucket's CSR — offv probed through two MonotoneLookups (row starts and
     row ends both advance monotonically), adjv gathered as a forward scan —
-    and (iii) partition the advanced walkers to their new owner's step-t+1
-    inbox.  Every access is a bounded sequential block; no random CSR I/O.
+    and (iii) partition the advanced walkers through the transport to their
+    new owner's step-t+1 inbox.  Every access is a bounded sequential block;
+    no random CSR I/O.
     """
     gauge = gauge if gauge is not None else MemoryGauge()
     B, chunk, n = pcfg.bucket_size, pcfg.chunk_edges, pcfg.n
     base = j * B
-    front = BlockStore.attach(workdir, wfront_store_name(t, j), ledger,
-                              columns=("pos", "wid"), gauge=gauge)
-    tmp = BlockStore(workdir, wfront_store_name(t, j) + "_sorted", ledger,
-                     columns=("pos", "wid"), gauge=gauge, fresh=True)
-    sort_runs(front, tmp, key=0)
-    offv_file = csr_offv_path(workdir, j)
-    # Two independent offv cursors, one per row end: a single interleaved
-    # probe stream (row, row+1, row', row'+1, ...) is NOT monotone when
-    # consecutive walkers share a vertex (5,6,5,6), so the 2x offv scan is
-    # the price of keeping each stream strictly nondecreasing.
-    lk_lo = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
-                           block_rows=chunk, gauge=gauge)
-    lk_hi = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
-                           block_rows=chunk, gauge=gauge)
-    adjv_mm = np.load(csr_adjv_path(workdir, j), mmap_mode="r")
-    hist = BlockStore(workdir, whist_store_name(t + 1, j), ledger,
-                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
-    adv = None
-    if t + 1 < wcfg.length:
-        adv = BlockStore(workdir, f"wadv_s{t:04d}_b{j:03d}", ledger,
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        front = tr.drain_inbox(wfront_store_name(t, j), columns=("pos", "wid"))
+        tmp = BlockStore(workdir, wfront_store_name(t, j) + "_sorted", ledger,
                          columns=("pos", "wid"), gauge=gauge, fresh=True)
-    for pos, wid in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
-                               max_fanin=pcfg.merge_fanin):
-        row = pos - base
-        start = lk_lo.lookup(row)
-        end = lk_hi.lookup(row + 1)
-        deg = end - start
-        r = walk_rand_np(wcfg.seed, wid.astype(np.uint32), t + 1).astype(np.int64)
-        sink = deg == 0
-        idx = start + np.where(sink, 0, r % np.maximum(deg, 1))
-        nxt = np.where(sink, r % n, 0).astype(np.int64)
-        live = ~sink
-        if live.any():
-            nxt[live] = _gather_adjv(adjv_mm, idx[live], chunk, ledger, gauge)
-        hist.append_run(wid, np.full(wid.size, t + 1, np.int64), nxt)
+        sort_runs(front, tmp, key=0)
+        offv_file = csr_offv_path(workdir, j)
+        # Two independent offv cursors, one per row end: a single interleaved
+        # probe stream (row, row+1, row', row'+1, ...) is NOT monotone when
+        # consecutive walkers share a vertex (5,6,5,6), so the 2x offv scan is
+        # the price of keeping each stream strictly nondecreasing.
+        lk_lo = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
+                               block_rows=chunk, gauge=gauge)
+        lk_hi = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
+                               block_rows=chunk, gauge=gauge)
+        adjv_mm = np.load(csr_adjv_path(workdir, j), mmap_mode="r")
+        hist = BlockStore(workdir, whist_store_name(t + 1, j), ledger,
+                          columns=("wid", "step", "v"), gauge=gauge, fresh=True)
+        adv = None
+        if t + 1 < wcfg.length:
+            adv = BlockStore(workdir, f"wadv_s{t:04d}_b{j:03d}", ledger,
+                             columns=("pos", "wid"), gauge=gauge, fresh=True)
+        for pos, wid in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
+                                   max_fanin=pcfg.merge_fanin):
+            row = pos - base
+            start = lk_lo.lookup(row)
+            end = lk_hi.lookup(row + 1)
+            deg = end - start
+            r = walk_rand_np(wcfg.seed, wid.astype(np.uint32), t + 1).astype(np.int64)
+            sink = deg == 0
+            idx = start + np.where(sink, 0, r % np.maximum(deg, 1))
+            nxt = np.where(sink, r % n, 0).astype(np.int64)
+            live = ~sink
+            if live.any():
+                nxt[live] = _gather_adjv(adjv_mm, idx[live], chunk, ledger, gauge)
+            hist.append_run(wid, np.full(wid.size, t + 1, np.int64), nxt)
+            if adv is not None:
+                adv.append_run(nxt, wid)
         if adv is not None:
-            adv.append_run(nxt, wid)
-    if adv is not None:
-        outs = [
-            BlockStore(workdir, wfront_store_name(t + 1, d), ledger,
-                       columns=("pos", "wid"), gauge=gauge)
-            for d in range(pcfg.nb)
-        ]
-        partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
-        adv.destroy()
-    tmp.destroy()
+            outs = tr.channels(lambda d: wfront_store_name(t + 1, d), pcfg.nb,
+                               columns=("pos", "wid"))
+            partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
+            adv.destroy()
+        tmp.destroy()
 
 
 def walk_hist_scatter_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
-                             ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                             ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                             transport: Optional[Transport] = None):
     """Collect phase, scatter half: ship every history row bucket j emitted
-    to the walker-block owner of its walker id."""
+    through the transport to the walker-block owner of its walker id."""
     gauge = gauge if gauge is not None else MemoryGauge()
     wpb = -(-wcfg.num_walkers // pcfg.nb)
-    outs = [
-        BlockStore(workdir, whist_inbox_name(d), ledger,
-                   columns=("wid", "step", "v"), gauge=gauge)
-        for d in range(pcfg.nb)
-    ]
-    for s in range(wcfg.length + 1):
-        src = BlockStore.attach(workdir, whist_store_name(s, j), ledger,
-                                columns=("wid", "step", "v"), gauge=gauge)
-        partition_runs(src, outs, lambda w, st, v: w // wpb,
-                       tag_prefix=f"{j:03d}_{s:04d}")
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        outs = tr.channels(whist_inbox_name, pcfg.nb,
+                           columns=("wid", "step", "v"))
+        for s in range(wcfg.length + 1):
+            src = BlockStore.attach(workdir, whist_store_name(s, j), ledger,
+                                    columns=("wid", "step", "v"), gauge=gauge)
+            partition_runs(src, outs, lambda w, st, v: w // wpb,
+                           tag_prefix=f"{j:03d}_{s:04d}")
 
 
 def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
-                            ledger: IOLedger, gauge: Optional[MemoryGauge] = None):
+                            ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                            transport: Optional[Transport] = None):
     """Collect phase, join half: external-sort bucket j's inbox by the flat
     key wid*(L+1)+step; the merged stream covers exactly the walker block's
     cells once each, so writing it out is one sequential pass over the
@@ -546,8 +618,9 @@ def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg,
     def key(w, s, v):
         return w * (L + 1) + s
 
-    inbox = BlockStore.attach(workdir, whist_inbox_name(j), ledger,
-                              columns=("wid", "step", "v"), gauge=gauge)
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as _tr:
+        inbox = _tr.drain_inbox(whist_inbox_name(j),
+                                columns=("wid", "step", "v"))
     tmp = BlockStore(workdir, whist_inbox_name(j) + "_sorted", ledger,
                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
     sort_runs(inbox, tmp, key=key)
@@ -563,60 +636,68 @@ def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg,
 
 
 def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
-                orchestrator: "PhaseOrchestrator") -> str:
+                orchestrator: "PhaseOrchestrator",
+                transport: Optional[Transport] = None) -> str:
     """The walk phase loop, shared by the inline driver (data/walks.py's
     external_walks) and PartitionedGenerator.walk_corpus.  `map_kernel` is
     the barrier, exactly as in drive_shuffle.  Requires the csr_sorted phase
     outputs (csr_offv_*/csr_adjv_* bucket files) in `workdir`.
 
     Resume discipline: each phase pre-cleans its own multi-writer outputs
-    (stale runs from a crashed attempt) and the PREVIOUS phase's consumed
-    frontier — inputs are never destroyed by the phase that reads them, so a
-    phase can always be rerun after a mid-phase crash.  walk_gc reclaims
-    everything once the corpus memmap is on disk.
+    through the driver's `transport` (stale runs AND partial frames from a
+    crashed attempt, on whichever host owns the inbox) and the PREVIOUS
+    phase's consumed frontier — inputs are never destroyed by the phase that
+    reads them, so a phase can always be rerun after a mid-phase crash.
+    walk_gc reclaims everything once the corpus memmap is on disk.
     """
     nb, L = pcfg.nb, wcfg.length
     orch = orchestrator
     mark = lambda _res: {"done": True}  # noqa: E731  (filesystem is the manifest)
     skip = lambda _m: None              # noqa: E731
+    with _exchange(pcfg, workdir, IOLedger(), None, transport) as tr:
 
-    def _init():
-        for d in range(nb):
-            clean_store(workdir, wfront_store_name(0, d))
-        map_kernel("walk_init", [(j, wcfg) for j in range(nb)])
+        def _init():
+            tr.clean_inboxes([wfront_store_name(0, d) for d in range(nb)])
+            map_kernel("walk_init", [(j, wcfg) for j in range(nb)])
 
-    orch.run_phase("walk_init", _init, save=mark, load=skip)
-    for t in range(L):
-        def _hop(t=t):
-            if t > 0:
-                for d in range(nb):
-                    clean_store(workdir, wfront_store_name(t - 1, d))
+        orch.run_phase("walk_init", _init, save=mark, load=skip)
+        for t in range(L):
+            def _hop(t=t):
+                if t > 0:
+                    tr.clean_inboxes(
+                        [wfront_store_name(t - 1, d) for d in range(nb)])
+                tr.clean_inboxes(
+                    [wfront_store_name(t + 1, d) for d in range(nb)])
+                map_kernel("walk_hop", [(j, t, wcfg) for j in range(nb)])
+
+            orch.run_phase(f"walk_hop_{t:04d}", _hop, save=mark, load=skip)
+        out_path = os.path.join(workdir, wcfg.out_name)
+
+        def _collect():
+            tr.clean_inboxes([whist_inbox_name(d) for d in range(nb)])
+            out = np.lib.format.open_memmap(out_path, mode="w+", dtype=np.int64,
+                                            shape=(wcfg.num_walkers, L + 1))
+            del out
+            map_kernel("walk_hist_scatter", [(j, wcfg) for j in range(nb)])
+            map_kernel("walk_hist_gather", [(j, wcfg) for j in range(nb)])
+
+        orch.run_phase("walk_collect", _collect, save=mark, load=skip)
+
+        def _gc():
+            # keep_all is the same debugging escape hatch _apply_frees
+            # honors: the walk intermediates (frontiers, history stores)
+            # stay on disk for inspection.
+            if orch.keep_all:
+                return
+            names = []
             for d in range(nb):
-                clean_store(workdir, wfront_store_name(t + 1, d))
-            map_kernel("walk_hop", [(j, t, wcfg) for j in range(nb)])
+                for t in range(L + 1):
+                    names.append(wfront_store_name(t, d))
+                    names.append(whist_store_name(t, d))
+                names.append(whist_inbox_name(d))
+            tr.clean_inboxes(names)
 
-        orch.run_phase(f"walk_hop_{t:04d}", _hop, save=mark, load=skip)
-    out_path = os.path.join(workdir, wcfg.out_name)
-
-    def _collect():
-        for d in range(nb):
-            clean_store(workdir, whist_inbox_name(d))
-        out = np.lib.format.open_memmap(out_path, mode="w+", dtype=np.int64,
-                                        shape=(wcfg.num_walkers, L + 1))
-        del out
-        map_kernel("walk_hist_scatter", [(j, wcfg) for j in range(nb)])
-        map_kernel("walk_hist_gather", [(j, wcfg) for j in range(nb)])
-
-    orch.run_phase("walk_collect", _collect, save=mark, load=skip)
-
-    def _gc():
-        for d in range(nb):
-            for t in range(L + 1):
-                clean_store(workdir, wfront_store_name(t, d))
-                clean_store(workdir, whist_store_name(t, d))
-            clean_store(workdir, whist_inbox_name(d))
-
-    orch.run_phase("walk_gc", _gc, save=mark, load=skip)
+        orch.run_phase("walk_gc", _gc, save=mark, load=skip)
     return out_path
 
 
@@ -644,13 +725,21 @@ class PhaseOrchestrator:
     """
 
     def __init__(self, workdir: str, ledger: IOLedger, checkpoint: bool = False,
-                 config_key: Optional[str] = None, state_name: str = "phases.json"):
+                 config_key: Optional[str] = None, state_name: str = "phases.json",
+                 keep_all: bool = False):
         # `state_name` separates checkpoint namespaces sharing one workdir
         # (the walk pipeline resumes independently of the generation pipeline
         # whose CSR it reads — see drive_walks).
         self.workdir = workdir
         self.ledger = ledger
         self.checkpoint = checkpoint
+        # Checkpoint GC: run_phase(frees=[...]) names stores whose LAST
+        # consumer is that phase; once the phase is done (and, when
+        # checkpointing, its manifest is durably on disk) they are dropped,
+        # bounding the workdir to ~the live frontier of the pipeline instead
+        # of every intermediate ever written.  keep_all=True is the debugging
+        # escape hatch that retains everything.
+        self.keep_all = keep_all
         self.records: List[PhaseRecord] = []
         self._state_path = os.path.join(workdir, state_name)
         self._config_key = config_key
@@ -658,8 +747,11 @@ class PhaseOrchestrator:
         # Cascade intermediate stores are merge-private scratch: a crash mid
         # merge leaves them behind, and they are never part of any phase's
         # checkpointed manifest — sweep them before resuming so a resumed run
-        # starts from exactly the stores the manifests describe.
+        # starts from exactly the stores the manifests describe.  Partial
+        # exchange frames (`.part`, a receive killed mid-frame) are the same
+        # kind of stray for the socket transport — swept with them.
         clean_cascade_stores(workdir)
+        sweep_partial_frames(workdir)
         if checkpoint and os.path.exists(self._state_path):
             try:
                 with open(self._state_path) as f:
@@ -681,11 +773,18 @@ class PhaseOrchestrator:
         fn: Callable[[], object],
         save: Optional[Callable[[object], Dict]] = None,
         load: Optional[Callable[[Dict], object]] = None,
+        frees: Sequence[str] = (),
     ):
+        """`frees` names stores this phase is the LAST consumer of; they are
+        removed once the phase completes — strictly AFTER the checkpoint
+        write, so a crash between completion and checkpoint still leaves the
+        rerun its inputs.  A resumed phase re-applies its frees (idempotent),
+        covering a crash between checkpoint write and GC."""
         if self.checkpoint and load is not None and name in self._completed:
             result = load(self._completed[name])
             self.records.append(PhaseRecord(name, "resumed", 0.0,
                                             {k: 0 for k in self.ledger.as_dict()}))
+            self._apply_frees(frees)
             return result
         snap = self.ledger.snapshot()
         t0 = time.perf_counter()
@@ -701,7 +800,14 @@ class PhaseOrchestrator:
             with open(tmp, "w") as f:
                 json.dump(state, f)
             os.replace(tmp, self._state_path)  # atomic: never a torn state file
+        self._apply_frees(frees)
         return result
+
+    def _apply_frees(self, frees: Sequence[str]) -> None:
+        if self.keep_all:
+            return
+        for name in frees:
+            clean_store(self.workdir, name)
 
     def delta(self, name: str) -> Dict[str, int]:
         """Ledger delta of the most recent run of phase `name`."""
@@ -737,52 +843,129 @@ _KERNELS = {
 }
 
 
+# Process-local transport reuse: pool workers persist across barriers, so a
+# socket transport (and its per-peer TCP connections) is built once per
+# (workdir, peers) and rebound to each task's private ledger/gauge instead
+# of paying connect/teardown on every kernel invocation — O(phases * nb)
+# churn otherwise.  Evicted (and closed) if a kernel dies, so a poisoned
+# connection never leaks into the next task.
+_TRANSPORT_CACHE: Dict[Tuple, Transport] = {}
+
+
 def _run_kernel(task):
     """Worker entry point: run one bucket kernel with a private ledger/gauge
-    and ship the accounting back to the parent."""
+    and the process-cached transport, and ship the accounting (including
+    sender-side exchange stats — transports hold sockets and cannot cross
+    the process boundary themselves) back to the parent."""
     kernel, pcfg, workdir, args = task
     ledger = IOLedger()
     gauge = MemoryGauge()
-    out = _KERNELS[kernel](pcfg, workdir, *args, ledger=ledger, gauge=gauge)
-    return out, ledger.as_dict(), gauge.peak_rows
+    key = (workdir, pcfg.transport, pcfg.peer_addrs)
+    tr = _TRANSPORT_CACHE.get(key)
+    if tr is None:
+        tr = _TRANSPORT_CACHE[key] = make_transport(pcfg, workdir, ledger, gauge)
+    else:
+        tr.rebind(ledger, gauge)
+    try:
+        out = _KERNELS[kernel](pcfg, workdir, *args, ledger=ledger,
+                               gauge=gauge, transport=tr)
+    except BaseException:
+        _TRANSPORT_CACHE.pop(key, None)
+        tr.close()
+        raise
+    return out, ledger.as_dict(), gauge.peak_rows, dataclasses.asdict(tr.stats)
 
 
 class PartitionedGenerator:
     """Multi-process out-of-core generator: the paper's cluster on one host.
 
     nb workers (a `concurrent.futures` pool over a spawn context — safe with
-    an initialized jax parent), each owning vertex range [i*B, (i+1)*B);
-    the shared filesystem carries the bucket exchanges that MPI would.
-    Phases are bulk-synchronous: scatter kernels for every bucket complete
-    (barrier) before any join kernel starts, exactly the paper's structure.
+    an initialized jax parent), each owning vertex range [i*B, (i+1)*B).
+    The bucket exchanges that MPI would carry ride the configured Transport:
+    the shared filesystem (cfg.transport="fs") or framed TCP to
+    ExchangeServers ("socket") — with socket and no explicit peer_addrs, the
+    driver starts `exchange_servers` loopback servers and workers rendezvous
+    with them; with explicit peer_addrs each address may live on another
+    host, which is the multi-host deployment shape.  Phases are
+    bulk-synchronous: scatter kernels for every bucket complete (barrier)
+    before any join kernel starts, exactly the paper's structure, and a send
+    is acked only once durable at the receiver — so the barrier doubles as
+    the exchange flush.
 
     `max_workers=0` runs the same kernels in-process (the sequential
-    debugging mode); the stores, and therefore the result, are identical.
+    debugging mode); the stores, and therefore the result, are identical —
+    across worker counts AND across transports.
+
+    `checkpoint=True` makes every phase resumable (state in
+    <workdir>/phases.json): a killed run — even one killed mid-exchange —
+    replays unfinished phases from the senders' still-checkpointed input
+    stores, after the pre-senders inbox sweep clears stale runs and partial
+    frames.  Unless `keep_all` (default: cfg.keep_phase_stores), each
+    phase's stores are dropped once every downstream consumer is
+    done/checkpointed, bounding the disk footprint.
     """
 
-    def __init__(self, cfg, workdir: str, max_workers: Optional[int] = None):
-        self.pcfg = validate_external_shape(
+    def __init__(self, cfg, workdir: str, max_workers: Optional[int] = None,
+                 checkpoint: bool = False, keep_all: Optional[bool] = None,
+                 exchange_servers: int = 1):
+        pcfg = validate_external_shape(
             cfg if isinstance(cfg, PlainCfg) else plain_config(cfg))
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
         self.ledger = IOLedger()
         self.gauge = MemoryGauge()
+        self._servers: List[ExchangeServer] = []
+        self.exchange_stats = TransportStats()
+        if pcfg.transport == "socket" and pcfg.peer_addrs is None:
+            ns = max(1, min(int(exchange_servers), pcfg.nb))
+            self._servers = [ExchangeServer(workdir) for _ in range(ns)]
+            pcfg = dataclasses.replace(
+                pcfg, peer_addrs=tuple(self._servers[j % ns].addr
+                                       for j in range(pcfg.nb)))
+        self.pcfg = pcfg
+        self.transport = make_transport(pcfg, workdir, self.ledger, self.gauge)
         if max_workers is None:
             max_workers = min(self.pcfg.nb, os.cpu_count() or 1)
         self.max_workers = max_workers
         self._pool: Optional[ProcessPoolExecutor] = None
-        self.orchestrator = PhaseOrchestrator(workdir, self.ledger)
+        if keep_all is None:
+            keep_all = bool(getattr(cfg, "keep_phase_stores", False))
+        self.keep_all = keep_all
+        self.orchestrator = PhaseOrchestrator(
+            workdir, self.ledger, checkpoint=checkpoint,
+            config_key=repr(("partitioned", result_config_key(self.pcfg))),
+            keep_all=keep_all)
 
-    def close(self):
+    def _shutdown_pool(self):
         if self._pool is not None:
             self._pool.shutdown()
             self._pool = None
+
+    def close(self):
+        self._shutdown_pool()
+        self.transport.close()
+        # In-process mode (max_workers=0) populates the worker transport
+        # cache in THIS process; drop those entries so their connections
+        # don't dangle into stopped servers.
+        for key in [k for k in _TRANSPORT_CACHE if k[0] == self.workdir]:
+            _TRANSPORT_CACHE.pop(key).close()
+        self._drain_servers()
+        for srv in self._servers:
+            srv.stop()
+        self._servers = []
 
     def __enter__(self):
         return self
 
     def __exit__(self, *exc):
         self.close()
+
+    def _drain_servers(self):
+        """Fold receiver-side accounting (disk writes, frame peaks, wire
+        bytes) into the driver's ledger/gauge/stats — called at every barrier
+        so per-phase ledger deltas include the receive half of the exchange."""
+        for srv in self._servers:
+            self.exchange_stats.add(srv.drain_accounting(self.ledger, self.gauge))
 
     # -- the barrier ----------------------------------------------------------
     def _map(self, kernel: str, argss: Sequence[Tuple]) -> List:
@@ -797,22 +980,25 @@ class PartitionedGenerator:
                     max_workers=self.max_workers, mp_context=get_context("spawn"))
             results = list(self._pool.map(_run_kernel, tasks))
         outs = []
-        for out, ldict, peak in results:
+        for out, ldict, peak, sdict in results:
             for k, v in ldict.items():
                 setattr(self.ledger, k, getattr(self.ledger, k) + v)
             self.gauge.track(peak)
+            self.exchange_stats.add(TransportStats(**sdict))
             outs.append(out)
+        self._drain_servers()
         return outs
 
     # -- phases ----------------------------------------------------------------
     def _shuffle(self):
-        drive_shuffle(self.pcfg, self.workdir, self._map)
+        drive_shuffle(self.pcfg, self.workdir, self._map,
+                      transport=self.transport)
 
     def _relabel(self):
         nb = self.pcfg.nb
         for pass_ix in (0, 1):
-            for j in range(nb):
-                clean_store(self.workdir, relabel_inbox_name(pass_ix, j))
+            self.transport.clean_inboxes(
+                [relabel_inbox_name(pass_ix, j) for j in range(nb)])
             self._map("relabel_scatter", [(i, pass_ix) for i in range(nb)])
             self._map("relabel_apply", [(i, pass_ix) for i in range(nb)])
 
@@ -822,18 +1008,38 @@ class PartitionedGenerator:
             raise ValueError("partitioned mode implements csr_variant='sorted' only")
         nb = self.pcfg.nb
         orch = self.orchestrator
-        orch.run_phase("shuffle", self._shuffle)
-        orch.run_phase("generate", lambda: self._map("generate", [(i,) for i in range(nb)]))
-        orch.run_phase("relabel", self._relabel)
+        mark = lambda _res: {"done": True}  # noqa: E731 (filesystem is the manifest)
+        skip = lambda _m: None              # noqa: E731
+        orch.run_phase("shuffle", self._shuffle, save=mark, load=skip)
+        orch.run_phase("generate", lambda: self._map("generate", [(i,) for i in range(nb)]),
+                       save=mark, load=skip)
+        # GC declarations: each store list's LAST consumer is the naming
+        # phase.  pv buckets are never freed here — they ARE the partitioned
+        # driver's permutation output (pv_buckets()).
+        orch.run_phase("relabel", self._relabel, save=mark, load=skip,
+                       frees=[edges_store_name(i) for i in range(nb)]
+                             + [edges_store_name(i, 0) for i in range(nb)])
 
         def _redistribute():
-            for j in range(nb):
-                clean_store(self.workdir, owned_store_name(j))
+            self.transport.clean_inboxes([owned_store_name(j) for j in range(nb)])
             return self._map("redistribute", [(i,) for i in range(nb)])
 
-        orch.run_phase("redistribute", _redistribute)
-        paths = orch.run_phase("csr_sorted", lambda: self._map("csr_sorted", [(i,) for i in range(nb)]))
-        self.close()
+        orch.run_phase("redistribute", _redistribute, save=mark, load=skip,
+                       frees=[edges_store_name(i, 1) for i in range(nb)])
+
+        def _save_csr(paths):
+            return {"paths": [[os.path.basename(o), os.path.basename(a)]
+                              for o, a in paths]}
+
+        def _load_csr(m):
+            return [(os.path.join(self.workdir, o), os.path.join(self.workdir, a))
+                    for o, a in m["paths"]]
+
+        paths = orch.run_phase(
+            "csr_sorted", lambda: self._map("csr_sorted", [(i,) for i in range(nb)]),
+            save=_save_csr, load=_load_csr,
+            frees=[owned_store_name(j) for j in range(nb)])
+        self._shutdown_pool()
         csr = [load_bucket_csr(offv_path, adjv_path, self.ledger, self.gauge)
                for offv_path, adjv_path in paths]
         return csr, self.ledger
@@ -846,14 +1052,17 @@ class PartitionedGenerator:
                     checkpoint: bool = False) -> np.ndarray:
         """Out-of-core walk corpus [num_walkers, length+1] over this
         generator's CSR bucket files — the walk-frontier exchange running
-        through the same worker pool and `{sender}_{seq}` filesystem
-        transport as generation.  Requires run() to have completed (the
-        csr_sorted phase writes the bucket CSR files the hops join against).
-        Bit-identical to data/walks.host_walks on the assembled CSR."""
+        through the same worker pool and the same Transport (filesystem
+        `{sender}_{seq}` runs or framed TCP) as generation.  Requires run()
+        to have completed (the csr_sorted phase writes the bucket CSR files
+        the hops join against).  Bit-identical to data/walks.host_walks on
+        the assembled CSR, whichever transport carried the frontiers."""
         wcfg = WalkCfg(num_walkers=num_walkers, length=length, seed=seed,
                        out_name=out_name)
         orch = PhaseOrchestrator(self.workdir, self.ledger, checkpoint=checkpoint,
                                  state_name="walk_phases.json",
-                                 config_key=repr((self.pcfg, wcfg)))
-        path = drive_walks(self.pcfg, self.workdir, wcfg, self._map, orch)
+                                 config_key=repr((result_config_key(self.pcfg), wcfg)),
+                                 keep_all=self.keep_all)
+        path = drive_walks(self.pcfg, self.workdir, wcfg, self._map, orch,
+                           transport=self.transport)
         return np.load(path, mmap_mode="r")

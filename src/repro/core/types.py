@@ -19,7 +19,7 @@ and the edges whose source is in its range"):
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
 import jax.numpy as jnp
 
@@ -77,6 +77,23 @@ class GraphConfig:
     # Persist per-phase output manifests to <workdir>/phases.json and resume
     # completed phases on re-run (PhaseOrchestrator).
     checkpoint_phases: bool = False
+    # --- exchange transport (core/transport.py) ---------------------------
+    # "fs":     bucket exchanges ride the shared filesystem via the
+    #           {sender}_{seq} run-tag convention (single host, reference).
+    # "socket": exchanges are framed TCP to per-bucket ExchangeServers —
+    #           bytes cross the interconnect once instead of twice, and
+    #           PartitionedGenerator workers can rendezvous across hosts.
+    #           Outputs are bit-identical across backends.
+    transport: str = "fs"
+    # One "host:port" ExchangeServer address per bucket (socket transport).
+    # None + transport="socket" lets PartitionedGenerator start loopback
+    # servers and fill the addresses in.
+    peer_addrs: Optional[Tuple[str, ...]] = None
+    # Checkpoint GC escape hatch: True keeps every phase-output store on disk
+    # for debugging; False (default) lets the PhaseOrchestrator drop a
+    # phase's stores once all downstream consumers are done/checkpointed,
+    # bounding the disk footprint.
+    keep_phase_stores: bool = False
 
     # --- derived ----------------------------------------------------------
     @property

@@ -67,7 +67,9 @@ from ..core.phases import (
     WalkCfg,
     drive_walks,
     plain_config,
+    result_config_key,
 )
+from ..core.transport import make_transport
 from ..core.types import GraphConfig, owner_of
 from ..distributed.collectives import capacity_all_to_all, pvary, shard_map
 
@@ -299,13 +301,22 @@ def external_walks(cfg, workdir: str, *, num_walkers: int, length: int,
                    out_name=out_name)
     orch = PhaseOrchestrator(workdir, ledger, checkpoint=checkpoint,
                              state_name="walk_phases.json",
-                             config_key=repr((pcfg, wcfg)))
+                             config_key=repr((result_config_key(pcfg), wcfg)),
+                             keep_all=bool(getattr(cfg, "keep_phase_stores",
+                                                   False)))
 
-    def inline_map(kernel: str, argss):
-        for args in argss:
-            _KERNELS[kernel](pcfg, workdir, *args, ledger=ledger, gauge=gauge)
+    # One transport for the whole corpus: the kernels' exchange AND the
+    # drivers' pre-senders inbox sweeps go through it (fs by default;
+    # a socket config with live peer_addrs works too — the partitioned
+    # driver is the usual owner of that mode).
+    with make_transport(pcfg, workdir, ledger, gauge) as tr:
 
-    path = drive_walks(pcfg, workdir, wcfg, inline_map, orch)
+        def inline_map(kernel: str, argss):
+            for args in argss:
+                _KERNELS[kernel](pcfg, workdir, *args, ledger=ledger,
+                                 gauge=gauge, transport=tr)
+
+        path = drive_walks(pcfg, workdir, wcfg, inline_map, orch, transport=tr)
     return ExternalWalkResult(np.load(path, mmap_mode="r"), ledger, gauge, orch)
 
 

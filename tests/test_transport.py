@@ -1,0 +1,402 @@
+"""Pluggable exchange transport: socket/filesystem parity, framing guards,
+partial-frame sweeping, mid-exchange kill + resume, and checkpoint GC.
+
+The SocketTransport must be a drop-in for the `{sender}_{seq}` filesystem
+convention: bit-identical stores (and therefore bit-identical graphs and
+walk corpora — which the fs backend already proves against the device
+oracle), the same O(chunk) memory bound, and the same crash-replay story.
+"""
+
+import hashlib
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import BlockStore, IOLedger, MemoryGauge
+from repro.core.external import StreamingGenerator
+from repro.core.phases import (
+    _KERNELS, PartitionedGenerator, relabel_inbox_name)
+from repro.core.transport import (
+    ExchangeServer, FilesystemTransport, SocketTransport, TransportError,
+    make_transport, sweep_partial_frames)
+from repro.core.types import GraphConfig
+from repro.data.walks import concat_bucket_csr, host_walks, start_vertex
+
+
+# ---------------------------------------------------------------------------
+# frame protocol
+# ---------------------------------------------------------------------------
+
+
+def test_socket_roundtrip_matches_filesystem(tmp_path):
+    """The same appends through both backends produce byte-identical run
+    files, recovered in the same (sender-lexicographic) order."""
+    d_fs, d_sk = str(tmp_path / "fs"), str(tmp_path / "sk")
+    os.makedirs(d_fs), os.makedirs(d_sk)
+    rng = np.random.default_rng(0)
+    runs = [(rng.integers(0, 99, 37), rng.integers(0, 99, 37)),
+            (rng.integers(0, 99, 5), rng.integers(0, 99, 5))]
+    ledger = IOLedger()
+    fs = FilesystemTransport(d_fs, ledger)
+    with ExchangeServer(d_sk) as srv:
+        sk = SocketTransport(d_sk, ledger, peers=(srv.addr,))
+        for tr, _d in ((fs, d_fs), (sk, d_sk)):
+            ch = tr.channel(0, "inbox")
+            for k, (a, b) in enumerate(runs):
+                ch.append_run(a, b, tag=f"007_{k:05d}")
+            tr.flush()
+        got_fs = list(fs.drain_inbox("inbox").iter_runs())
+        got_sk = list(sk.drain_inbox("inbox").iter_runs())
+        sk.close()
+    assert len(got_fs) == len(got_sk) == len(runs)
+    for (a1, b1), (a2, b2) in zip(got_fs, got_sk):
+        np.testing.assert_array_equal(a1, a2)
+        np.testing.assert_array_equal(b1, b2)
+    # identical bytes on disk, not merely equal arrays
+    for f in sorted(os.listdir(os.path.join(d_fs, "inbox"))):
+        with open(os.path.join(d_fs, "inbox", f), "rb") as fa, \
+             open(os.path.join(d_sk, "inbox", f), "rb") as fb:
+            assert fa.read() == fb.read(), f
+    assert srv.stats.frames_recv == len(runs)
+
+
+def test_socket_refuses_reordered_seq(tmp_path):
+    """Per-connection sequence numbers are a corruption guard: a gap means a
+    lost/reordered frame and the server must refuse, not silently accept."""
+    with ExchangeServer(str(tmp_path)) as srv:
+        tr = SocketTransport(str(tmp_path), IOLedger(), peers=(srv.addr,))
+        ch = tr.channel(0, "inbox")
+        ch.append_run(np.arange(3), np.arange(3), tag="000_00000")
+        tr._conns[srv.addr][1] = 7   # simulate dropped frames 1..6
+        with pytest.raises(TransportError, match="seq"):
+            ch.append_run(np.arange(3), np.arange(3), tag="000_00001")
+        tr.close()
+
+
+def test_socket_refuses_truncated_frame(tmp_path):
+    with ExchangeServer(str(tmp_path)) as srv:
+        tr = SocketTransport(str(tmp_path), IOLedger(), peers=(srv.addr,))
+        with pytest.raises(TransportError, match="truncated|payload"):
+            tr._rpc(srv.addr, 0, {"store": "inbox", "tag": "000_00000",
+                                  "dtype": "<i8", "rows": 10, "ncols": 2},
+                    b"\x00" * 24)
+        tr.close()
+
+
+def test_clean_inboxes_sweeps_stale_runs_and_partial_frames(tmp_path):
+    """The pre-senders sweep must clear complete stale runs AND `.part`
+    partial frames, identically through both backends."""
+    ledger = IOLedger()
+    for sub, mk in (("fs", lambda d: FilesystemTransport(d, ledger)),
+                    ("sk", None)):
+        d = str(tmp_path / sub)
+        inbox = os.path.join(d, "inbox")
+        os.makedirs(inbox)
+        store = BlockStore(d, "inbox", ledger)
+        store.append_run(np.arange(4), np.arange(4), tag="001_00000")
+        with open(os.path.join(inbox, "run_001_00001.npy.part"), "wb") as f:
+            f.write(b"torn frame")
+        if mk is not None:
+            tr = mk(d)
+            tr.clean_inboxes(["inbox"])
+        else:
+            with ExchangeServer(d) as srv:
+                tr = SocketTransport(d, ledger, peers=(srv.addr,))
+                tr.clean_inboxes(["inbox"])
+                tr.close()
+        assert not os.path.exists(inbox)
+
+
+def test_sweep_partial_frames_only_touches_part_files(tmp_path):
+    d = str(tmp_path)
+    os.makedirs(os.path.join(d, "store"))
+    real = os.path.join(d, "store", "run_000_00000.npy")
+    stray = os.path.join(d, "store", "run_000_00001.npy.part")
+    top_stray = os.path.join(d, "x.part")
+    for p in (real, stray, top_stray):
+        with open(p, "wb") as f:
+            f.write(b"x")
+    sweep_partial_frames(d)
+    assert os.path.exists(real)
+    assert not os.path.exists(stray) and not os.path.exists(top_stray)
+
+
+def test_make_transport_socket_requires_peers(tmp_path):
+    cfg = GraphConfig(scale=8, transport="socket")
+    with pytest.raises(ValueError, match="peer_addrs"):
+        make_transport(cfg, str(tmp_path), IOLedger())
+    with pytest.raises(ValueError, match="transport"):
+        make_transport(GraphConfig(scale=8).with_(transport="carrier-pigeon"),
+                       str(tmp_path), IOLedger())
+
+
+def test_streaming_generator_rejects_socket(tmp_path):
+    with pytest.raises(ValueError, match="PartitionedGenerator"):
+        StreamingGenerator(GraphConfig(scale=8, transport="socket"),
+                           str(tmp_path))
+
+
+def test_filesystem_alias_canonicalized(tmp_path):
+    """transport="filesystem" is the long-form alias for "fs" — accepted
+    everywhere "fs" is, including the single-process driver."""
+    from repro.core.phases import plain_config
+    assert plain_config(GraphConfig(scale=8, transport="filesystem")).transport == "fs"
+    gen = StreamingGenerator(GraphConfig(scale=8, transport="filesystem",
+                                         shuffle_variant="external",
+                                         chunk_edges=128, edge_factor=2),
+                             str(tmp_path))
+    pv, csr, _ = gen.run()
+    assert sum(int(o[-1]) for o, _ in csr) == 2 * 256
+
+
+# ---------------------------------------------------------------------------
+# end-to-end parity: generator + walk corpus, fs vs socket vs oracle
+# ---------------------------------------------------------------------------
+
+
+def _full_run(cfg, workdir, W, L, wseed, **gen_kw):
+    """generate + relabel + redistribute + CSR + walk corpus; returns
+    (pv, csr sha256, walks array, generator)."""
+    part = PartitionedGenerator(cfg, workdir, max_workers=0, **gen_kw)
+    csr, _ = part.run()
+    walks = np.asarray(part.walk_corpus(W, L, seed=wseed)).copy()
+    pv = np.concatenate([
+        np.concatenate([v for (v,) in b.iter_runs()] or [np.zeros(0, np.int64)])
+        for b in part.pv_buckets()])
+    h = hashlib.sha256()
+    for o, a in csr:
+        h.update(np.asarray(o).tobytes())
+        h.update(np.asarray(a).tobytes())
+    return pv, h.hexdigest(), walks, csr, part
+
+
+@pytest.mark.parametrize("nb", [1, 4, 8])
+def test_socket_full_pipeline_bit_identical_to_fs(tmp_path, nb):
+    """Acceptance criterion: with transport="socket" over loopback the full
+    pipeline (and the walk corpus riding the same transport) is bit-identical
+    to the filesystem transport at nb in {1, 4, 8} — and both match the host
+    walk oracle on the assembled CSR."""
+    W, L, wseed = 33, 6, 3
+    cfg = GraphConfig(scale=9, nb=nb, chunk_edges=256, edge_factor=4,
+                      shuffle_variant="external")
+    pv_f, csr_f, walks_f, csr, pf = _full_run(
+        cfg, str(tmp_path / "fs"), W, L, wseed)
+    pv_s, csr_s, walks_s, _, ps = _full_run(
+        cfg.with_(transport="socket"), str(tmp_path / "sk"), W, L, wseed,
+        exchange_servers=2)
+    try:
+        np.testing.assert_array_equal(pv_f, pv_s)
+        assert csr_f == csr_s
+        np.testing.assert_array_equal(walks_f, walks_s)
+        # socket mode actually moved frames, and both backends account the
+        # same exchanged bytes (sender side), every one of which the socket
+        # server received
+        assert ps.exchange_stats.frames_recv > 0
+        assert pf.exchange_stats.bytes_sent == ps.exchange_stats.bytes_sent > 0
+        assert ps.exchange_stats.bytes_recv == ps.exchange_stats.bytes_sent
+        # both equal the host oracle on the same CSR layout
+        offv, adjv = concat_bucket_csr(csr)
+        wid = np.arange(W, dtype=np.uint32)
+        ref = host_walks(offv, adjv, start_vertex(wseed, wid, cfg.n), L,
+                         wseed, n=cfg.n, walker_ids=wid)
+        np.testing.assert_array_equal(walks_s, ref)
+    finally:
+        pf.close()
+        ps.close()
+
+
+def test_socket_bounded_memory_and_sequential(tmp_path):
+    """The O(chunk) gauge bound must hold over the wire: no exchange path —
+    sender framing, receiver buffering, or inbox drain — materializes a full
+    bucket, and disk I/O stays purely sequential."""
+    chunk, nb, W, L = 256, 16, 64, 6
+    cfg = GraphConfig(scale=12, nb=nb, chunk_edges=chunk, edge_factor=2,
+                      shuffle_variant="external", transport="socket")
+    with PartitionedGenerator(cfg, str(tmp_path), max_workers=0,
+                              exchange_servers=2) as part:
+        part.run()
+        part.walk_corpus(W, L, seed=0)
+        wpb = -(-W // nb)
+        assert part.gauge.peak_rows <= 4 * (chunk + wpb)
+        assert part.gauge.peak_rows < cfg.n
+        assert part.ledger.rand_reads == 0 == part.ledger.rand_writes
+        for srv in part._servers:
+            assert srv.gauge.peak_rows <= chunk
+
+
+@pytest.mark.slow
+def test_socket_true_multiprocess_smoke(tmp_path):
+    """Real spawned workers rendezvousing with the parent's loopback
+    ExchangeServers — the multi-host deployment shape on one machine."""
+    cfg = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=4,
+                      shuffle_variant="external", transport="socket")
+    with PartitionedGenerator(cfg, str(tmp_path), max_workers=2,
+                              exchange_servers=2) as part:
+        csr, ledger = part.run()
+        walks = np.asarray(part.walk_corpus(20, 5, seed=1)).copy()
+    assert sum(int(o[-1]) for o, _ in csr) == cfg.m
+    assert walks.shape == (20, 6)
+    assert ledger.rand_reads == 0 == ledger.rand_writes
+
+
+# ---------------------------------------------------------------------------
+# mid-exchange kill + resume
+# ---------------------------------------------------------------------------
+
+
+def test_socket_mid_exchange_kill_resume_bit_identical(tmp_path):
+    """Kill a worker mid-exchange (some frames already delivered to the
+    receiver, the rest never sent), leave a forged partial frame behind, and
+    resume: the crashed phase replays from the senders' checkpointed input
+    stores onto pre-cleaned inboxes, and every output byte matches an
+    uninterrupted filesystem-transport run."""
+    cfg_fs = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=4,
+                         shuffle_variant="external")
+    cfg_sk = cfg_fs.with_(transport="socket")
+    W, L, wseed = 23, 5, 9
+    pv_f, csr_f, walks_f, _, pf = _full_run(cfg_fs, str(tmp_path / "ref"),
+                                            W, L, wseed)
+    pf.close()
+
+    d = str(tmp_path / "crash")
+    orig = _KERNELS["relabel_scatter"]
+
+    def crashing_scatter(pcfg, workdir, i, pass_ix, *, ledger, gauge=None,
+                         transport=None):
+        if pass_ix == 1 and i == 2:
+            # deliver a partial exchange, then die: frames for dest 0 land,
+            # nothing else does
+            tr = make_transport(pcfg, workdir, ledger, gauge)
+            ch = tr.channel(0, relabel_inbox_name(1, 0))
+            ch.append_run(np.array([7], np.int64), np.array([8], np.int64),
+                          tag="002_00000")
+            tr.close()
+            raise RuntimeError("injected mid-exchange kill")
+        return orig(pcfg, workdir, i, pass_ix, ledger=ledger, gauge=gauge,
+                    transport=transport)
+
+    _KERNELS["relabel_scatter"] = crashing_scatter
+    try:
+        with PartitionedGenerator(cfg_sk, d, max_workers=0, checkpoint=True,
+                                  exchange_servers=2) as part:
+            with pytest.raises(RuntimeError, match="injected"):
+                part.run()
+    finally:
+        _KERNELS["relabel_scatter"] = orig
+
+    # forge the stray a killed receiver would leave mid-frame
+    inbox = os.path.join(d, relabel_inbox_name(1, 1))
+    os.makedirs(inbox, exist_ok=True)
+    with open(os.path.join(inbox, "run_003_00000.npy.part"), "wb") as f:
+        f.write(b"torn")
+
+    with PartitionedGenerator(cfg_sk, d, max_workers=0, checkpoint=True,
+                              exchange_servers=2) as part:
+        csr, _ = part.run()
+        statuses = {r["phase"]: r["status"]
+                    for r in part.orchestrator.report()}
+        assert statuses["shuffle"] == "resumed", statuses
+        assert statuses["generate"] == "resumed", statuses
+        assert statuses["relabel"] == "done", statuses
+        walks = np.asarray(part.walk_corpus(W, L, seed=wseed)).copy()
+        pv = np.concatenate([
+            np.concatenate([v for (v,) in b.iter_runs()])
+            for b in part.pv_buckets()])
+        h = hashlib.sha256()
+        for o, a in csr:
+            h.update(np.asarray(o).tobytes())
+            h.update(np.asarray(a).tobytes())
+    assert not os.path.exists(os.path.join(inbox, "run_003_00000.npy.part"))
+    np.testing.assert_array_equal(pv, pv_f)
+    assert h.hexdigest() == csr_f
+    np.testing.assert_array_equal(walks, walks_f)
+
+
+def test_partitioned_checkpoint_resume_all_phases(tmp_path):
+    """A completed checkpointed partitioned run resumes every phase without
+    recomputation, across transports (result keys normalize the transport
+    out, so a crashed fs run may resume under socket and vice versa)."""
+    cfg = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=4,
+                      shuffle_variant="external")
+    d = str(tmp_path)
+    with PartitionedGenerator(cfg, d, max_workers=0, checkpoint=True) as p1:
+        csr1, _ = p1.run()
+        off1 = [np.asarray(o).copy() for o, _ in csr1]
+    with PartitionedGenerator(cfg.with_(transport="socket"), d, max_workers=0,
+                              checkpoint=True) as p2:
+        csr2, _ = p2.run()
+        assert all(r["status"] == "resumed"
+                   for r in p2.orchestrator.report()), p2.orchestrator.report()
+        for o1, (o2, _) in zip(off1, csr2):
+            np.testing.assert_array_equal(o1, np.asarray(o2))
+
+
+# ---------------------------------------------------------------------------
+# checkpoint GC
+# ---------------------------------------------------------------------------
+
+
+def test_checkpoint_gc_drops_consumed_stores(tmp_path):
+    """Once every downstream consumer is checkpointed, intermediate stores
+    are gone — only final artifacts (CSR files, pv.npy) remain — and the
+    resumed run is still byte-identical."""
+    cfg = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=4,
+                      shuffle_variant="external", checkpoint_phases=True)
+    d = str(tmp_path)
+    g1 = StreamingGenerator(cfg, d)
+    pv1, csr1, _ = g1.run()
+    pv1 = np.asarray(pv1).copy()
+    for name in (["edges", "relabeled_p1"]
+                 + [f"owned_{i:03d}" for i in range(cfg.nb)]
+                 + [f"pv_r{g1._pcfg.rounds}_b{i:03d}" for i in range(cfg.nb)]):
+        assert not os.path.exists(os.path.join(d, name)), name
+    assert os.path.exists(os.path.join(d, "pv.npy"))
+    g2 = StreamingGenerator(cfg, d)
+    pv2, csr2, _ = g2.run()
+    statuses = {r["phase"]: r["status"] for r in g2.orchestrator.report()}
+    assert all(s == "resumed" for s in statuses.values()), statuses
+    np.testing.assert_array_equal(pv1, np.asarray(pv2))
+    for (o1, a1), (o2, a2) in zip(csr1, csr2):
+        np.testing.assert_array_equal(np.asarray(o1), np.asarray(o2))
+        np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+
+
+def test_checkpoint_gc_scatter_after_sorted_fails_with_guidance(tmp_path):
+    """A checkpointed 'sorted' run frees the redistribute outputs; a later
+    'scatter' run over the same workdir must fail with a clear message (not
+    a FileNotFoundError inside np.load) pointing at keep_phase_stores."""
+    cfg = GraphConfig(scale=9, nb=2, chunk_edges=256, edge_factor=4,
+                      shuffle_variant="external", checkpoint_phases=True)
+    d = str(tmp_path)
+    StreamingGenerator(cfg, d).run(csr_variant="sorted")
+    with pytest.raises(ValueError, match="keep_phase_stores"):
+        StreamingGenerator(cfg, d).run(csr_variant="scatter")
+
+
+def test_checkpoint_gc_keep_all_escape_hatch(tmp_path):
+    cfg = GraphConfig(scale=9, nb=2, chunk_edges=256, edge_factor=4,
+                      shuffle_variant="external", checkpoint_phases=True,
+                      keep_phase_stores=True)
+    d = str(tmp_path)
+    StreamingGenerator(cfg, d).run()
+    for name in ("edges", "relabeled_p1", "owned_000", "owned_001"):
+        assert os.path.isdir(os.path.join(d, name)), name
+
+
+def test_checkpoint_gc_partitioned_keeps_pv_buckets(tmp_path):
+    """The partitioned driver's pv buckets ARE its permutation output —
+    GC must drop its consumed edge stores but never the pv buckets."""
+    from repro.core.phases import edges_store_name, owned_store_name, pv_store_name
+    cfg = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=4,
+                      shuffle_variant="external")
+    d = str(tmp_path)
+    with PartitionedGenerator(cfg, d, max_workers=0) as part:
+        part.run()
+        rounds = part.pcfg.rounds
+        for i in range(cfg.nb):
+            for name in (edges_store_name(i), edges_store_name(i, 0),
+                         edges_store_name(i, 1), owned_store_name(i)):
+                assert not os.path.exists(os.path.join(d, name)), name
+            assert os.path.isdir(os.path.join(d, pv_store_name(rounds, i)))
+        assert part.pv_buckets()[0].total_rows() == cfg.n // cfg.nb
