@@ -23,9 +23,24 @@ One module per paper table/figure (DESIGN.md §6):
 from __future__ import annotations
 
 import argparse
+import json
+import os
 import sys
 import time
 import traceback
+
+BENCH_DIR = "experiments/bench"
+
+
+def _bench_json(name: str, payload) -> str:
+    """Machine-readable per-bench summary (BENCH_{name}.json) so the perf
+    trajectory is diffable PR-over-PR instead of buried in stdout tables."""
+    os.makedirs(BENCH_DIR, exist_ok=True)
+    path = os.path.join(BENCH_DIR, f"BENCH_{name}.json")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, default=str)
+    print(f"[saved {path}]")
+    return path
 
 
 def main():
@@ -72,16 +87,34 @@ def main():
     }
     chosen = [s for s in args.only.split(",") if s] or list(benches)
 
-    failed = []
+    failed, summary = [], []
     for name in chosen:
         print(f"\n######## {name} ########")
         t0 = time.time()
         try:
-            benches[name]()
-            print(f"[{name} done in {time.time() - t0:.1f}s]")
+            result = benches[name]()
+            secs = time.time() - t0
+            print(f"[{name} done in {secs:.1f}s]")
+            entry = {"bench": name, "ok": True,
+                     "wall_seconds": round(secs, 3), "fast": args.fast}
+            try:
+                json.dumps(result, default=str)
+                entry["result"] = result
+            except TypeError:
+                entry["result"] = None
+            _bench_json(name, entry)
+            summary.append({k: entry[k] for k in
+                            ("bench", "ok", "wall_seconds", "fast")})
         except Exception:
             traceback.print_exc()
+            secs = time.time() - t0
+            _bench_json(name, {"bench": name, "ok": False,
+                               "wall_seconds": round(secs, 3),
+                               "fast": args.fast})
+            summary.append({"bench": name, "ok": False,
+                            "wall_seconds": round(secs, 3), "fast": args.fast})
             failed.append(name)
+    _bench_json("summary", {"benches": summary, "failed": failed})
     if failed:
         print(f"\nFAILED: {failed}")
         sys.exit(1)

@@ -9,6 +9,11 @@ from .blockstore import (  # noqa: F401
     clean_cascade_stores, merge_runs, partition_runs, sort_runs,
 )
 from .phases import PhaseOrchestrator, PartitionedGenerator, plain_config  # noqa: F401
+from .corpus import ShardedWalks  # noqa: F401
+from .cluster import (  # noqa: F401
+    ClusterController, ClusterGenerator, ClusterSpec, CommandTemplateBackend,
+    HostRunner, HostSpec, LocalExecBackend,
+)
 from .transport import (  # noqa: F401
     ExchangeServer, FilesystemTransport, SocketTransport, Transport,
     TransportError, TransportStats, make_transport, sweep_partial_frames,

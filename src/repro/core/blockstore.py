@@ -445,6 +445,37 @@ def _merge_cursors(cursors: List[_MergeCursor], ncols: int,
         yield tuple(np.concatenate([p[c] for p in out_parts]) for c in range(ncols))
 
 
+def merge_segments(
+    segments: Sequence[Tuple[BlockStore, Sequence[int]]], key: KeySpec = 0,
+    block_rows: int = 0,
+) -> Iterator[Tuple[np.ndarray, ...]]:
+    """STABLE streaming merge over pre-built sorted segments.
+
+    A segment is (store, ordered run indices) whose runs form ONE globally
+    sorted sequence back to back — a single plain run, or a whole cascade
+    intermediate store.  This is merge_runs' inner merge exposed for callers
+    that build the segment list themselves: the pooled cascade
+    (phases.cascade_merge_bucket) runs each *group* of segments as its own
+    pool task, so intermediate merge levels parallelize across workers/hosts
+    instead of running serially inside one consumer kernel.  Equal keys
+    drain in segment order (see _merge_cursors), so any consecutive grouping
+    of segments is bit-identical to the flat merge — the same stability
+    contract merge_runs' inline cascade relies on.
+    """
+    segs = [(s, [r for r in runs if s.run_rows(r) > 0]) for s, runs in segments]
+    segs = [(s, runs) for s, runs in segs if runs]
+    if not segs:
+        return
+    max_run = max(s.run_rows(r) for s, runs in segs for r in runs)
+    flush_rows = max(block_rows, max_run)
+    fan = len(segs)
+    brows = block_rows if block_rows > 0 else max(1, max_run // max(1, fan))
+    lead = segs[0][0]
+    lead.gauge.track(brows * fan)
+    cursors = [_MergeCursor(s, runs, key, brows) for s, runs in segs]
+    yield from _merge_cursors(cursors, lead.ncols, flush_rows)
+
+
 CASCADE_MARKER = "__cas_l"  # substring naming cascade intermediate store dirs
 
 

@@ -1,0 +1,1096 @@
+"""Multi-host cluster runtime: the paper's actual deployment shape.
+
+PR 4 made every bucket exchange ride a pluggable Transport whose socket
+backend takes arbitrary `peer_addrs` — this module supplies the missing
+piece: something that actually STARTS workers + exchange servers on N
+machines, rendezvouses them, drives the bulk-synchronous phases across them,
+and keeps going (or resumes) when a host dies.  Four layers:
+
+  ClusterSpec        the host manifest: which hosts exist, where each one's
+                     private workdir lives, and which contiguous bucket
+                     range each owns (the paper's RP(n, nb) applied to
+                     hosts).  JSON round-trippable; never contains ephemeral
+                     ports — those are discovered at rendezvous.
+  HostRunner         the worker-host daemon: sweeps its workdir, starts the
+                     local ExchangeServer, registers with the controller,
+                     then polls for kernel tasks and executes them (in
+                     process, or through a local spawn pool) against its own
+                     per-host checkpoint state — so a relaunched host skips
+                     every task it already completed, recomputing nothing
+                     of its peers' work.
+  ClusterController  rendezvous + heartbeats + phase barriers over the same
+                     length-prefixed framing the exchange transport uses
+                     (a control RPC is a header-only frame; the reply rides
+                     the ack).  Dispatches each bucket kernel to the host
+                     owning args[0]'s bucket, detects dead hosts (exec
+                     handle exit or heartbeat silence), relaunches them
+                     through the exec backend, and retries transport-failed
+                     tasks once the peer map heals — GraphD's explicit
+                     failure handling for disk-resident small clusters.
+  ClusterGenerator   PartitionedGenerator with the pool swapped for the
+                     cluster: same phase drivers, fine-grained checkpointed
+                     clean/barrier phases (see drive_shuffle), sharded
+                     collect (per-host corpus shards + manifest — no single
+                     workdir ever holds the full corpus), and a graph
+                     manifest instead of a driver-side CSR load.
+
+Exec backends: `LocalExecBackend` spawns `python -m repro.launch.cluster
+host ...` subprocesses with per-host isolated workdirs (the reference
+backend, and the loopback "two-host" CI shape); `CommandTemplateBackend`
+formats an arbitrary command template (`ssh {host} ... --host-id {host_id}`)
+so srun/ssh/k8s launches are a string, not a subclass.
+
+Determinism is what makes the failure story simple: every run tag and every
+run's bytes are a pure function of (config, bucket, phase), so re-executing
+a half-finished task overwrites identical files — a resumed exchange never
+needs distributed rollback, only the "clean exactly once per phase"
+discipline the fine-grained checkpoint phases provide.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import shlex
+import socket
+import subprocess
+import sys
+import threading
+import time
+from collections import deque
+from concurrent.futures import ProcessPoolExecutor
+from multiprocessing import get_context
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .blockstore import IOLedger, MemoryGauge, clean_cascade_stores
+from .phases import (
+    PartitionedGenerator,
+    PhaseOrchestrator,
+    PlainCfg,
+    WalkCfg,
+    _MARK,
+    _SKIP,
+    _run_kernel,
+    csr_adjv_path,
+    csr_offv_path,
+    plain_config,
+    result_config_key,
+    validate_external_shape,
+)
+from .transport import (
+    ExchangeServer,
+    SocketTransport,
+    TransportError,
+    TransportStats,
+    _ACK,
+    _HDR,
+    _MAGIC,
+    _MAX_HEADER_BYTES,
+    _PLEN,
+    _recv_exact,
+    _send_frame,
+    sweep_partial_frames,
+)
+
+# Control-plane frame kind: rides the exchange transport's wire format
+# (magic, kind, header JSON) but is served by the ControlServer, never by an
+# ExchangeServer.  Requests are header-only; the JSON reply rides the ack
+# message field.
+_KIND_CTRL = 2
+
+
+class ClusterError(RuntimeError):
+    """A cluster-level failure: lost host past its restart budget, barrier
+    timeout, or a non-retriable kernel error reported by a host."""
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec — the host manifest
+# ---------------------------------------------------------------------------
+
+
+def format_peer_addrs(addrs: Sequence[str]) -> str:
+    """peer_addrs tuple -> the comma-joined CLI form."""
+    return ",".join(str(a) for a in addrs)
+
+
+def parse_peer_addrs(s: str) -> Tuple[str, ...]:
+    """CLI "host:port,host:port" -> validated peer_addrs tuple.  Round-trips
+    with format_peer_addrs (property-tested)."""
+    out = []
+    for part in s.split(","):
+        part = part.strip()
+        host, sep, port = part.rpartition(":")
+        if not sep or not host:
+            raise ValueError(f"peer address {part!r} is not host:port")
+        int(port)  # raises ValueError on a non-numeric port
+        out.append(part)
+    return tuple(out)
+
+
+@dataclasses.dataclass(frozen=True)
+class HostSpec:
+    """One worker host: id, its PRIVATE workdir (never shared with peers),
+    and the launch target a command template may address (ssh host name)."""
+
+    host_id: int
+    workdir: str
+    host: str = "127.0.0.1"
+
+
+@dataclasses.dataclass(frozen=True)
+class ClusterSpec:
+    """Host manifest + bucket ownership.  Host h owns the contiguous bucket
+    range [h*nb//H, (h+1)*nb//H) — the paper's range partition applied at
+    host granularity, so a host's buckets (and their vertex ranges) are one
+    contiguous span and per-host recomputation never touches a peer's data
+    (Funke et al.'s recomputable-partition shape)."""
+
+    nb: int
+    hosts: Tuple[HostSpec, ...]
+    controller_host: str = "127.0.0.1"
+    controller_port: int = 0   # 0 = ephemeral, discovered at start
+
+    def __post_init__(self):
+        ids = sorted(h.host_id for h in self.hosts)
+        if not self.hosts:
+            raise ValueError("ClusterSpec needs at least one host")
+        if ids != list(range(len(self.hosts))):
+            raise ValueError(f"host_ids must be 0..H-1, got {ids}")
+        if len({h.workdir for h in self.hosts}) != len(self.hosts):
+            raise ValueError("host workdirs must be distinct (per-host "
+                             "isolation is the whole point)")
+        if self.nb < len(self.hosts):
+            raise ValueError(
+                f"nb={self.nb} buckets cannot cover {len(self.hosts)} hosts")
+
+    @property
+    def num_hosts(self) -> int:
+        return len(self.hosts)
+
+    def buckets_of(self, host_id: int) -> range:
+        H = self.num_hosts
+        return range(host_id * self.nb // H, (host_id + 1) * self.nb // H)
+
+    def owner_of(self, bucket: int) -> int:
+        if not 0 <= bucket < self.nb:
+            raise ValueError(f"bucket {bucket} outside [0, {self.nb})")
+        # Inverse of buckets_of's balanced contiguous split: host h owns
+        # [h*nb//H, (h+1)*nb//H), so owner(b) = floor((b*H + H - 1) / nb)
+        # ... which is fiddly with uneven splits; a direct scan over H hosts
+        # is exact and H is tiny.
+        return next(h for h in range(self.num_hosts)
+                    if bucket in self.buckets_of(h))
+
+    def workdir_of(self, bucket: int) -> str:
+        return self.hosts[self.owner_of(bucket)].workdir
+
+    # -- (de)serialization ---------------------------------------------------
+    def to_json(self) -> Dict:
+        return {"nb": self.nb,
+                "controller": f"{self.controller_host}:{self.controller_port}",
+                "hosts": [dataclasses.asdict(h) for h in self.hosts]}
+
+    @classmethod
+    def from_json(cls, d: Dict) -> "ClusterSpec":
+        chost, _, cport = str(d.get("controller", "127.0.0.1:0")).rpartition(":")
+        return cls(nb=int(d["nb"]),
+                   hosts=tuple(HostSpec(int(h["host_id"]), str(h["workdir"]),
+                                        str(h.get("host", "127.0.0.1")))
+                               for h in d["hosts"]),
+                   controller_host=chost or "127.0.0.1",
+                   controller_port=int(cport or 0))
+
+    def save(self, path: str) -> str:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(self.to_json(), f, indent=1)
+        os.replace(tmp, path)
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ClusterSpec":
+        with open(path) as f:
+            return cls.from_json(json.load(f))
+
+    @classmethod
+    def local(cls, num_hosts: int, root: str, nb: int,
+              controller_host: str = "127.0.0.1") -> "ClusterSpec":
+        """The single-box N-host layout: per-host workdirs under `root`."""
+        return cls(nb=nb, controller_host=controller_host,
+                   hosts=tuple(HostSpec(h, os.path.join(root, f"host{h}"))
+                               for h in range(num_hosts)))
+
+
+# ---------------------------------------------------------------------------
+# Control-plane wire (the exchange framing, reused)
+# ---------------------------------------------------------------------------
+
+
+def _ctrl_request(sock: socket.socket, obj: Dict) -> Dict:
+    """One control RPC: header-only frame out, JSON reply in the ack."""
+    _send_frame(sock, _KIND_CTRL, obj)
+    status, mlen = _ACK.unpack(_recv_exact(sock, _ACK.size))
+    if mlen > _MAX_HEADER_BYTES:
+        raise ClusterError(f"oversized control reply ({mlen} bytes)")
+    body = _recv_exact(sock, mlen).decode() if mlen else "{}"
+    if status != 0:
+        raise ClusterError(f"controller refused request: {body}")
+    return json.loads(body)
+
+
+class ControlServer:
+    """Threaded request/reply server over the exchange frame format.  Every
+    accepted connection loops {frame in -> handler(meta) -> JSON ack out};
+    `handler` runs on the connection thread and must be thread-safe (the
+    controller guards its state with one lock)."""
+
+    def __init__(self, handler: Callable[[Dict], Dict],
+                 host: str = "127.0.0.1", port: int = 0):
+        self._handler = handler
+        self._sock = socket.create_server((host, port))
+        bound = self._sock.getsockname()
+        self.addr = f"{bound[0]}:{bound[1]}"
+        self._lock = threading.Lock()
+        self._live: set = set()
+        self._stopping = False
+        self._thread = threading.Thread(target=self._accept_loop,
+                                        name=f"control-server-{bound[1]}",
+                                        daemon=True)
+        self._thread.start()
+
+    def _accept_loop(self) -> None:
+        while True:
+            try:
+                conn, _ = self._sock.accept()
+            except OSError:
+                return
+            with self._lock:
+                self._live.add(conn)
+            threading.Thread(target=self._serve, args=(conn,),
+                             daemon=True).start()
+
+    def _serve(self, conn: socket.socket) -> None:
+        try:
+            with conn:
+                while True:
+                    conn.settimeout(None)        # idle between RPCs is fine
+                    try:
+                        first = conn.recv(1)
+                    except OSError:
+                        return
+                    if not first:
+                        return
+                    conn.settimeout(30.0)        # mid-frame stall is not
+                    try:
+                        head = first + _recv_exact(conn, _HDR.size - 1)
+                        magic, kind, hlen = _HDR.unpack(head)
+                        if magic != _MAGIC or kind != _KIND_CTRL:
+                            raise ClusterError("bad control frame")
+                        if hlen > _MAX_HEADER_BYTES:
+                            raise ClusterError("oversized control header")
+                        meta = json.loads(_recv_exact(conn, hlen).decode())
+                        (plen,) = _PLEN.unpack(_recv_exact(conn, _PLEN.size))
+                        if plen:
+                            raise ClusterError("control frames carry no payload")
+                        body = json.dumps(self._handler(meta)).encode()
+                        conn.sendall(_ACK.pack(0, len(body)) + body)
+                    except (ClusterError, ValueError, KeyError, TypeError,
+                            json.JSONDecodeError, OSError) as e:
+                        msg = str(e).encode()[:4096]
+                        try:
+                            conn.sendall(_ACK.pack(1, len(msg)) + msg)
+                        except OSError:
+                            pass
+                        return
+        finally:
+            with self._lock:
+                self._live.discard(conn)
+
+    def stop(self) -> None:
+        if self._stopping:
+            return
+        self._stopping = True
+        try:
+            self._sock.close()
+        except OSError:
+            pass
+        self._thread.join(timeout=5.0)
+        with self._lock:
+            live = list(self._live)
+        for c in live:
+            try:
+                c.close()
+            except OSError:
+                pass
+
+
+# ---------------------------------------------------------------------------
+# Exec backends
+# ---------------------------------------------------------------------------
+
+
+class ExecBackend:
+    """How worker-host processes come into existence.  `launch` returns a
+    handle; `alive(handle)` is the liveness probe the controller pairs with
+    heartbeats; `stop(handle)` is best-effort teardown."""
+
+    def launch(self, spec: ClusterSpec, host: HostSpec, controller_addr: str,
+               attempt: int = 0):
+        raise NotImplementedError
+
+    def alive(self, handle) -> bool:
+        return handle is not None and handle.poll() is None
+
+    def stop(self, handle) -> None:
+        if handle is None or handle.poll() is not None:
+            return
+        handle.terminate()
+        try:
+            handle.wait(timeout=5.0)
+        except subprocess.TimeoutExpired:
+            handle.kill()
+
+
+class LocalExecBackend(ExecBackend):
+    """Reference backend: one `python -m repro.launch.cluster host ...`
+    subprocess per host, each with its own isolated workdir — the paper's
+    64-node cluster collapsed onto one box, but with REAL process and
+    filesystem isolation (nothing shared but the sockets)."""
+
+    def __init__(self, python: str = sys.executable, workers: int = 0,
+                 env: Optional[Dict[str, str]] = None):
+        self.python = python
+        self.workers = workers
+        self.env = env
+
+    def host_args(self, host: HostSpec, attempt: int) -> List[str]:
+        """Extra CLI args per launch — overridable (tests inject crash hooks
+        like --max-tasks on the FIRST attempt only)."""
+        return []
+
+    def launch(self, spec: ClusterSpec, host: HostSpec, controller_addr: str,
+               attempt: int = 0):
+        cmd = [self.python, "-m", "repro.launch.cluster", "host",
+               "--controller", controller_addr,
+               "--host-id", str(host.host_id),
+               "--workdir", host.workdir,
+               "--workers", str(self.workers)]
+        cmd += self.host_args(host, attempt)
+        env = dict(os.environ)
+        if self.env:
+            env.update(self.env)
+        return subprocess.Popen(cmd, env=env)
+
+
+class CommandTemplateBackend(ExecBackend):
+    """Launch through a formatted command template — the ssh/srun shape:
+
+        CommandTemplateBackend(
+            "ssh {host} env PYTHONPATH=/repo/src {python} -m "
+            "repro.launch.cluster host --controller {controller} "
+            "--host-id {host_id} --workdir {workdir}")
+
+    Placeholders: {host} {host_id} {workdir} {controller} {python} {attempt}.
+    The handle is the local launcher process (ssh/srun), whose exit mirrors
+    the remote daemon's for liveness purposes."""
+
+    def __init__(self, template: str, python: str = sys.executable):
+        self.template = template
+        self.python = python
+
+    def launch(self, spec: ClusterSpec, host: HostSpec, controller_addr: str,
+               attempt: int = 0):
+        cmd = self.template.format(
+            host=host.host, host_id=host.host_id, workdir=host.workdir,
+            controller=controller_addr, python=self.python, attempt=attempt)
+        return subprocess.Popen(shlex.split(cmd))
+
+
+# ---------------------------------------------------------------------------
+# Wire helpers
+# ---------------------------------------------------------------------------
+
+
+def _pcfg_to_wire(pcfg: PlainCfg) -> Dict:
+    d = dataclasses.asdict(pcfg)
+    if d.get("peer_addrs") is not None:
+        d["peer_addrs"] = list(d["peer_addrs"])
+    return d
+
+
+def _pcfg_from_wire(d: Dict) -> PlainCfg:
+    d = dict(d)
+    if d.get("peer_addrs") is not None:
+        d["peer_addrs"] = tuple(d["peer_addrs"])
+    return PlainCfg(**d)
+
+
+def _jsonable(x):
+    if isinstance(x, (tuple, list)):
+        return [_jsonable(v) for v in x]
+    if isinstance(x, (np.integer,)):
+        return int(x)
+    return x
+
+
+# ---------------------------------------------------------------------------
+# HostRunner — the worker-host daemon
+# ---------------------------------------------------------------------------
+
+
+class HostRunner:
+    """One worker host: local ExchangeServer + task-execution loop.
+
+    Startup order matters: the workdir stray sweep (cascade scratch,
+    partial `.part` frames) runs BEFORE the ExchangeServer starts accepting
+    — once peers know our address a sweep could race a live receive — and
+    registration happens after, so no frame can arrive pre-sweep.
+
+    Per-host resume: completed tasks are checkpointed in
+    `<workdir>/host_phases.json` keyed by the controller-assigned task key
+    (a pure function of namespace + kernel + args, NOT of dispatch order,
+    so keys survive controller relaunches).  A relaunched host therefore
+    re-executes only what it never finished; peers recompute nothing.
+    Deterministic run tags make the reruns idempotent overwrites.
+
+    `max_tasks` is a crash-test hook: the process hard-exits (os._exit)
+    after executing that many fresh tasks — the CI host-kill scenario.
+    """
+
+    def __init__(self, workdir: str, host_id: int, controller_addr: str,
+                 workers: int = 0, checkpoint: bool = True,
+                 poll_interval: float = 0.05, max_tasks: int = 0,
+                 exchange_host: str = "127.0.0.1"):
+        self.workdir = workdir
+        self.host_id = int(host_id)
+        self.controller_addr = controller_addr
+        self.workers = int(workers)
+        self.checkpoint = checkpoint
+        self.poll_interval = poll_interval
+        self.max_tasks = int(max_tasks)
+        os.makedirs(workdir, exist_ok=True)
+        clean_cascade_stores(workdir)
+        sweep_partial_frames(workdir)
+        self.server = ExchangeServer(workdir, host=exchange_host)
+        self._orch: Optional[PhaseOrchestrator] = None
+        self._orch_ledger = IOLedger()
+        self._pool: Optional[ProcessPoolExecutor] = None
+        self._executed = 0
+
+    # -- checkpoint state ----------------------------------------------------
+    def _orchestrator(self, pcfg: PlainCfg) -> PhaseOrchestrator:
+        if self._orch is None:
+            self._orch = PhaseOrchestrator(
+                self.workdir, self._orch_ledger, checkpoint=self.checkpoint,
+                state_name="host_phases.json",
+                config_key=repr(("host", result_config_key(pcfg))),
+                sweep=False)   # swept in __init__, before the server accepts
+        return self._orch
+
+    # -- execution -----------------------------------------------------------
+    def _kernel_task(self, task: Dict) -> Tuple:
+        pcfg = _pcfg_from_wire(task["pcfg"])
+        args = list(task["args"])
+        if task.get("wcfg"):
+            args.append(WalkCfg(**task["wcfg"]))
+        return (task["kernel"], pcfg, self.workdir, tuple(args))
+
+    def _execute(self, tasks: List[Dict]):
+        """Run a batch of tasks (resumed ones skip; fresh ones run in-process
+        or through the local spawn pool), YIELDING one report per task as it
+        finishes — the caller sends each report immediately, so the
+        controller's liveness view advances task by task, not batch by
+        batch."""
+        if not tasks:
+            return
+        orch = self._orchestrator(_pcfg_from_wire(tasks[0]["pcfg"]))
+        futs: Dict[int, object] = {}
+        if self.workers > 0:
+            fresh = [t for t in tasks if not orch.completed(t["key"])]
+            if len(fresh) > 1:
+                if self._pool is None:
+                    self._pool = ProcessPoolExecutor(
+                        max_workers=self.workers,
+                        mp_context=get_context("spawn"))
+                for t in fresh:
+                    futs[t["id"]] = self._pool.submit(_run_kernel,
+                                                      self._kernel_task(t))
+        for t in tasks:
+            rep: Dict = {"op": "report", "host_id": self.host_id,
+                         "task_id": t["id"]}
+            try:
+                if orch.completed(t["key"]):
+                    out = orch.run_phase(t["key"], lambda: None,
+                                         load=lambda m: m.get("out"))
+                    rep.update(ok=True, resumed=True, out=out, ledger={},
+                               peak=0, stats={})
+                else:
+                    fut = futs.get(t["id"])
+                    fn = (fut.result if fut is not None
+                          else lambda t=t: _run_kernel(self._kernel_task(t)))
+                    res = orch.run_phase(
+                        t["key"], fn,
+                        save=lambda r: {"out": _jsonable(r[0])},
+                        load=lambda m: m.get("out"))
+                    out, ldict, peak, sdict = res
+                    rep.update(ok=True, resumed=False, out=_jsonable(out),
+                               ledger=ldict, peak=int(peak), stats=sdict)
+                    self._executed += 1
+            except BaseException as e:  # noqa: BLE001 - reported, not hidden
+                rep.update(ok=False, resumed=False,
+                           error=f"{type(e).__name__}: {e}",
+                           retriable=isinstance(e, (TransportError, OSError)),
+                           ledger={}, peak=0, stats={})
+            # Receiver-side accounting accumulated since the last report —
+            # folded into the controller's per-phase deltas at the barrier.
+            sl, sg = IOLedger(), MemoryGauge()
+            sstats = self.server.drain_accounting(sl, sg)
+            rep.update(server_ledger=sl.as_dict(), server_peak=sg.peak_rows,
+                       server_stats=dataclasses.asdict(sstats))
+            yield rep
+
+    def _heartbeat_loop(self, stop: threading.Event, period: float) -> None:
+        """Liveness side-channel on its OWN connection: a kernel can sort for
+        longer than the controller's heartbeat_timeout, and the main loop's
+        socket is busy-synchronous while it does — without this thread an
+        externally-launched (handle-less) host doing honest work would be
+        declared dead."""
+        try:
+            host, _, port = self.controller_addr.rpartition(":")
+            s = socket.create_connection((host, int(port)), timeout=30.0)
+        except OSError:
+            return
+        with s:
+            while not stop.wait(period):
+                try:
+                    _ctrl_request(s, {"op": "heartbeat",
+                                      "host_id": self.host_id})
+                except (OSError, ClusterError):
+                    return
+
+    # -- the loop ------------------------------------------------------------
+    def run(self) -> None:
+        host, _, port = self.controller_addr.rpartition(":")
+        sock = socket.create_connection((host, int(port)), timeout=60.0)
+        sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
+        hb_stop = threading.Event()
+        threading.Thread(target=self._heartbeat_loop, args=(hb_stop, 2.0),
+                         daemon=True).start()
+        try:
+            _ctrl_request(sock, {"op": "hello", "host_id": self.host_id,
+                                 "exchange_addr": self.server.addr,
+                                 "pid": os.getpid()})
+            while True:
+                r = _ctrl_request(sock, {"op": "poll",
+                                         "host_id": self.host_id})
+                if r["cmd"] == "stop":
+                    return
+                if r["cmd"] == "idle":
+                    time.sleep(self.poll_interval)
+                    continue
+                for rep in self._execute(r["tasks"]):
+                    _ctrl_request(sock, rep)
+                    if self.max_tasks and self._executed >= self.max_tasks:
+                        # Crash-test hook: die HARD mid-phase, like kill -9 —
+                        # no server shutdown, no pool teardown, no report for
+                        # the remaining tasks.
+                        os._exit(17)
+        finally:
+            hb_stop.set()
+            try:
+                sock.close()
+            except OSError:
+                pass
+            if self._pool is not None:
+                self._pool.shutdown(wait=False)
+            self.server.stop()
+
+
+# ---------------------------------------------------------------------------
+# ClusterController — rendezvous, barriers, heartbeats, restarts
+# ---------------------------------------------------------------------------
+
+
+class ClusterController:
+    """The driver-side half of the control plane.  All mutable state is
+    guarded by one lock and touched from two directions: ControlServer
+    connection threads (hello/poll/report) and the generator thread
+    (run_tasks' barrier loop, liveness checks, restarts)."""
+
+    def __init__(self, spec: ClusterSpec, backend: Optional[ExecBackend] = None,
+                 heartbeat_timeout: float = 60.0, max_restarts: int = 1,
+                 task_retries: int = 3, advertise: Optional[str] = None):
+        # `advertise` is the controller address HANDED TO workers when it
+        # differs from the bind address (bind 0.0.0.0, advertise the routable
+        # interface); a bare hostname gets the bound port appended.
+        self.spec = spec
+        self.backend = backend
+        self.heartbeat_timeout = heartbeat_timeout
+        self.max_restarts = max_restarts
+        self.task_retries = task_retries
+        self._lock = threading.Lock()
+        self._exchange_addrs: Dict[int, Optional[str]] = {
+            h.host_id: None for h in spec.hosts}
+        self._last_seen: Dict[int, float] = {}
+        self._queues: Dict[int, deque] = {h.host_id: deque()
+                                          for h in spec.hosts}
+        self._inflight: Dict[int, Dict[int, Dict]] = {h.host_id: {}
+                                                      for h in spec.hosts}
+        self._reports: Dict[int, Dict] = {}
+        self._tasks: Dict[int, Dict] = {}
+        self._task_seq = 0
+        self._pcfg_wire: Optional[Dict] = None
+        self._stopping = False
+        self.peers_version = 0
+        self.restarts: Dict[int, int] = {h.host_id: 0 for h in spec.hosts}
+        self._handles: Dict[int, object] = {}
+        self.task_log: List[Dict] = []   # (host, key, resumed) per report
+        self.server = ControlServer(self._handle, host=spec.controller_host,
+                                    port=spec.controller_port)
+        self.addr = self.server.addr
+        bound_port = self.addr.rsplit(":", 1)[1]
+        self.public_addr = (self.addr if not advertise
+                            else advertise if ":" in advertise
+                            else f"{advertise}:{bound_port}")
+
+    # -- control RPC handler (server threads) --------------------------------
+    def _handle(self, req: Dict) -> Dict:
+        op = req.get("op")
+        h = int(req.get("host_id", -1))
+        if h not in self._queues:
+            raise ClusterError(f"unknown host_id {h}")
+        now = time.monotonic()
+        if op == "hello":
+            with self._lock:
+                self._exchange_addrs[h] = str(req["exchange_addr"])
+                self._last_seen[h] = now
+                # A (re)registering host lost whatever it had taken.
+                for tid, task in self._inflight[h].items():
+                    self._queues[h].appendleft(task)
+                self._inflight[h].clear()
+                self.peers_version += 1
+            return {"ok": True, "hosts": self.spec.num_hosts,
+                    "nb": self.spec.nb}
+        if op == "heartbeat":
+            with self._lock:
+                self._last_seen[h] = now
+            return {}
+        if op == "poll":
+            with self._lock:
+                self._last_seen[h] = now
+                if self._stopping:
+                    return {"cmd": "stop"}
+                if not self._queues[h] or self._pcfg_wire is None:
+                    return {"cmd": "idle"}
+                peers = self._peer_addrs_locked()
+                if peers is None:
+                    return {"cmd": "idle"}   # mid-restart: wait for rendezvous
+                pcfg = dict(self._pcfg_wire,
+                            transport="socket", peer_addrs=list(peers))
+                out = []
+                while self._queues[h]:
+                    task = self._queues[h].popleft()
+                    self._inflight[h][task["id"]] = task
+                    out.append(dict(task, pcfg=pcfg))
+                return {"cmd": "tasks", "tasks": out}
+        if op == "report":
+            with self._lock:
+                self._last_seen[h] = now
+                tid = int(req["task_id"])
+                self._inflight[h].pop(tid, None)
+                self._reports[tid] = req
+                self.task_log.append({
+                    "host": h, "key": self._tasks[tid]["key"],
+                    "ok": bool(req.get("ok")),
+                    "resumed": bool(req.get("resumed"))})
+            return {}
+        raise ClusterError(f"unknown control op {op!r}")
+
+    def _peer_addrs_locked(self) -> Optional[Tuple[str, ...]]:
+        addrs = []
+        for b in range(self.spec.nb):
+            a = self._exchange_addrs[self.spec.owner_of(b)]
+            if a is None:
+                return None
+            addrs.append(a)
+        return tuple(addrs)
+
+    def peer_addrs(self) -> Tuple[str, ...]:
+        with self._lock:
+            peers = self._peer_addrs_locked()
+        if peers is None:
+            raise ClusterError("not all hosts have registered")
+        return peers
+
+    # -- lifecycle -----------------------------------------------------------
+    def launch_hosts(self) -> None:
+        if self.backend is None:
+            return   # hosts are started externally (manual / tests)
+        for h in self.spec.hosts:
+            self._handles[h.host_id] = self.backend.launch(
+                self.spec, h, self.public_addr, attempt=0)
+
+    def wait_for_hosts(self, timeout: float = 120.0) -> None:
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                missing = [h for h, a in self._exchange_addrs.items()
+                           if a is None]
+            if not missing:
+                return
+            for h in missing:
+                handle = self._handles.get(h)
+                if handle is not None and not self.backend.alive(handle):
+                    raise ClusterError(
+                        f"host {h} exited (rc={handle.poll()}) before "
+                        "registering")
+            if time.monotonic() > deadline:
+                raise ClusterError(f"rendezvous timeout: hosts {missing} "
+                                   "never registered")
+            time.sleep(0.02)
+
+    def stop(self) -> None:
+        with self._lock:
+            self._stopping = True
+        # Hosts exit at their next poll; reap backend handles either way.
+        deadline = time.monotonic() + 5.0
+        for h, handle in self._handles.items():
+            if handle is None:
+                continue
+            while self.backend.alive(handle) and time.monotonic() < deadline:
+                time.sleep(0.02)
+            self.backend.stop(handle)
+        self.server.stop()
+
+    # -- failure handling ----------------------------------------------------
+    def _host_dead(self, h: int) -> bool:
+        handle = self._handles.get(h)
+        if handle is not None:
+            return not self.backend.alive(handle)
+        seen = self._last_seen.get(h)
+        return seen is not None and (
+            time.monotonic() - seen > self.heartbeat_timeout)
+
+    def _revive(self, h: int) -> None:
+        """A host with outstanding work died: requeue what it held and
+        relaunch it through the backend (within the restart budget)."""
+        with self._lock:
+            for tid, task in self._inflight[h].items():
+                self._queues[h].appendleft(task)
+            self._inflight[h].clear()
+            self._exchange_addrs[h] = None
+            self.peers_version += 1
+        if self.backend is None or self.restarts[h] >= self.max_restarts:
+            raise ClusterError(
+                f"host {h} died mid-phase and the restart budget "
+                f"({self.max_restarts}) is spent — relaunch the cluster to "
+                "resume from the hosts' checkpoints")
+        self.restarts[h] += 1
+        self._handles[h] = self.backend.launch(
+            self.spec, self.spec.hosts[h], self.public_addr,
+            attempt=self.restarts[h])
+        self.wait_for_hosts(timeout=self.heartbeat_timeout)
+
+    def revive_dead_hosts(self) -> None:
+        """Controller-side recovery hook for non-barrier failures (e.g. a
+        CLEAN broadcast hitting a host that died BETWEEN barriers): relaunch
+        every dead host within the restart budget, then return — the caller
+        retries its operation against the healed peer map."""
+        for h in list(self._queues):
+            if self._host_dead(h):
+                self._revive(h)
+
+    # -- the barrier ---------------------------------------------------------
+    def run_tasks(self, kernel: str, argss: Sequence[Tuple], pcfg: PlainCfg,
+                  namespace: str, timeout: float = 600.0) -> List[Dict]:
+        """Dispatch one kernel invocation per args tuple to the owner host of
+        bucket args[0], wait for every report (the phase barrier), and return
+        the reports in args order.  Task keys are content-addressed
+        (namespace:kernel:args) so per-host checkpoints survive controller
+        relaunches and re-dispatch after failures."""
+        tids = []
+        with self._lock:
+            self._pcfg_wire = _pcfg_to_wire(pcfg)
+            for args in argss:
+                wire_args, wcfg = [], None
+                for a in args:
+                    if isinstance(a, WalkCfg):
+                        wcfg = dataclasses.asdict(a)
+                    else:
+                        wire_args.append(a)
+                tid = self._task_seq
+                self._task_seq += 1
+                key = f"{namespace}:{kernel}:" + \
+                    ":".join(str(a) for a in wire_args)
+                task = {"id": tid, "key": key, "kernel": kernel,
+                        "args": wire_args, "wcfg": wcfg, "attempt": 0}
+                self._tasks[tid] = task
+                owner = self.spec.owner_of(int(wire_args[0]))
+                self._queues[owner].append(task)
+                tids.append(tid)
+        deadline = time.monotonic() + timeout
+        while True:
+            with self._lock:
+                pending = [t for t in tids if t not in self._reports]
+                failed = [(t, self._reports[t]) for t in tids
+                          if t in self._reports
+                          and not self._reports[t].get("ok")]
+            for tid, rep in failed:
+                task = self._tasks[tid]
+                if rep.get("retriable") and task["attempt"] < self.task_retries:
+                    task["attempt"] += 1
+                    with self._lock:
+                        self._reports.pop(tid, None)
+                        self._queues[self.spec.owner_of(
+                            int(task["args"][0]))].append(task)
+                else:
+                    raise ClusterError(
+                        f"task {task['key']} failed on host "
+                        f"{self.spec.owner_of(int(task['args'][0]))}: "
+                        f"{rep.get('error')}")
+            if not pending and not failed:
+                break
+            # Liveness: while a barrier is in progress EVERY host must be
+            # alive, not just the ones owing reports — a host with no tasks
+            # left is still every peer's exchange RECEIVER, and its death
+            # shows up as retriable TransportErrors on the senders.  Reviving
+            # it (rather than letting the senders burn their retry budget
+            # against a dead server) is what heals those retries: once the
+            # host re-registers, re-dispatched tasks get the fresh peer map.
+            for h in list(self._queues):
+                if self._host_dead(h):
+                    self._revive(h)
+            if time.monotonic() > deadline:
+                raise ClusterError(
+                    f"barrier timeout waiting for {kernel} "
+                    f"({len(pending)} tasks outstanding)")
+            time.sleep(0.02)
+        with self._lock:
+            out = [self._reports.pop(t) for t in tids]
+        return out
+
+
+# ---------------------------------------------------------------------------
+# ClusterGenerator — PartitionedGenerator over the cluster pool
+# ---------------------------------------------------------------------------
+
+
+class _ControllerTransport:
+    """The controller's clean/flush transport, rebuilt whenever cluster
+    membership changes (a restarted host's ExchangeServer has a new
+    ephemeral port).  Only the driver-side operations exist — the controller
+    never sends data frames; kernels exchange host-to-host."""
+
+    kind = "cluster"
+
+    def __init__(self, gen: "ClusterGenerator"):
+        self._gen = gen
+        self._tr: Optional[SocketTransport] = None
+        self._ver = -1
+
+    def _cur(self) -> SocketTransport:
+        ctl = self._gen.controller
+        if self._tr is None or self._ver != ctl.peers_version:
+            if self._tr is not None:
+                self._tr.close()
+            self._tr = SocketTransport(self._gen.workdir, self._gen.ledger,
+                                       self._gen.gauge,
+                                       peers=ctl.peer_addrs())
+            self._ver = ctl.peers_version
+        return self._tr
+
+    def clean_inboxes(self, names: Sequence[str]) -> None:
+        try:
+            self._cur().clean_inboxes(names)
+        except (TransportError, OSError):
+            # A peer died between barriers (no task owed, so the barrier
+            # loop's liveness never saw it).  Revive within the restart
+            # budget and retry ONCE against the healed peer map; a second
+            # failure is real and propagates.  The retried CLEAN is
+            # idempotent — inboxes already swept on surviving hosts just
+            # get swept again.
+            if self._tr is not None:
+                self._tr.close()
+                self._tr = None
+            self._gen.controller.revive_dead_hosts()
+            self._cur().clean_inboxes(names)
+
+    def flush(self) -> None:
+        pass
+
+    def close(self) -> None:
+        if self._tr is not None:
+            self._tr.close()
+            self._tr = None
+
+
+class ClusterGenerator(PartitionedGenerator):
+    """The partitioned driver with its worker pool swapped for a cluster of
+    HostRunners: same phase drivers, same kernels, bit-identical outputs —
+    but generation, walks, and the pooled cascade's merge groups all execute
+    on whichever host owns each bucket, exchanges cross the wire once, CSR
+    bucket files and corpus shards live ONLY on their owner host's workdir,
+    and the controller's workdir holds nothing but checkpoint state and
+    manifests.
+
+    Fine-grained phases (every clean and every barrier its own checkpoint)
+    plus per-host task checkpoints give the failure story the acceptance
+    criterion demands: kill a host mid-phase, relaunch (automatically via
+    the exec backend within `max_restarts`, or by rerunning the whole
+    launcher), and only that host's unfinished tasks re-execute.
+
+    run() returns (graph_manifest_path, ledger); walk_corpus() returns a
+    ShardedWalks over the per-host shards.  `load_csr()` assembles the CSR
+    the single-host way — only meaningful where every host workdir is
+    reachable (one box, or a shared view for analysis).
+    """
+
+    _fine_phases = True
+
+    def __init__(self, cfg, spec: ClusterSpec, workdir: str,
+                 backend: Optional[ExecBackend] = None,
+                 checkpoint: bool = True, keep_all: Optional[bool] = None,
+                 heartbeat_timeout: float = 60.0, max_restarts: int = 1,
+                 rendezvous_timeout: float = 120.0,
+                 barrier_timeout: float = 600.0,
+                 advertise: Optional[str] = None):
+        pcfg = validate_external_shape(
+            cfg if isinstance(cfg, PlainCfg) else plain_config(cfg))
+        if pcfg.transport != "socket":
+            raise ValueError("cluster runs exchange over sockets; build the "
+                             "config with transport='socket'")
+        if pcfg.peer_addrs is not None:
+            raise ValueError("peer_addrs are discovered at rendezvous — "
+                             "leave them unset for cluster runs")
+        if spec.nb != pcfg.nb:
+            raise ValueError(f"spec.nb={spec.nb} != cfg.nb={pcfg.nb}")
+        self.spec = spec
+        self.workdir = workdir
+        os.makedirs(workdir, exist_ok=True)
+        self.ledger = IOLedger()
+        self.gauge = MemoryGauge()
+        self.exchange_stats = TransportStats()
+        self._servers: List[ExchangeServer] = []   # none local: hosts own them
+        self._pool = None
+        self.max_workers = 0
+        self.barrier_timeout = barrier_timeout
+        self._namespace = "gen"
+        if keep_all is None:
+            keep_all = bool(getattr(cfg, "keep_phase_stores", False))
+        self.keep_all = keep_all
+        self.controller = ClusterController(
+            spec, backend=backend, heartbeat_timeout=heartbeat_timeout,
+            max_restarts=max_restarts, advertise=advertise)
+        try:
+            self.controller.launch_hosts()
+            self.controller.wait_for_hosts(rendezvous_timeout)
+        except BaseException:
+            self.controller.stop()
+            raise
+        self.pcfg = dataclasses.replace(
+            pcfg, peer_addrs=self.controller.peer_addrs())
+        self.transport = _ControllerTransport(self)
+        self.orchestrator = PhaseOrchestrator(
+            workdir, self.ledger, checkpoint=checkpoint,
+            config_key=repr(("cluster", result_config_key(self.pcfg))),
+            keep_all=keep_all,
+            cleaner=lambda names: self.transport.clean_inboxes(names))
+
+    # -- pool plumbing --------------------------------------------------------
+    def _submit(self, kernel: str, tasks: Sequence[Tuple]) -> List:
+        reports = self.controller.run_tasks(
+            kernel, [t[3] for t in tasks], self.pcfg, self._namespace,
+            timeout=self.barrier_timeout)
+        results = []
+        for rep in reports:
+            for k, v in rep.get("server_ledger", {}).items():
+                setattr(self.ledger, k, getattr(self.ledger, k) + v)
+            self.gauge.track(int(rep.get("server_peak", 0)))
+            self.exchange_stats.add(
+                TransportStats(**rep.get("server_stats", {})))
+            out = rep.get("out")
+            results.append((tuple(out) if isinstance(out, list) else out,
+                            rep.get("ledger", {}), int(rep.get("peak", 0)),
+                            rep.get("stats", {})))
+        return results
+
+    def _map(self, kernel, argss):
+        tasks = [(kernel, self.pcfg, None, args) for args in argss]
+        results = self._submit(kernel, tasks)
+        outs = []
+        for out, ldict, peak, sdict in results:
+            for k, v in ldict.items():
+                setattr(self.ledger, k, getattr(self.ledger, k) + v)
+            self.gauge.track(peak)
+            if sdict:
+                self.exchange_stats.add(TransportStats(**sdict))
+            outs.append(out)
+        return outs
+
+    # -- placement hooks ------------------------------------------------------
+    def _csr_dir(self, i: int) -> str:
+        return self.spec.workdir_of(i)
+
+    def _shard_dir_of(self, j: int) -> str:
+        return self.spec.workdir_of(j)
+
+    def _shard_host_of(self, j: int) -> int:
+        return self.spec.owner_of(j)
+
+    # -- driver ---------------------------------------------------------------
+    def run(self, csr_variant: str = "sorted"):
+        """All generation phases across the cluster; returns
+        (graph_manifest_path, ledger).  The manifest records, per bucket,
+        the owner host and its CSR file paths — the cluster twin of
+        PartitionedGenerator.run()'s in-memory CSR list."""
+        paths = self._run_phases(csr_variant)
+        manifest_path = os.path.join(self.workdir, "graph_manifest.json")
+
+        def _manifest():
+            payload = {
+                "version": 1, "nb": self.pcfg.nb,
+                "scale": self.pcfg.scale, "edge_factor": self.pcfg.edge_factor,
+                "csr_variant": csr_variant,
+                "buckets": [
+                    {"bucket": i, "host": self.spec.owner_of(i),
+                     "workdir": self.spec.workdir_of(i),
+                     "offv": os.path.basename(o), "adjv": os.path.basename(a)}
+                    for i, (o, a) in enumerate(paths)],
+            }
+            tmp = manifest_path + ".tmp"
+            with open(tmp, "w") as f:
+                json.dump(payload, f, indent=1)
+            os.replace(tmp, manifest_path)
+
+        self.orchestrator.run_phase("graph_manifest", _manifest,
+                                    save=_MARK, load=_SKIP)
+        return manifest_path, self.ledger
+
+    def load_csr(self):
+        """Assemble [(offv, adjv memmap)] per bucket by reading each owner
+        host's files — colocated/shared-view deployments only."""
+        from .phases import load_bucket_csr
+        return [load_bucket_csr(csr_offv_path(self.spec.workdir_of(i), i),
+                                csr_adjv_path(self.spec.workdir_of(i), i),
+                                self.ledger, self.gauge)
+                for i in range(self.pcfg.nb)]
+
+    def walk_corpus(self, num_walkers: int, length: int, seed: int = 0,
+                    out_name: str = "walks.npy", checkpoint: bool = True):
+        self._namespace = f"walk:{num_walkers}:{length}:{seed}:{out_name}"
+        try:
+            return super().walk_corpus(num_walkers, length, seed=seed,
+                                       out_name=out_name,
+                                       checkpoint=checkpoint)
+        finally:
+            self._namespace = "gen"
+
+    def close(self):
+        try:
+            self.controller.stop()
+        finally:
+            self.transport.close()

@@ -52,13 +52,28 @@ exchange) moves E_x exchanged bytes through the configured Transport:
                       O(chunk_edges) memory bound holds end to end.  Output
                       bytes are identical either way; only the motion differs.
 
+Multi-host sharded-collect term (core/cluster.py + core/corpus.py): on an
+H-host cluster the walk-history collect writes each bucket's corpus shard on
+its OWNER host — O(W*(L+1)*S(int) / C_e) sequential writes in total, but at
+most a 1/H bucket-balanced share of them on any single host's disk, and ZERO
+corpus bytes on the controller (it writes only the O(nb)-entry manifest).
+The single-workdir alternative would add one full O(corpus / C_e) network
+copy to gather the shards onto one host; the sharded collect deletes that
+term — training streams per-batch rows from the shard files where they lie
+(data/loader.ExternalWalkLoader over the manifest).  The same placement
+holds for the graph itself: bucket CSR files live only on their owner host.
+
 Every external merge above pays an extra O(log_merge_fanin(nruns))-deep
 cascade of sequential read+write passes whenever a store's run count exceeds
 cfg.merge_fanin (blockstore.merge_runs): the bounded-fan-in multiway merge
 trades those log-depth passes for an open-file count and merge heap bounded
 by merge_fanin at ANY store size — with nruns <= merge_fanin (the common
 case at paper scales) the term is zero and the costs are exactly the flat
-merge's.
+merge's.  With cfg.pooled_cascade the partitioned/cluster CSR sort runs the
+SAME cascade as phase-level (bucket, group) tasks through the worker pool —
+identical pass count and bytes, wall time divided by the pool width at every
+intermediate level (one extra final pass when 1 < nruns <= fanin, the price
+of pool-dispatching the last merge).
 
 `StreamingGenerator(cfg, dir).run()` returns (pv memmap, per-bucket CSR,
 ledger); `gen.orchestrator.report()` gives the per-phase ledger deltas that

@@ -36,7 +36,11 @@ tracing or device state is involved in any kernel):
                        that the parent merges (receiver-side ExchangeServer
                        accounting folds in at the same barriers), so the
                        aggregate ledger is comparable with the sequential
-                       driver's.
+                       driver's.  The execution strategy is a hook
+                       (`_submit`): core/cluster.py's ClusterGenerator
+                       subclasses it to dispatch the same kernels to
+                       HostRunner daemons on N machines — the paper's actual
+                       deployment shape.
 """
 
 from __future__ import annotations
@@ -61,8 +65,15 @@ from .blockstore import (
     clean_cascade_stores,
     clean_store,
     merge_runs,
+    merge_segments,
     partition_runs,
     sort_runs,
+)
+from .corpus import (
+    ShardedWalks,
+    manifest_name as corpus_manifest_name,
+    shard_name as corpus_shard_name,
+    write_manifest,
 )
 from .transport import (
     ExchangeServer,
@@ -104,6 +115,14 @@ class PlainCfg:
     # "socket" (framed TCP to the ExchangeServer at peer_addrs[bucket]).
     transport: str = "fs"
     peer_addrs: Optional[Tuple[str, ...]] = None
+    # Dispatch the CSR sort's cascade merge levels through the worker pool /
+    # cluster (phase-level group merges) instead of cascading inline within
+    # one consumer kernel.  Output is bit-identical either way (the merge is
+    # stable and groups are consecutive), but the PHASE NAMES differ, so
+    # this field is deliberately NOT normalized out of result_config_key: a
+    # checkpoint taken in one mode must not be resumed in the other (its GC
+    # may have freed the other mode's phase inputs).
+    pooled_cascade: bool = False
 
     @property
     def n(self) -> int:
@@ -137,6 +156,7 @@ def plain_config(cfg) -> PlainCfg:
             str(getattr(cfg, "transport", "fs"))),
         peer_addrs=(None if getattr(cfg, "peer_addrs", None) is None
                     else tuple(str(a) for a in cfg.peer_addrs)),
+        pooled_cascade=bool(getattr(cfg, "pooled_cascade", False)),
     )
     if p.n % p.nb != 0:
         raise ValueError(f"nb={p.nb} must divide n={p.n}")
@@ -158,7 +178,15 @@ def result_config_key(pcfg: PlainCfg) -> PlainCfg:
     choice and peer addresses move data differently but produce bit-identical
     stores, and socket ports are ephemeral — keying checkpoints on them would
     spuriously invalidate (or worse, a changed port would block resuming a
-    crashed run).  Normalize them out."""
+    crashed run).  Normalize them out.  The same normalization is what lets
+    a run resume across CLUSTER shapes: host count, exec backend, and
+    rendezvous addresses never reach PlainCfg at all, and the fields that do
+    (transport, peer_addrs) are erased here — so a 2-host socket run and a
+    single-host fs run of the same graph share one checkpoint key.
+
+    `pooled_cascade` stays IN the key on purpose: its bytes are identical
+    but its phase schedule is not, and a cross-mode resume could replay a
+    phase whose inputs the other mode's checkpoint GC already freed."""
     return dataclasses.replace(pcfg, transport="fs", peer_addrs=None)
 
 
@@ -195,6 +223,21 @@ def relabel_inbox_name(pass_ix: int, j: int) -> str:
 
 def owned_store_name(j: int) -> str:
     return f"owned_b{j:03d}"
+
+
+def sorted_owned_store_name(j: int) -> str:
+    """Output of the pooled csr_sort phase (run-sorted, not yet merged)."""
+    return owned_store_name(j) + "_sorted"
+
+
+# Pooled-cascade intermediate stores are CHECKPOINTED phase outputs, unlike
+# merge_runs' kernel-private `__cas_l` scratch — a distinct marker keeps
+# clean_cascade_stores (the resume sweep) from reclaiming them.
+POOLED_CASCADE_MARKER = "__pcas_l"
+
+
+def pooled_cascade_store_name(base: str, level: int, g: int) -> str:
+    return f"{base}{POOLED_CASCADE_MARKER}{level}_g{g:04d}"
 
 
 def csr_offv_path(workdir: str, i: int) -> str:
@@ -436,20 +479,186 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     return offv_path, adjv_path
 
 
+def _emit_csr(pcfg: PlainCfg, workdir: str, i: int, stream, total: int, *,
+              ledger: IOLedger, gauge: Optional[MemoryGauge]) -> Tuple[str, str]:
+    """Shared CSR emit tail: one pass over a src-sorted (s, d) stream writes
+    degrees + adjacency; adjv streams straight into a memmap (§III-B7)."""
+    B, base = pcfg.bucket_size, i * pcfg.bucket_size
+    degv = np.zeros(B, np.int64)
+    if gauge is not None:
+        gauge.track(B)
+    adjv_path = csr_adjv_path(workdir, i)
+    adjv = np.lib.format.open_memmap(adjv_path, mode="w+", dtype=np.int64,
+                                     shape=(total,))
+    pos = 0
+    for s, d in stream:
+        np.add.at(degv, s - base, 1)
+        adjv[pos : pos + d.size] = d
+        ledger.write(d.nbytes)
+        pos += d.size
+    adjv.flush()
+    del adjv
+    offv = np.concatenate([[0], np.cumsum(degv)]).astype(np.int64)
+    offv_path = csr_offv_path(workdir, i)
+    np.save(offv_path, offv)
+    ledger.write(offv.nbytes)
+    return offv_path, adjv_path
+
+
+def csr_sort_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
+                    ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                    transport: Optional[Transport] = None) -> int:
+    """Pooled-cascade CSR, phase 1 of 3: external-sort pass 1 over the owned
+    inbox (each run sorted by src, rewritten).  Returns the run count — the
+    driver plans the cascade levels from it, and the count rides the phase
+    manifest so a resumed run plans identically."""
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        owned = tr.drain_inbox(owned_store_name(i))
+    out = BlockStore(workdir, sorted_owned_store_name(i), ledger, gauge=gauge,
+                     fresh=True)
+    sort_runs(owned, out, key=0)
+    return out.num_runs
+
+
+def cascade_merge_bucket(pcfg: PlainCfg, workdir: str, i: int, base: str,
+                         level: int, g: int, lo: int, hi: int, *,
+                         key_col: int = 0,
+                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                         transport: Optional[Transport] = None):
+    """One GROUP of one cascade level, as a pool task (PR 3's "intermediate
+    levels are embarrassingly parallel" upside): merge consecutive sorted
+    segments [lo, hi) of `base`'s level-1 into the level-`level` group store.
+    At level 0 a segment is one run of the `base` store; above that it is a
+    whole previous-level group store (its runs back to back).  Stability +
+    consecutive grouping keep the result bit-identical to merge_runs' inline
+    cascade — and to the flat merge."""
+    if level == 0:
+        src = BlockStore.attach(workdir, base, ledger, gauge=gauge)
+        segments = [(src, [k]) for k in range(lo, hi)]
+    else:
+        segments = []
+        for k in range(lo, hi):
+            s = BlockStore.attach(
+                workdir, pooled_cascade_store_name(base, level - 1, k),
+                ledger, gauge=gauge)
+            segments.append((s, list(range(s.num_runs))))
+    out = BlockStore(workdir, pooled_cascade_store_name(base, level, g),
+                     ledger, gauge=gauge, fresh=True)
+    for cols in merge_segments(segments, key=key_col,
+                               block_rows=pcfg.merge_block_rows):
+        out.append_run(*cols)
+
+
+def csr_emit_bucket(pcfg: PlainCfg, workdir: str, i: int, src_name: str,
+                    presorted: bool, *,
+                    ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                    transport: Optional[Transport] = None) -> Tuple[str, str]:
+    """Pooled-cascade CSR, final phase: emit offv/adjv from `src_name`.
+    `presorted` means the store is one globally sorted segment (the cascade's
+    last level) and is streamed; otherwise its runs are merged flat."""
+    src = BlockStore.attach(workdir, src_name, ledger, gauge=gauge)
+    if presorted:
+        stream = merge_segments([(src, list(range(src.num_runs)))], key=0,
+                                block_rows=pcfg.merge_block_rows)
+    else:
+        stream = merge_runs(src, key=0, block_rows=pcfg.merge_block_rows,
+                            max_fanin=pcfg.merge_fanin)
+    return _emit_csr(pcfg, workdir, i, stream, src.total_rows(),
+                     ledger=ledger, gauge=gauge)
+
+
+def csr_bucket_scatter(pcfg: PlainCfg, workdir: str, i: int, *,
+                       ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                       in_name: Optional[str] = None,
+                       transport: Optional[Transport] = None) -> Tuple[str, str]:
+    """Paper Alg. 10-11 under real process parallelism: unordered scan of the
+    owned edges with a bounded associative map, flushed into a memmap'd adjv
+    — every flush is a RANDOM write burst (the Fig. 2 blowup, now measurable
+    per worker).  Emits the same csr_offv/csr_adjv files as the sorted
+    variant; within-row adjacency is encounter order, which equals the
+    sorted variant's stable order, so the FILES are bit-identical — only the
+    I/O ledger (random vs sequential writes) differs."""
+    B, base = pcfg.bucket_size, i * pcfg.bucket_size
+    if in_name is None:
+        in_name = owned_store_name(i)
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        owned = tr.drain_inbox(in_name)
+    flush_at = max(16, pcfg.chunk_edges // 256)  # the paper's mmc analogue
+    degv = np.zeros(B, np.int64)
+    if gauge is not None:
+        gauge.track(B)
+    for s, _ in owned.iter_runs():
+        np.add.at(degv, s - base, 1)
+    offv = np.concatenate([[0], np.cumsum(degv)]).astype(np.int64)
+    adjv_path = csr_adjv_path(workdir, i)
+    adjv = np.lib.format.open_memmap(adjv_path, mode="w+", dtype=np.int64,
+                                     shape=(int(offv[-1]),))
+    cursor = np.zeros(B, np.int64)
+    held_map: Dict[int, list] = {}
+    held = 0
+
+    def _flush():
+        for v, lst in held_map.items():  # random write per vertex
+            o = offv[v] + cursor[v]
+            adjv[o : o + len(lst)] = lst
+            cursor[v] += len(lst)
+            ledger.write(8 * len(lst), sequential=False)
+
+    for s, d in owned.iter_runs():
+        for sv, dv in zip((s - base).tolist(), d.tolist()):
+            held_map.setdefault(sv, []).append(dv)
+            held += 1
+            if held >= flush_at:
+                _flush()
+                held_map, held = {}, 0
+    _flush()
+    adjv.flush()
+    del adjv
+    offv_path = csr_offv_path(workdir, i)
+    np.save(offv_path, offv)
+    ledger.write(offv.nbytes)
+    return offv_path, adjv_path
+
+
+# Checkpoint helpers shared by every driver-level phase whose manifest is
+# just a completion mark (the filesystem is the real manifest).
+_MARK = lambda _res: {"done": True}   # noqa: E731
+_SKIP = lambda _m: None               # noqa: E731
+
+
 def drive_shuffle(pcfg: PlainCfg, workdir: str, map_kernel,
+                  orchestrator: Optional["PhaseOrchestrator"] = None,
                   transport: Optional[Transport] = None) -> None:
-    """The shuffle round loop, shared by both drivers.  `map_kernel(name,
+    """The shuffle round loop, shared by all drivers.  `map_kernel(name,
     argss)` runs one bucket kernel for every args tuple and acts as the
     barrier.  Receiver stores are multi-writer, so each round's outputs are
     cleaned BEFORE the senders run — a correctness invariant for BOTH
     transports (attach() would merge in stale runs from a previous attempt;
     a partial socket frame would linger as a `.part` stray).  The driver's
-    `transport` carries the clean to whichever host owns each inbox."""
+    `transport` carries the clean to whichever host owns each inbox.
+
+    With `orchestrator` set (cluster mode), every clean and every round
+    barrier is its OWN checkpointed phase.  The split matters for per-host
+    resume: when a phase reruns because one host died mid-barrier, hosts
+    that already completed it skip their kernels — so the clean must NOT
+    rerun (it would delete the completed hosts' already-delivered runs),
+    while the dead host's reruns are safe on the dirty inbox because run
+    tags and contents are deterministic (idempotent overwrite)."""
+    def step(name, fn):
+        if orchestrator is None:
+            return fn()
+        return orchestrator.run_phase(name, fn, save=_MARK, load=_SKIP)
+
     with _exchange(pcfg, workdir, IOLedger(), None, transport) as tr:
-        map_kernel("init_pv", [(i,) for i in range(pcfg.nb)])
+        step("shuffle_init",
+             lambda: map_kernel("init_pv", [(i,) for i in range(pcfg.nb)]))
         for r in range(pcfg.rounds):
-            tr.clean_inboxes([pv_store_name(r + 1, j) for j in range(pcfg.nb)])
-            map_kernel("shuffle_round", [(i, r) for i in range(pcfg.nb)])
+            step(f"shuffle_clean_r{r}",
+                 lambda r=r: tr.clean_inboxes(
+                     [pv_store_name(r + 1, j) for j in range(pcfg.nb)]))
+            step(f"shuffle_round_r{r}",
+                 lambda r=r: map_kernel("shuffle_round",
+                                        [(i, r) for i in range(pcfg.nb)]))
 
 
 # ---------------------------------------------------------------------------
@@ -463,8 +672,10 @@ class WalkCfg:
 
     Walk semantics are the data/walks.py contract: counter RNG keyed by
     (seed, walker_id, step), sink vertices teleport to rand % n, histories
-    are int64.  `out_name` is the corpus memmap written into the workdir,
-    shape [num_walkers, length + 1]."""
+    are int64.  `out_name` names the corpus: per-bucket shard files
+    `{stem}_b{j}.npy` (each holding its walker block's rows of the logical
+    [num_walkers, length + 1] corpus) plus the `{stem}_manifest.json` that
+    ties them together (core/corpus.py)."""
 
     num_walkers: int
     length: int
@@ -607,13 +818,18 @@ def walk_hist_scatter_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg
 
 def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
                             ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
-                            transport: Optional[Transport] = None):
-    """Collect phase, join half: external-sort bucket j's inbox by the flat
-    key wid*(L+1)+step; the merged stream covers exactly the walker block's
-    cells once each, so writing it out is one sequential pass over the
-    block's slice of the corpus memmap."""
+                            transport: Optional[Transport] = None) -> str:
+    """Collect phase, join half — SHARDED: external-sort bucket j's inbox by
+    the flat key wid*(L+1)+step; the merged stream covers exactly the walker
+    block's cells once each, so writing it out is one sequential pass over
+    bucket j's OWN corpus shard (`{out}_b{j}.npy`, rows [w0, w1) of the
+    corpus).  No workdir ever holds the full corpus — on a cluster each
+    host keeps only its buckets' shards, and the driver's manifest
+    (core/corpus.py) is the only global artifact."""
     gauge = gauge if gauge is not None else MemoryGauge()
     L = wcfg.length
+    w0, w1 = walker_block(wcfg, pcfg.nb, j)
+    shard_path = os.path.join(workdir, corpus_shard_name(wcfg.out_name, j))
 
     def key(w, s, v):
         return w * (L + 1) + s
@@ -621,67 +837,114 @@ def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg,
     with _exchange(pcfg, workdir, ledger, gauge, transport) as _tr:
         inbox = _tr.drain_inbox(whist_inbox_name(j),
                                 columns=("wid", "step", "v"))
+    if w1 == w0:
+        # Degenerate walker block (W < nb): an empty, valid shard.
+        np.save(shard_path, np.zeros((0, L + 1), np.int64))
+        return shard_path
     tmp = BlockStore(workdir, whist_inbox_name(j) + "_sorted", ledger,
                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
     sort_runs(inbox, tmp, key=key)
-    out = np.load(os.path.join(workdir, wcfg.out_name), mmap_mode="r+")
+    out = np.lib.format.open_memmap(shard_path, mode="w+", dtype=np.int64,
+                                    shape=(w1 - w0, L + 1))
     flat = out.reshape(-1)
+    base = w0 * (L + 1)
     for w, s, v in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
                               max_fanin=pcfg.merge_fanin):
-        flat[w * (L + 1) + s] = v
+        flat[w * (L + 1) + s - base] = v
         ledger.write(v.nbytes)
     out.flush()
     del out
     tmp.destroy()
+    return shard_path
 
 
 def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
                 orchestrator: "PhaseOrchestrator",
-                transport: Optional[Transport] = None) -> str:
+                transport: Optional[Transport] = None,
+                shard_dir_of=None, shard_host_of=None,
+                fine_phases: bool = False) -> str:
     """The walk phase loop, shared by the inline driver (data/walks.py's
-    external_walks) and PartitionedGenerator.walk_corpus.  `map_kernel` is
-    the barrier, exactly as in drive_shuffle.  Requires the csr_sorted phase
-    outputs (csr_offv_*/csr_adjv_* bucket files) in `workdir`.
+    external_walks), PartitionedGenerator.walk_corpus, and the cluster
+    runtime.  `map_kernel` is the barrier, exactly as in drive_shuffle.
+    Requires the csr_sorted phase outputs (csr_offv_*/csr_adjv_* bucket
+    files) in each bucket owner's `workdir`.  Returns the path of the corpus
+    MANIFEST (core/corpus.py); the corpus itself stays as per-bucket shard
+    files written by the gather kernels — `shard_dir_of(j)` /
+    `shard_host_of(j)` tell the manifest where bucket j's shard landed
+    (default: this driver's workdir / host 0).
 
     Resume discipline: each phase pre-cleans its own multi-writer outputs
     through the driver's `transport` (stale runs AND partial frames from a
     crashed attempt, on whichever host owns the inbox) and the PREVIOUS
     phase's consumed frontier — inputs are never destroyed by the phase that
     reads them, so a phase can always be rerun after a mid-phase crash.
-    walk_gc reclaims everything once the corpus memmap is on disk.
+    With `fine_phases` (cluster mode) every clean is ITS OWN checkpointed
+    phase, for the reason drive_shuffle documents: a rerun with per-host
+    task skipping must not re-clean inboxes completed hosts already filled.
+    walk_gc reclaims everything once the corpus shards are on disk.
     """
     nb, L = pcfg.nb, wcfg.length
     orch = orchestrator
-    mark = lambda _res: {"done": True}  # noqa: E731  (filesystem is the manifest)
-    skip = lambda _m: None              # noqa: E731
+    mark, skip = _MARK, _SKIP
+    shard_dir_of = shard_dir_of if shard_dir_of is not None else (
+        lambda j: workdir)
+    shard_host_of = shard_host_of if shard_host_of is not None else (
+        lambda j: 0)
+
+    def phase(name, clean_fn, map_fn):
+        """One barrier with its pre-senders clean: a single phase normally,
+        split into `{name}_clean` + `{name}` under fine_phases."""
+        if fine_phases:
+            orch.run_phase(f"{name}_clean", clean_fn, save=mark, load=skip)
+            orch.run_phase(name, map_fn, save=mark, load=skip)
+        else:
+            orch.run_phase(name, lambda: (clean_fn(), map_fn()),
+                           save=mark, load=skip)
+
     with _exchange(pcfg, workdir, IOLedger(), None, transport) as tr:
-
-        def _init():
-            tr.clean_inboxes([wfront_store_name(0, d) for d in range(nb)])
-            map_kernel("walk_init", [(j, wcfg) for j in range(nb)])
-
-        orch.run_phase("walk_init", _init, save=mark, load=skip)
+        phase("walk_init",
+              lambda: tr.clean_inboxes(
+                  [wfront_store_name(0, d) for d in range(nb)]),
+              lambda: map_kernel("walk_init", [(j, wcfg) for j in range(nb)]))
         for t in range(L):
-            def _hop(t=t):
+            def _clean(t=t):
                 if t > 0:
+                    # Reclaim the PREVIOUS hop's consumed frontier (GC, not
+                    # correctness: hop t-1 drained it already).
                     tr.clean_inboxes(
                         [wfront_store_name(t - 1, d) for d in range(nb)])
                 tr.clean_inboxes(
                     [wfront_store_name(t + 1, d) for d in range(nb)])
-                map_kernel("walk_hop", [(j, t, wcfg) for j in range(nb)])
 
-            orch.run_phase(f"walk_hop_{t:04d}", _hop, save=mark, load=skip)
-        out_path = os.path.join(workdir, wcfg.out_name)
+            phase(f"walk_hop_{t:04d}", _clean,
+                  lambda t=t: map_kernel("walk_hop",
+                                         [(j, t, wcfg) for j in range(nb)]))
 
         def _collect():
-            tr.clean_inboxes([whist_inbox_name(d) for d in range(nb)])
-            out = np.lib.format.open_memmap(out_path, mode="w+", dtype=np.int64,
-                                            shape=(wcfg.num_walkers, L + 1))
-            del out
             map_kernel("walk_hist_scatter", [(j, wcfg) for j in range(nb)])
             map_kernel("walk_hist_gather", [(j, wcfg) for j in range(nb)])
 
-        orch.run_phase("walk_collect", _collect, save=mark, load=skip)
+        phase("walk_collect",
+              lambda: tr.clean_inboxes([whist_inbox_name(d)
+                                        for d in range(nb)]),
+              _collect)
+
+        manifest_path = os.path.join(workdir,
+                                     corpus_manifest_name(wcfg.out_name))
+
+        def _manifest():
+            shards = []
+            for j in range(nb):
+                w0, w1 = walker_block(wcfg, nb, j)
+                shards.append({
+                    "bucket": j, "w0": w0, "w1": w1,
+                    "host": shard_host_of(j),
+                    "path": os.path.join(shard_dir_of(j),
+                                         corpus_shard_name(wcfg.out_name, j)),
+                })
+            write_manifest(manifest_path, wcfg.num_walkers, L, shards)
+
+        orch.run_phase("walk_manifest", _manifest, save=mark, load=skip)
 
         def _gc():
             # keep_all is the same debugging escape hatch _apply_frees
@@ -698,7 +961,7 @@ def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
             tr.clean_inboxes(names)
 
         orch.run_phase("walk_gc", _gc, save=mark, load=skip)
-    return out_path
+    return manifest_path
 
 
 # ---------------------------------------------------------------------------
@@ -726,13 +989,24 @@ class PhaseOrchestrator:
 
     def __init__(self, workdir: str, ledger: IOLedger, checkpoint: bool = False,
                  config_key: Optional[str] = None, state_name: str = "phases.json",
-                 keep_all: bool = False):
+                 keep_all: bool = False, sweep: bool = True,
+                 cleaner: Optional[Callable[[Sequence[str]], None]] = None):
         # `state_name` separates checkpoint namespaces sharing one workdir
         # (the walk pipeline resumes independently of the generation pipeline
         # whose CSR it reads — see drive_walks).
+        # `sweep=False` skips the stray-file sweeps below — for callers that
+        # already swept at a moment when no exchange could be mid-frame (the
+        # cluster HostRunner sweeps before its ExchangeServer starts
+        # accepting; sweeping here would race a live receive's `.part`).
+        # `cleaner` overrides how freed stores are removed (default: local
+        # clean_store); it receives the whole frees list in ONE call so a
+        # transport-backed cleaner (the cluster controller routing frees to
+        # whichever host owns each store) can batch names per CLEAN frame
+        # instead of paying one RPC round per store.
         self.workdir = workdir
         self.ledger = ledger
         self.checkpoint = checkpoint
+        self._cleaner = cleaner
         # Checkpoint GC: run_phase(frees=[...]) names stores whose LAST
         # consumer is that phase; once the phase is done (and, when
         # checkpointing, its manifest is durably on disk) they are dropped,
@@ -749,9 +1023,12 @@ class PhaseOrchestrator:
         # checkpointed manifest — sweep them before resuming so a resumed run
         # starts from exactly the stores the manifests describe.  Partial
         # exchange frames (`.part`, a receive killed mid-frame) are the same
-        # kind of stray for the socket transport — swept with them.
-        clean_cascade_stores(workdir)
-        sweep_partial_frames(workdir)
+        # kind of stray for the socket transport — swept with them.  (Pooled
+        # cascade stores — `__pcas_l` — are NOT swept: those are checkpointed
+        # phase outputs, not kernel scratch.)
+        if sweep:
+            clean_cascade_stores(workdir)
+            sweep_partial_frames(workdir)
         if checkpoint and os.path.exists(self._state_path):
             try:
                 with open(self._state_path) as f:
@@ -803,8 +1080,16 @@ class PhaseOrchestrator:
         self._apply_frees(frees)
         return result
 
+    def completed(self, name: str) -> bool:
+        """Whether a checkpointed run of phase `name` exists (the cluster
+        HostRunner peeks before submitting work to its local pool)."""
+        return self.checkpoint and name in self._completed
+
     def _apply_frees(self, frees: Sequence[str]) -> None:
-        if self.keep_all:
+        if self.keep_all or not frees:
+            return
+        if self._cleaner is not None:
+            self._cleaner(list(frees))
             return
         for name in frees:
             clean_store(self.workdir, name)
@@ -836,6 +1121,10 @@ _KERNELS = {
     "relabel_apply": relabel_apply_bucket,
     "redistribute": redistribute_bucket,
     "csr_sorted": csr_bucket_sorted,
+    "csr_sort": csr_sort_bucket,
+    "cascade_merge": cascade_merge_bucket,
+    "csr_emit": csr_emit_bucket,
+    "csr_scatter": csr_bucket_scatter,
     "walk_init": walk_init_bucket,
     "walk_hop": walk_hop_bucket,
     "walk_hist_scatter": walk_hist_scatter_bucket,
@@ -968,17 +1257,34 @@ class PartitionedGenerator:
             self.exchange_stats.add(srv.drain_accounting(self.ledger, self.gauge))
 
     # -- the barrier ----------------------------------------------------------
+    # Fine-grained phase mode: False here (the outer named phases — shuffle,
+    # relabel, ... — are the checkpoint unit, today's behavior); the cluster
+    # generator flips it so every clean and every kernel barrier checkpoints
+    # separately, which is what makes per-HOST resume sound (see
+    # drive_shuffle's docstring).
+    _fine_phases = False
+    # Corpus shard placement hooks (drive_walks): None = all shards in this
+    # driver's workdir, owned by "host 0".  The cluster generator maps each
+    # bucket to its owner host's workdir.
+    _shard_dir_of = None
+    _shard_host_of = None
+
+    def _submit(self, kernel: str, tasks: Sequence[Tuple]) -> List:
+        """Execution strategy: run bucket-kernel tasks to completion and
+        return their (out, ledger dict, peak rows, transport stats) tuples.
+        Overridden by the cluster generator to dispatch through HostRunners."""
+        if self.max_workers == 0:
+            return [_run_kernel(t) for t in tasks]
+        if self._pool is None:
+            # One persistent pool for the whole run: workers pay their
+            # interpreter/import startup once, not once per barrier.
+            self._pool = ProcessPoolExecutor(
+                max_workers=self.max_workers, mp_context=get_context("spawn"))
+        return list(self._pool.map(_run_kernel, tasks))
+
     def _map(self, kernel: str, argss: Sequence[Tuple]) -> List:
         tasks = [(kernel, self.pcfg, self.workdir, args) for args in argss]
-        if self.max_workers == 0:
-            results = [_run_kernel(t) for t in tasks]
-        else:
-            if self._pool is None:
-                # One persistent pool for the whole run: workers pay their
-                # interpreter/import startup once, not once per barrier.
-                self._pool = ProcessPoolExecutor(
-                    max_workers=self.max_workers, mp_context=get_context("spawn"))
-            results = list(self._pool.map(_run_kernel, tasks))
+        results = self._submit(kernel, tasks)
         outs = []
         for out, ldict, peak, sdict in results:
             for k, v in ldict.items():
@@ -989,56 +1295,194 @@ class PartitionedGenerator:
         self._drain_servers()
         return outs
 
+    # -- phase-granularity helpers --------------------------------------------
+    def _outer(self, name: str, fn, frees: Sequence[str] = ()):
+        """A coarse driver phase.  In fine mode the inner steps checkpoint
+        themselves, so only the GC declaration (when any) needs its own
+        phase — the frees still run exactly once per completion."""
+        if self._fine_phases:
+            out = fn()
+            if frees:
+                self.orchestrator.run_phase(f"{name}_gc", lambda: None,
+                                            save=_MARK, load=_SKIP, frees=frees)
+            return out
+        return self.orchestrator.run_phase(name, fn, save=_MARK, load=_SKIP,
+                                           frees=frees)
+
+    def _step(self, name: str, fn):
+        """An inner step (one clean or one kernel barrier): checkpointed on
+        its own in fine mode, a plain call otherwise."""
+        if self._fine_phases:
+            return self.orchestrator.run_phase(name, fn, save=_MARK, load=_SKIP)
+        return fn()
+
     # -- phases ----------------------------------------------------------------
     def _shuffle(self):
         drive_shuffle(self.pcfg, self.workdir, self._map,
+                      orchestrator=(self.orchestrator if self._fine_phases
+                                    else None),
                       transport=self.transport)
 
     def _relabel(self):
         nb = self.pcfg.nb
-        for pass_ix in (0, 1):
-            self.transport.clean_inboxes(
-                [relabel_inbox_name(pass_ix, j) for j in range(nb)])
-            self._map("relabel_scatter", [(i, pass_ix) for i in range(nb)])
-            self._map("relabel_apply", [(i, pass_ix) for i in range(nb)])
+        for p in (0, 1):
+            self._step(f"relabel_clean_p{p}",
+                       lambda p=p: self.transport.clean_inboxes(
+                           [relabel_inbox_name(p, j) for j in range(nb)]))
+            self._step(f"relabel_scatter_p{p}",
+                       lambda p=p: self._map("relabel_scatter",
+                                             [(i, p) for i in range(nb)]))
+            self._step(f"relabel_apply_p{p}",
+                       lambda p=p: self._map("relabel_apply",
+                                             [(i, p) for i in range(nb)]))
 
-    def run(self, csr_variant: str = "sorted"):
-        """Returns ([(offv, adjv_memmap)] per bucket, aggregate IOLedger)."""
-        if csr_variant != "sorted":
-            raise ValueError("partitioned mode implements csr_variant='sorted' only")
+    def _redistribute(self):
         nb = self.pcfg.nb
+        self._step("redistribute_clean",
+                   lambda: self.transport.clean_inboxes(
+                       [owned_store_name(j) for j in range(nb)]))
+        return self._step("redistribute_map",
+                          lambda: self._map("redistribute",
+                                            [(i,) for i in range(nb)]))
+
+    # -- CSR variants -----------------------------------------------------------
+    def _csr_dir(self, i: int) -> str:
+        """Directory holding bucket i's CSR files (host workdir on a cluster)."""
+        return self.workdir
+
+    def _save_csr(self, paths):
+        return {"paths": [[os.path.basename(o), os.path.basename(a)]
+                          for o, a in paths]}
+
+    def _load_csr(self, m):
+        return [(os.path.join(self._csr_dir(i), o),
+                 os.path.join(self._csr_dir(i), a))
+                for i, (o, a) in enumerate(m["paths"])]
+
+    def _run_csr_sorted_pooled(self, nb: int):
+        """§III-B7 CSR with the cascade's intermediate merge levels dispatched
+        through the worker pool / cluster (PR 3's "embarrassingly parallel"
+        upside): sort pass as one barrier, then one barrier per cascade
+        LEVEL whose tasks are the (bucket, group) merges of that level, then
+        a streaming emit.  Bit-identical to the inline cascade and to the
+        flat merge (stable merge + consecutive groups)."""
         orch = self.orchestrator
-        mark = lambda _res: {"done": True}  # noqa: E731 (filesystem is the manifest)
-        skip = lambda _m: None              # noqa: E731
-        orch.run_phase("shuffle", self._shuffle, save=mark, load=skip)
-        orch.run_phase("generate", lambda: self._map("generate", [(i,) for i in range(nb)]),
-                       save=mark, load=skip)
+        counts = orch.run_phase(
+            "csr_sort",
+            lambda: [int(c) for c in self._map("csr_sort",
+                                               [(i,) for i in range(nb)])],
+            save=lambda r: {"counts": list(r)},
+            load=lambda m: [int(c) for c in m["counts"]],
+            frees=[owned_store_name(j) for j in range(nb)])
+        fanin = self.pcfg.merge_fanin
+        seg = {i: counts[i] for i in range(nb)}
+        last_level: Dict[int, Optional[int]] = {i: None for i in range(nb)}
+        level = 0
+        while fanin >= 2 and any(c > 1 for c in seg.values()):
+            tasks, frees, plan = [], [], {}
+            for i in range(nb):
+                c = seg[i]
+                if c <= 1:
+                    continue
+                base = sorted_owned_store_name(i)
+                ng = -(-c // fanin)
+                for g in range(ng):
+                    tasks.append((i, base, level, g, g * fanin,
+                                  min((g + 1) * fanin, c)))
+                plan[i] = ng
+                # This level is the last consumer of its input segments.
+                if level == 0:
+                    frees.append(base)
+                else:
+                    frees += [pooled_cascade_store_name(base, level - 1, k)
+                              for k in range(c)]
+            orch.run_phase(
+                f"csr_cascade_l{level}",
+                lambda tasks=tasks: self._map("cascade_merge", tasks),
+                save=_MARK, load=_SKIP, frees=frees)
+            for i, ng in plan.items():
+                seg[i] = ng
+                last_level[i] = level
+            level += 1
+        emit_tasks, emit_frees = [], []
+        for i in range(nb):
+            if last_level[i] is None:
+                # Never cascaded: <= 1 sorted run (stream) — or fanin == 0
+                # (flat), where emit merges the runs inline.
+                src, presorted = sorted_owned_store_name(i), seg[i] <= 1
+            else:
+                src = pooled_cascade_store_name(sorted_owned_store_name(i),
+                                                last_level[i], 0)
+                presorted = True
+            emit_tasks.append((i, src, presorted))
+            emit_frees.append(src)
+        return orch.run_phase(
+            "csr_emit", lambda: self._map("csr_emit", emit_tasks),
+            save=self._save_csr, load=self._load_csr, frees=emit_frees)
+
+    def _run_csr_scatter(self, nb: int):
+        """Paper Alg. 10/11 under real process parallelism (the partitioned
+        scatter-CSR): same files as 'sorted', random-write I/O ledger."""
+        orch = self.orchestrator
+        if not self.keep_all and any(orch.completed(p)
+                                     for p in ("csr_sorted", "csr_sort",
+                                               "csr_emit")):
+            # A checkpointed sorted run already freed the redistribute
+            # outputs this variant needs — fail with guidance, not with an
+            # empty inbox silently producing an empty graph.
+            raise ValueError(
+                "csr_variant='scatter' needs the redistribute output stores, "
+                "but a checkpointed sorted-CSR phase already garbage-"
+                "collected them; rerun with keep_phase_stores=True or a "
+                "fresh workdir")
+        return orch.run_phase(
+            "csr_scatter",
+            lambda: self._map("csr_scatter", [(i,) for i in range(nb)]),
+            save=self._save_csr, load=self._load_csr,
+            frees=[owned_store_name(j) for j in range(nb)])
+
+    # -- driver ----------------------------------------------------------------
+    def _run_phases(self, csr_variant: str = "sorted") -> List[Tuple[str, str]]:
+        """All generation phases through the orchestrator; returns the
+        per-bucket (offv_path, adjv_path) list WITHOUT loading the CSR —
+        the cluster driver stops here and writes a manifest instead."""
+        if csr_variant not in ("sorted", "scatter"):
+            raise ValueError(
+                f"partitioned csr_variant must be 'sorted' or 'scatter', "
+                f"got {csr_variant!r}")
+        nb = self.pcfg.nb
+        self._outer("shuffle", self._shuffle)
+        self.orchestrator.run_phase(
+            "generate",
+            lambda: self._map("generate", [(i,) for i in range(nb)]),
+            save=_MARK, load=_SKIP)
         # GC declarations: each store list's LAST consumer is the naming
         # phase.  pv buckets are never freed here — they ARE the partitioned
         # driver's permutation output (pv_buckets()).
-        orch.run_phase("relabel", self._relabel, save=mark, load=skip,
-                       frees=[edges_store_name(i) for i in range(nb)]
-                             + [edges_store_name(i, 0) for i in range(nb)])
+        self._outer("relabel", self._relabel,
+                    frees=[edges_store_name(i) for i in range(nb)]
+                          + [edges_store_name(i, 0) for i in range(nb)])
+        self._outer("redistribute", self._redistribute,
+                    frees=[edges_store_name(i, 1) for i in range(nb)])
+        if csr_variant == "scatter":
+            paths = self._run_csr_scatter(nb)
+        elif self.pcfg.pooled_cascade:
+            paths = self._run_csr_sorted_pooled(nb)
+        else:
+            paths = self.orchestrator.run_phase(
+                "csr_sorted",
+                lambda: self._map("csr_sorted", [(i,) for i in range(nb)]),
+                save=self._save_csr, load=self._load_csr,
+                frees=[owned_store_name(j) for j in range(nb)])
+        # Normalize to driver-resolvable paths (kernel returns are host-local
+        # on a cluster; basename + _csr_dir is the shared convention).
+        return [(os.path.join(self._csr_dir(i), os.path.basename(o)),
+                 os.path.join(self._csr_dir(i), os.path.basename(a)))
+                for i, (o, a) in enumerate(paths)]
 
-        def _redistribute():
-            self.transport.clean_inboxes([owned_store_name(j) for j in range(nb)])
-            return self._map("redistribute", [(i,) for i in range(nb)])
-
-        orch.run_phase("redistribute", _redistribute, save=mark, load=skip,
-                       frees=[edges_store_name(i, 1) for i in range(nb)])
-
-        def _save_csr(paths):
-            return {"paths": [[os.path.basename(o), os.path.basename(a)]
-                              for o, a in paths]}
-
-        def _load_csr(m):
-            return [(os.path.join(self.workdir, o), os.path.join(self.workdir, a))
-                    for o, a in m["paths"]]
-
-        paths = orch.run_phase(
-            "csr_sorted", lambda: self._map("csr_sorted", [(i,) for i in range(nb)]),
-            save=_save_csr, load=_load_csr,
-            frees=[owned_store_name(j) for j in range(nb)])
+    def run(self, csr_variant: str = "sorted"):
+        """Returns ([(offv, adjv_memmap)] per bucket, aggregate IOLedger)."""
+        paths = self._run_phases(csr_variant)
         self._shutdown_pool()
         csr = [load_bucket_csr(offv_path, adjv_path, self.ledger, self.gauge)
                for offv_path, adjv_path in paths]
@@ -1049,14 +1493,16 @@ class PartitionedGenerator:
 
     def walk_corpus(self, num_walkers: int, length: int, seed: int = 0,
                     out_name: str = "walks.npy",
-                    checkpoint: bool = False) -> np.ndarray:
+                    checkpoint: bool = False) -> ShardedWalks:
         """Out-of-core walk corpus [num_walkers, length+1] over this
         generator's CSR bucket files — the walk-frontier exchange running
         through the same worker pool and the same Transport (filesystem
         `{sender}_{seq}` runs or framed TCP) as generation.  Requires run()
-        to have completed (the csr_sorted phase writes the bucket CSR files
-        the hops join against).  Bit-identical to data/walks.host_walks on
-        the assembled CSR, whichever transport carried the frontiers."""
+        to have completed (the CSR phase writes the bucket files the hops
+        join against).  Returns a ShardedWalks view over the per-bucket
+        shard files + manifest (the sharded collect: no monolithic corpus
+        file exists).  Bit-identical to data/walks.host_walks on the
+        assembled CSR, whichever transport carried the frontiers."""
         wcfg = WalkCfg(num_walkers=num_walkers, length=length, seed=seed,
                        out_name=out_name)
         orch = PhaseOrchestrator(self.workdir, self.ledger, checkpoint=checkpoint,
@@ -1064,5 +1510,8 @@ class PartitionedGenerator:
                                  config_key=repr((result_config_key(self.pcfg), wcfg)),
                                  keep_all=self.keep_all)
         path = drive_walks(self.pcfg, self.workdir, wcfg, self._map, orch,
-                           transport=self.transport)
-        return np.load(path, mmap_mode="r")
+                           transport=self.transport,
+                           shard_dir_of=self._shard_dir_of,
+                           shard_host_of=self._shard_host_of,
+                           fine_phases=self._fine_phases)
+        return ShardedWalks(path)

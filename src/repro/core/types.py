@@ -74,6 +74,12 @@ class GraphConfig:
     # the scale-safe default.  0 = flat (unbounded fan-in); must be >= 2
     # otherwise.
     merge_fanin: int = 64
+    # Dispatch the partitioned CSR sort's cascade merge LEVELS through the
+    # worker pool / cluster as (bucket, group) tasks instead of cascading
+    # inline within each bucket's kernel (phases._run_csr_sorted_pooled).
+    # Bit-identical output; changes the phase schedule, so checkpoints are
+    # keyed on it.  Partitioned/cluster drivers only.
+    pooled_cascade: bool = False
     # Persist per-phase output manifests to <workdir>/phases.json and resume
     # completed phases on re-run (PhaseOrchestrator).
     checkpoint_phases: bool = False

@@ -10,13 +10,15 @@ Two loaders share that contract:
 
   WalkLoader          samples each batch on demand with the host sampler
                       (sequential CSR access over a resident/memmapped CSR);
-  ExternalWalkLoader  streams batches out of an external_walks corpus memmap
+  ExternalWalkLoader  streams batches out of a SHARDED external_walks corpus
+                      (per-bucket shard files + manifest, core/corpus.py)
                       built from the disk tier's CSR bucket files — neither
-                      the CSR nor the corpus is ever resident, so token
-                      batches flow from graphs that never fit in RAM.
-                      Batch b equals WalkLoader's batch b (same CSR layout)
-                      while (b+1)*batch_size <= num_walkers; past that the
-                      corpus wraps around.
+                      the CSR nor the corpus is ever resident (or even
+                      co-located: a cluster run's shards stay on their owner
+                      hosts), so token batches flow from graphs that never
+                      fit in RAM.  Batch b equals WalkLoader's batch b (same
+                      CSR layout) while (b+1)*batch_size <= num_walkers;
+                      past that the corpus wraps around.
 
 Mesh/sharding hooks place each global batch over the dp axes.
 """
@@ -97,25 +99,44 @@ class WalkLoader:
 
 
 class ExternalWalkLoader:
-    """Deterministic walk-token batches from an out-of-core corpus.
+    """Deterministic walk-token batches from an out-of-core SHARDED corpus.
 
     Builds (or, with checkpoint=True, resumes) an external_walks corpus of
     `num_walkers` walks over the CSR bucket files in `workdir`, then serves
-    batch(step) as rows [step*B : (step+1)*B) of the memmap (mod W) — the
-    same pure-function-of-step contract as WalkLoader, with the CSR on disk
-    the whole time.  Walk length is seq_len (tokens drop the last vertex's
-    label shift, exactly like WalkLoader).
+    batch(step) as rows [step*B : (step+1)*B) of the sharded corpus (mod W)
+    — the same pure-function-of-step contract as WalkLoader, with the CSR
+    on disk the whole time.  The corpus is per-bucket shard files + a
+    manifest (core/corpus.py); batches gather rows across shard memmaps, so
+    no host ever holds the whole corpus.  Walk length is seq_len (tokens
+    drop the last vertex's label shift, exactly like WalkLoader).
+
+    `corpus_manifest` streams batches straight from an existing manifest —
+    e.g. one a cluster run (launch/cluster.py) produced on per-host
+    workdirs — skipping generation entirely; `workdir` is then unused.
     """
 
     def __init__(self, graph_cfg: GraphConfig, workdir: str, cfg: LoaderConfig,
-                 *, num_walkers: int, mesh: Optional[Mesh] = None,
-                 checkpoint: bool = True):
+                 *, num_walkers: int = 0, mesh: Optional[Mesh] = None,
+                 checkpoint: bool = True,
+                 corpus_manifest: Optional[str] = None):
+        from ..core.corpus import ShardedWalks
+
         self.gcfg = graph_cfg
         self.cfg = cfg
-        self.result = external_walks(
-            graph_cfg, workdir, num_walkers=num_walkers, length=cfg.seq_len,
-            seed=cfg.seed, checkpoint=checkpoint)
-        self.walks = self.result.walks
+        if corpus_manifest is not None:
+            self.result = None
+            self.walks = ShardedWalks(corpus_manifest)
+            if self.walks.length != cfg.seq_len:
+                raise ValueError(
+                    f"corpus manifest holds walks of length "
+                    f"{self.walks.length}, loader needs seq_len={cfg.seq_len}")
+        else:
+            if num_walkers <= 0:
+                raise ValueError("num_walkers required without corpus_manifest")
+            self.result = external_walks(
+                graph_cfg, workdir, num_walkers=num_walkers,
+                length=cfg.seq_len, seed=cfg.seed, checkpoint=checkpoint)
+            self.walks = self.result.walks
         self.mesh = mesh
         self._sharding = _batch_sharding(mesh)
 

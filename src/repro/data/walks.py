@@ -60,6 +60,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..core.blockstore import IOLedger, MemoryGauge
 from ..core.hostgen import mix32_np as _mix32_np
 from ..core.hostgen import walk_rand_np, walk_start_np
+from ..core.corpus import ShardedWalks
 from ..core.phases import (
     _KERNELS,
     PhaseOrchestrator,
@@ -257,10 +258,11 @@ def walks_to_tokens(walks: np.ndarray, vocab: int) -> Tuple[np.ndarray, np.ndarr
 
 
 class ExternalWalkResult(NamedTuple):
-    """external_walks output: the corpus memmap plus the accounting objects
+    """external_walks output: the sharded corpus plus the accounting objects
     tests and benchmarks assert against."""
 
-    walks: np.ndarray            # [W, length+1] int64 memmap (disk-backed)
+    walks: "ShardedWalks"        # [W, length+1] int64 array-like (disk-backed
+                                 # per-bucket shards + manifest, core/corpus.py)
     ledger: IOLedger
     gauge: MemoryGauge
     orchestrator: PhaseOrchestrator
@@ -273,7 +275,10 @@ def external_walks(cfg, workdir: str, *, num_walkers: int, length: int,
                    out_name: str = "walks.npy") -> ExternalWalkResult:
     """Out-of-core walk corpus [num_walkers, length+1] over the CSR bucket
     files in `workdir` (written by StreamingGenerator / PartitionedGenerator's
-    csr_sorted phase) — the graph never materializes in RAM.
+    CSR phase) — the graph never materializes in RAM, and neither does the
+    corpus: the collect phase is SHARDED (one `{out}_b{j}.npy` per bucket +
+    a manifest, core/corpus.py), and `result.walks` is an array-like view
+    over the shards.
 
     Each hop is the paper's redistribute phase applied to walkers: sort the
     per-bucket frontier by current vertex, sort-merge-join it against the
@@ -317,7 +322,7 @@ def external_walks(cfg, workdir: str, *, num_walkers: int, length: int,
                                  gauge=gauge, transport=tr)
 
         path = drive_walks(pcfg, workdir, wcfg, inline_map, orch, transport=tr)
-    return ExternalWalkResult(np.load(path, mmap_mode="r"), ledger, gauge, orch)
+    return ExternalWalkResult(ShardedWalks(path), ledger, gauge, orch)
 
 
 def concat_bucket_csr(csr) -> Tuple[np.ndarray, np.ndarray]:

@@ -34,28 +34,10 @@ from jax import lax
 # Version compat
 # ---------------------------------------------------------------------------
 
-# `jax.shard_map` graduated from `jax.experimental.shard_map.shard_map` only
-# in jax >= 0.4.38; on 0.4.37 the top-level attribute raises AttributeError.
-# Every module in this repo imports `shard_map` from here so the fallback
-# lives in exactly one place.
-if hasattr(jax, "shard_map"):
-    shard_map = jax.shard_map
-else:  # pragma: no cover - exercised on jax <= 0.4.37 only
-    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
-
-if hasattr(lax, "axis_size"):
-    axis_size = lax.axis_size
-else:  # pragma: no cover - jax <= 0.4.37
-    def axis_size(axis: str) -> int:
-        # psum of a Python literal is constant-folded to the axis size.
-        return lax.psum(1, axis)
-
-if hasattr(lax, "pvary"):
-    pvary = lax.pvary
-else:  # pragma: no cover - jax <= 0.4.37
-    def pvary(x, axis_names):
-        # Older shard_map has no varying-type system; identity is correct.
-        return x
+# The version-floor shims (shard_map / axis_size / pvary for jax 0.4.37) live
+# in distributed/compat.py; re-exported here because historically every module
+# imported them from this file — both import paths stay valid.
+from .compat import axis_size, pvary, shard_map  # noqa: F401
 
 # ---------------------------------------------------------------------------
 # Mesh helpers

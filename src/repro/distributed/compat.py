@@ -1,0 +1,53 @@
+"""jax version-compat surface — every shim the repo needs, in one place.
+
+Version floor: the repo runs on **jax >= 0.4.37** (the CPU container pins
+jax 0.4.37 / jaxlib 0.4.36).  Three names this codebase leans on graduated
+to public API only after that floor, so each gets a fallback here:
+
+  shard_map   `jax.shard_map` exists from jax 0.4.38; on 0.4.37 the public
+              entry point is still `jax.experimental.shard_map.shard_map`.
+              Semantics are identical for everything this repo does (single
+              named axis, explicit in/out specs).
+  axis_size   `lax.axis_size(axis)` appeared alongside the new shard_map;
+              the fallback `lax.psum(1, axis)` is the classic idiom — a
+              literal psum is constant-folded to the axis size at trace
+              time, so there is no runtime collective.
+  pvary       `lax.pvary` belongs to the varying-type system newer
+              shard_maps use to type cross-axis data flow.  Older
+              shard_map has no such types, so identity is the correct
+              (and only possible) fallback.
+
+Import these names from here (or from `distributed.collectives`, which
+re-exports them) — never from `jax` / `jax.lax` directly, so the
+version-floor logic stays in exactly one module.  When the floor moves to
+>= 0.4.38 the fallbacks become dead branches and this file collapses to
+three aliases (ROADMAP: "jax compat shim consolidation").
+"""
+
+from __future__ import annotations
+
+import jax
+from jax import lax
+
+JAX_VERSION_FLOOR = (0, 4, 37)
+
+if hasattr(jax, "shard_map"):
+    shard_map = jax.shard_map
+else:  # pragma: no cover - exercised on jax <= 0.4.37 only
+    from jax.experimental.shard_map import shard_map  # type: ignore[no-redef]
+
+if hasattr(lax, "axis_size"):
+    axis_size = lax.axis_size
+else:  # pragma: no cover - jax <= 0.4.37
+    def axis_size(axis: str) -> int:
+        # psum of a Python literal is constant-folded to the axis size.
+        return lax.psum(1, axis)
+
+if hasattr(lax, "pvary"):
+    pvary = lax.pvary
+else:  # pragma: no cover - jax <= 0.4.37
+    def pvary(x, axis_names):
+        # Older shard_map has no varying-type system; identity is correct.
+        return x
+
+__all__ = ["JAX_VERSION_FLOOR", "axis_size", "pvary", "shard_map"]

@@ -1,0 +1,203 @@
+"""Cluster launcher CLI: start worker hosts and drive multi-host runs.
+
+Quickstart (single box -> 2-host local-exec -> ssh template)
+-----------------------------------------------------------
+
+1. Single box (no cluster — the in-process partitioned driver):
+
+       PYTHONPATH=src python - <<'EOF'
+       from repro.core.phases import PartitionedGenerator
+       from repro.core.types import GraphConfig
+       cfg = GraphConfig(scale=12, nb=4, shuffle_variant="external")
+       with PartitionedGenerator(cfg, "/tmp/g1") as gen:
+           gen.run(); gen.walk_corpus(1024, 16)
+       EOF
+
+2. Two "hosts" on one box, real process + workdir isolation, socket
+   exchange (the loopback deployment shape CI exercises):
+
+       PYTHONPATH=src python -m repro.launch.cluster run \
+           --hosts 2 --workdir /tmp/cluster --scale 12 --nb 4 \
+           --walkers 1024 --length 16
+
+   Each host h gets /tmp/cluster/host{h} (its buckets' stores, CSR files,
+   and corpus shards live THERE and only there); the controller keeps
+   /tmp/cluster/ctrl with checkpoint state, graph_manifest.json, and
+   walks_manifest.json.  Re-running the same command after a crash or a
+   host kill resumes: surviving hosts skip all completed work.
+
+3. Real hosts over ssh (or srun — it's just a template).  Host workdirs are
+   per-host LOCAL paths; only the controller and exchange ports cross the
+   network:
+
+       PYTHONPATH=src python -m repro.launch.cluster run \
+           --hosts 2 --workdir /data/cluster --scale 30 --nb 64 \
+           --host-names node1,node2 \
+           --template 'ssh {host} env PYTHONPATH=/repo/src {python} -m \
+repro.launch.cluster host --controller {controller} --host-id {host_id} \
+--workdir {workdir}'
+
+   (For the template to work, the controller address in `{controller}`
+   must be reachable from the worker hosts: `--bind 0.0.0.0` to listen on
+   every interface, plus `--advertise 10.0.0.5` — the routable address
+   workers should dial; the bound port is appended automatically.)
+
+Training then streams straight from the sharded corpus manifest:
+
+       PYTHONPATH=src python -m repro.launch.train --data external \
+           --corpus-manifest /tmp/cluster/ctrl/walks_manifest.json --seq 16
+
+Subcommands: `host` (the worker daemon an exec backend or an operator
+starts), `run` (controller + hosts end to end), `spec` (emit a ClusterSpec
+JSON for external orchestration).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+
+from ..core.cluster import (
+    ClusterGenerator,
+    ClusterSpec,
+    CommandTemplateBackend,
+    HostRunner,
+    HostSpec,
+    LocalExecBackend,
+)
+from ..core.types import GraphConfig
+
+
+def _build_spec(args) -> ClusterSpec:
+    names = (args.host_names.split(",") if args.host_names else
+             ["127.0.0.1"] * args.hosts)
+    if len(names) != args.hosts:
+        raise SystemExit(f"--host-names lists {len(names)} names for "
+                         f"--hosts {args.hosts}")
+    root = os.path.abspath(args.workdir)
+    return ClusterSpec(
+        nb=args.nb,
+        controller_host=args.bind,
+        hosts=tuple(HostSpec(h, os.path.join(root, f"host{h}"), names[h])
+                    for h in range(args.hosts)))
+
+
+def cmd_host(args) -> int:
+    HostRunner(args.workdir, args.host_id, args.controller,
+               workers=args.workers, checkpoint=not args.no_checkpoint,
+               max_tasks=args.max_tasks,
+               exchange_host=args.exchange_host).run()
+    return 0
+
+
+def cmd_spec(args) -> int:
+    spec = _build_spec(args)
+    path = os.path.abspath(args.out) if args.out else os.path.join(
+        os.path.abspath(args.workdir), "cluster_spec.json")
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    spec.save(path)
+    print(path)
+    return 0
+
+
+def cmd_run(args) -> int:
+    spec = _build_spec(args)
+    cfg = GraphConfig(scale=args.scale, nb=args.nb, edge_factor=args.edge_factor,
+                      chunk_edges=args.chunk_edges, seed=args.seed,
+                      shuffle_variant="external", transport="socket",
+                      merge_fanin=args.merge_fanin,
+                      pooled_cascade=args.pooled_cascade)
+    backend = (CommandTemplateBackend(args.template) if args.template
+               else LocalExecBackend(workers=args.workers))
+    ctrl_dir = os.path.join(os.path.abspath(args.workdir), "ctrl")
+    gen = ClusterGenerator(cfg, spec, ctrl_dir, backend=backend,
+                           checkpoint=not args.no_checkpoint,
+                           max_restarts=args.max_restarts,
+                           barrier_timeout=args.barrier_timeout,
+                           advertise=args.advertise or None)
+    try:
+        manifest, ledger = gen.run(csr_variant=args.csr_variant)
+        print(f"[graph] manifest {manifest}")
+        summary = {"graph_manifest": manifest, "ledger": ledger.as_dict(),
+                   "restarts": gen.controller.restarts}
+        if args.walkers > 0:
+            walks = gen.walk_corpus(args.walkers, args.length,
+                                    seed=args.walk_seed)
+            print(f"[corpus] manifest {walks.manifest_path} "
+                  f"({walks.num_walkers} x {walks.length + 1})")
+            summary["corpus_manifest"] = walks.manifest_path
+        print(json.dumps(summary, indent=1))
+        return 0
+    finally:
+        gen.close()
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(prog="repro.launch.cluster")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    h = sub.add_parser("host", help="worker-host daemon (one per machine)")
+    h.add_argument("--controller", required=True, help="controller host:port")
+    h.add_argument("--host-id", type=int, required=True)
+    h.add_argument("--workdir", required=True)
+    h.add_argument("--workers", type=int, default=0,
+                   help="local spawn-pool size (0 = in-process)")
+    h.add_argument("--no-checkpoint", action="store_true")
+    h.add_argument("--exchange-host", default="127.0.0.1",
+                   help="bind address of this host's ExchangeServer")
+    h.add_argument("--max-tasks", type=int, default=0,
+                   help="crash-test hook: hard-exit after N executed tasks")
+    h.set_defaults(fn=cmd_host)
+
+    common = argparse.ArgumentParser(add_help=False)
+    common.add_argument("--hosts", type=int, default=2)
+    common.add_argument("--workdir", required=True,
+                        help="root dir: host{h}/ per host + ctrl/")
+    common.add_argument("--nb", type=int, default=4)
+    common.add_argument("--bind", default="127.0.0.1",
+                        help="controller bind address")
+    common.add_argument("--advertise", default="",
+                        help="controller address workers dial, when it "
+                             "differs from --bind (e.g. bind 0.0.0.0, "
+                             "advertise the routable interface); bare "
+                             "hostnames get the bound port appended")
+    common.add_argument("--host-names", default="",
+                        help="comma list of launch targets for {host}")
+
+    s = sub.add_parser("spec", parents=[common],
+                       help="emit a ClusterSpec JSON")
+    s.add_argument("--out", default="")
+    s.set_defaults(fn=cmd_spec)
+
+    r = sub.add_parser("run", parents=[common],
+                       help="controller + hosts, generation (+ walks)")
+    r.add_argument("--scale", type=int, default=12)
+    r.add_argument("--edge-factor", type=int, default=4)
+    r.add_argument("--chunk-edges", type=int, default=1 << 14)
+    r.add_argument("--seed", type=int, default=0x5EED_1234)
+    r.add_argument("--merge-fanin", type=int, default=64)
+    r.add_argument("--pooled-cascade", action="store_true",
+                   help="dispatch cascade merge levels through the cluster")
+    r.add_argument("--csr-variant", choices=("sorted", "scatter"),
+                   default="sorted")
+    r.add_argument("--walkers", type=int, default=0,
+                   help="walk-corpus size (0 = generation only)")
+    r.add_argument("--length", type=int, default=16)
+    r.add_argument("--walk-seed", type=int, default=0)
+    r.add_argument("--workers", type=int, default=0,
+                   help="per-host local pool size (local backend)")
+    r.add_argument("--template", default="",
+                   help="command template backend (ssh/srun); see module doc")
+    r.add_argument("--max-restarts", type=int, default=1)
+    r.add_argument("--barrier-timeout", type=float, default=600.0)
+    r.add_argument("--no-checkpoint", action="store_true")
+    r.set_defaults(fn=cmd_run)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

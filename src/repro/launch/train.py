@@ -59,7 +59,13 @@ def main(argv=None):
                          "(temp dir if empty; reuse to resume)")
     ap.add_argument("--walkers", type=int, default=0,
                     help="external corpus size (0 = min(steps*batch, 8192))")
+    ap.add_argument("--corpus-manifest", default="",
+                    help="stream batches from an existing sharded corpus "
+                         "manifest (e.g. a launch/cluster.py run's output) "
+                         "instead of generating; implies --data external")
     args = ap.parse_args(argv)
+    if args.corpus_manifest:
+        args.data = "external"
 
     cfg = get_smoke_config(args.arch)
     lcfg = LoaderConfig(batch_size=args.batch, seq_len=args.seq,
@@ -70,7 +76,16 @@ def main(argv=None):
     # workdir — generation and corpus build can fail (or be interrupted)
     # with gigabytes already on disk
     try:
-        if args.data == "external":
+        if args.corpus_manifest:
+            # 1+2 already happened elsewhere (e.g. a multi-host cluster run):
+            # stream token batches straight from the sharded corpus manifest —
+            # per-host shard files are gathered per batch, never assembled.
+            gcfg = GraphConfig(scale=args.scale)
+            loader = ExternalWalkLoader(gcfg, "", lcfg,
+                                        corpus_manifest=args.corpus_manifest)
+            print(f"[corpus] streaming {loader.walks.num_walkers} x "
+                  f"{args.seq + 1} walks from {args.corpus_manifest}")
+        elif args.data == "external":
             # 1+2. out-of-core generation + walk corpus: CSR and walks stay
             # on disk end to end (resumable via the workdir's phase
             # checkpoints; only an explicit --workdir persists for resume)

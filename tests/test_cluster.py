@@ -1,0 +1,306 @@
+"""Multi-host cluster runtime: 2-host loopback parity, host-kill resume,
+auto-restart, pooled cascade merges, and the partitioned scatter CSR.
+
+The acceptance contract: a 2-host run via the local-exec backend (disjoint
+workdirs, socket transport) produces a graph and walk corpus bit-identical
+to the single-host PartitionedGenerator, with no single workdir ever holding
+the full corpus; killing one host mid-phase and relaunching resumes from
+that host's checkpoints only.
+"""
+
+import hashlib
+import json
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.cluster import (
+    ClusterError,
+    ClusterGenerator,
+    ClusterSpec,
+    HostSpec,
+    LocalExecBackend,
+    format_peer_addrs,
+    parse_peer_addrs,
+)
+from repro.core.corpus import ShardedWalks, shard_name
+from repro.core.phases import (
+    PartitionedGenerator,
+    plain_config,
+    result_config_key,
+)
+from repro.core.types import GraphConfig
+
+_SRC = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+_ENV = {"PYTHONPATH": _SRC}
+
+CFG = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=4,
+                  shuffle_variant="external")
+W, L, WSEED = 17, 5, 3
+
+
+def _csr_sha(csr):
+    h = hashlib.sha256()
+    for o, a in csr:
+        h.update(np.asarray(o).tobytes())
+        h.update(np.asarray(a).tobytes())
+    return h.hexdigest()
+
+
+@pytest.fixture(scope="module")
+def single_host_ref(tmp_path_factory):
+    """The single-host oracle every cluster scenario compares against."""
+    d = str(tmp_path_factory.mktemp("ref"))
+    with PartitionedGenerator(CFG, d, max_workers=0) as part:
+        csr, _ = part.run()
+        walks = np.asarray(part.walk_corpus(W, L, seed=WSEED)).copy()
+        sha = _csr_sha(csr)
+    return {"workdir": d, "csr_sha": sha, "walks": walks}
+
+
+def _cluster(tmp_path, name, backend=None, **kw):
+    spec = ClusterSpec.local(2, str(tmp_path / name), nb=CFG.nb)
+    gen = ClusterGenerator(
+        CFG.with_(transport="socket"), spec, str(tmp_path / name / "ctrl"),
+        backend=backend if backend is not None else LocalExecBackend(env=_ENV),
+        checkpoint=True, **kw)
+    return spec, gen
+
+
+class _KillHost1First(LocalExecBackend):
+    """Crash injection: host 1's FIRST launch dies hard (os._exit) after
+    executing a handful of tasks — mid-phase, like kill -9."""
+
+    def __init__(self, max_tasks=6):
+        super().__init__(env=_ENV)
+        self.max_tasks = max_tasks
+
+    def host_args(self, host, attempt):
+        if host.host_id == 1 and attempt == 0:
+            return ["--max-tasks", str(self.max_tasks)]
+        return []
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 2-host parity + shard placement
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_two_host_cluster_bit_identical_to_single_host(tmp_path,
+                                                       single_host_ref):
+    spec, gen = _cluster(tmp_path, "cl")
+    try:
+        manifest_path, ledger = gen.run()
+        walks = gen.walk_corpus(W, L, seed=WSEED)
+        np.testing.assert_array_equal(np.asarray(walks),
+                                      single_host_ref["walks"])
+        assert _csr_sha(gen.load_csr()) == single_host_ref["csr_sha"]
+        # graph manifest names each bucket's owner host + files
+        m = json.load(open(manifest_path))
+        assert [b["host"] for b in m["buckets"]] == [0, 0, 1, 1]
+        for b in m["buckets"]:
+            assert os.path.exists(os.path.join(b["workdir"], b["offv"]))
+        # sharded collect: every shard lives on its OWNER host's workdir and
+        # nowhere else — in particular the controller's workdir holds no
+        # corpus bytes, only manifests + checkpoint state.
+        for j in range(CFG.nb):
+            owner_dir = spec.hosts[spec.owner_of(j)].workdir
+            other_dir = spec.hosts[1 - spec.owner_of(j)].workdir
+            assert os.path.exists(os.path.join(owner_dir,
+                                               shard_name("walks.npy", j)))
+            assert not os.path.exists(os.path.join(other_dir,
+                                                   shard_name("walks.npy", j)))
+            assert not os.path.exists(os.path.join(gen.workdir,
+                                                   shard_name("walks.npy", j)))
+        # the corpus manifest reaches across the host workdirs
+        again = ShardedWalks(walks.manifest_path)
+        np.testing.assert_array_equal(np.asarray(again),
+                                      single_host_ref["walks"])
+        # exchange actually crossed the sockets
+        assert gen.exchange_stats.frames_recv > 0
+    finally:
+        gen.close()
+
+
+# ---------------------------------------------------------------------------
+# failure handling
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_cluster_auto_restart_dead_host(tmp_path, single_host_ref):
+    """Host 1 is killed (hard exit) mid-phase; the controller detects the
+    death, relaunches it through the exec backend, re-dispatches the lost
+    tasks, and the run completes bit-identical — within one launch."""
+    spec, gen = _cluster(tmp_path, "ar", backend=_KillHost1First(),
+                         max_restarts=1)
+    try:
+        gen.run()
+        walks = np.asarray(gen.walk_corpus(W, L, seed=WSEED)).copy()
+        assert gen.controller.restarts[1] == 1, gen.controller.restarts
+        np.testing.assert_array_equal(walks, single_host_ref["walks"])
+        assert _csr_sha(gen.load_csr()) == single_host_ref["csr_sha"]
+    finally:
+        gen.close()
+
+
+@pytest.mark.slow
+def test_cluster_host_kill_relaunch_resumes_host_only(tmp_path,
+                                                      single_host_ref):
+    """With the restart budget spent, a mid-phase host kill fails the run;
+    relaunching the whole cluster over the same workdirs resumes: the
+    surviving host replays NOTHING it completed (per-host checkpoints), only
+    the killed host recomputes, and the output is bit-identical."""
+    spec, gen = _cluster(tmp_path, "kr", backend=_KillHost1First(),
+                         max_restarts=0)
+    run1_done = set()
+    try:
+        with pytest.raises(ClusterError, match="restart budget"):
+            gen.run()
+    finally:
+        run1_done = {e["key"] for e in gen.controller.task_log
+                     if e["host"] == 0 and e["ok"]}
+        gen.close()
+    assert run1_done, "host 0 should have completed some tasks before abort"
+
+    gen = ClusterGenerator(CFG.with_(transport="socket"), spec,
+                           str(tmp_path / "kr" / "ctrl"),
+                           backend=LocalExecBackend(env=_ENV), checkpoint=True)
+    try:
+        gen.run()
+        walks = np.asarray(gen.walk_corpus(W, L, seed=WSEED)).copy()
+        log = gen.controller.task_log
+        recomputed = [e for e in log if e["host"] == 0
+                      and e["key"] in run1_done and not e["resumed"]]
+        assert not recomputed, f"host 0 recomputed: {recomputed[:5]}"
+        assert any(e["host"] == 1 and not e["resumed"] for e in log), \
+            "host 1 should have recomputed its unfinished work"
+        np.testing.assert_array_equal(walks, single_host_ref["walks"])
+        assert _csr_sha(gen.load_csr()) == single_host_ref["csr_sha"]
+    finally:
+        gen.close()
+
+
+# ---------------------------------------------------------------------------
+# pooled cascade + partitioned scatter (satellites)
+# ---------------------------------------------------------------------------
+
+
+def test_partitioned_scatter_bit_identical_to_sorted(tmp_path,
+                                                     single_host_ref):
+    """csr_variant='scatter' under the partitioned driver: same files as
+    'sorted' (within-row adjacency is encounter order either way), but the
+    ledger shows the Fig. 2 random-write blowup."""
+    with PartitionedGenerator(CFG, str(tmp_path), max_workers=0) as part:
+        csr, ledger = part.run(csr_variant="scatter")
+        assert _csr_sha(csr) == single_host_ref["csr_sha"]
+        assert ledger.rand_writes > 0
+        walks = np.asarray(part.walk_corpus(W, L, seed=WSEED))
+        np.testing.assert_array_equal(walks, single_host_ref["walks"])
+
+
+def test_partitioned_scatter_after_checkpointed_sorted_fails_with_guidance(
+        tmp_path):
+    d = str(tmp_path)
+    with PartitionedGenerator(CFG, d, max_workers=0, checkpoint=True) as p:
+        p.run("sorted")
+    with PartitionedGenerator(CFG, d, max_workers=0, checkpoint=True) as p:
+        with pytest.raises(ValueError, match="keep_phase_stores"):
+            p.run("scatter")
+
+
+def test_pooled_cascade_bit_identical_and_resumable(tmp_path,
+                                                    single_host_ref):
+    """pooled_cascade at a tiny fan-in forces several pool-dispatched
+    cascade LEVELS; output must match the flat merge bit for bit, and a
+    completed checkpoint must resume every phase."""
+    pcfg = CFG.with_(pooled_cascade=True, merge_fanin=2)
+    d = str(tmp_path)
+    with PartitionedGenerator(pcfg, d, max_workers=0, checkpoint=True) as p:
+        csr, _ = p.run("sorted")
+        assert _csr_sha(csr) == single_host_ref["csr_sha"]
+        phases = [r["phase"] for r in p.orchestrator.report()]
+        assert any(ph.startswith("csr_cascade_l") for ph in phases), phases
+        walks = np.asarray(p.walk_corpus(W, L, seed=WSEED))
+        np.testing.assert_array_equal(walks, single_host_ref["walks"])
+    with PartitionedGenerator(pcfg, d, max_workers=0, checkpoint=True) as p:
+        csr2, _ = p.run("sorted")
+        assert all(r["status"] == "resumed" for r in p.orchestrator.report())
+        assert _csr_sha(csr2) == single_host_ref["csr_sha"]
+
+
+# ---------------------------------------------------------------------------
+# spec / config-shape invariants (tier-1 twins of the hypothesis suite)
+# ---------------------------------------------------------------------------
+
+
+def test_cluster_spec_round_trip_and_ownership(tmp_path):
+    spec = ClusterSpec(nb=8, hosts=(HostSpec(0, "/a", "n1"),
+                                    HostSpec(1, "/b", "n2"),
+                                    HostSpec(2, "/c")))
+    again = ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    p = spec.save(str(tmp_path / "spec.json"))
+    assert ClusterSpec.load(p) == spec
+    owned = [b for h in range(3) for b in spec.buckets_of(h)]
+    assert owned == list(range(8))                     # disjoint cover
+    for b in range(8):
+        assert b in spec.buckets_of(spec.owner_of(b))  # owner inverts
+
+
+def test_cluster_spec_validation():
+    with pytest.raises(ValueError, match="host_ids"):
+        ClusterSpec(nb=4, hosts=(HostSpec(0, "/a"), HostSpec(2, "/b")))
+    with pytest.raises(ValueError, match="distinct"):
+        ClusterSpec(nb=4, hosts=(HostSpec(0, "/a"), HostSpec(1, "/a")))
+    with pytest.raises(ValueError, match="cover"):
+        ClusterSpec(nb=1, hosts=(HostSpec(0, "/a"), HostSpec(1, "/b")))
+
+
+def test_peer_addrs_parse_format_round_trip():
+    addrs = ("127.0.0.1:1234", "node1:80", "[::1]:9")
+    assert parse_peer_addrs(format_peer_addrs(addrs)) == addrs
+    with pytest.raises(ValueError):
+        parse_peer_addrs("no-port")
+    with pytest.raises(ValueError):
+        parse_peer_addrs("host:notaport")
+
+
+def test_result_config_key_normalizes_cluster_fields():
+    """Resume across cluster shapes must hit the same key: transport and
+    rendezvous addresses never affect the result bytes."""
+    base = plain_config(CFG)
+    sock = plain_config(CFG.with_(
+        transport="socket", peer_addrs=("h1:1", "h2:2", "h1:3", "h2:4")))
+    assert result_config_key(base) == result_config_key(sock)
+    # pooled_cascade is bit-identical but schedule-different: kept IN the key
+    pooled = plain_config(CFG.with_(pooled_cascade=True))
+    assert result_config_key(pooled) != result_config_key(base)
+
+
+# ---------------------------------------------------------------------------
+# CLI
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_cluster_cli_end_to_end(tmp_path):
+    """`python -m repro.launch.cluster run` — controller + 2 hosts + corpus,
+    all from the CLI (what the quickstart and the CI job exercise)."""
+    root = str(tmp_path / "cli")
+    env = dict(os.environ, **_ENV)
+    out = subprocess.run(
+        [sys.executable, "-m", "repro.launch.cluster", "run",
+         "--hosts", "2", "--workdir", root, "--scale", "8", "--nb", "4",
+         "--edge-factor", "2", "--chunk-edges", "256",
+         "--walkers", "12", "--length", "4"],
+        env=env, capture_output=True, text=True, timeout=300)
+    assert out.returncode == 0, out.stderr[-2000:]
+    walks = ShardedWalks(os.path.join(root, "ctrl", "walks_manifest.json"))
+    assert np.asarray(walks).shape == (12, 5)
+    assert os.path.exists(os.path.join(root, "ctrl", "graph_manifest.json"))

@@ -1,0 +1,107 @@
+"""Hypothesis property tests for the cluster config-shape invariants:
+ClusterSpec / peer_addrs parsing round-trips, bucket-ownership partition
+laws, and result_config_key normalizing cluster/transport fields out of
+checkpoint keys (resume across cluster shapes must hit the same key).
+
+Module-level importorskip, same policy as tests/test_property.py: the
+non-hypothesis twins of the critical cases live in tests/test_cluster.py so
+tier-1 keeps coverage even without hypothesis installed.
+"""
+
+import dataclasses
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.cluster import (  # noqa: E402
+    ClusterSpec,
+    HostSpec,
+    format_peer_addrs,
+    parse_peer_addrs,
+)
+from repro.core.phases import PlainCfg, result_config_key  # noqa: E402
+
+_SETTINGS = dict(max_examples=80, deadline=None)
+
+_hostname = st.from_regex(r"[a-z][a-z0-9\-\.]{0,15}", fullmatch=True)
+
+
+@st.composite
+def cluster_specs(draw):
+    num_hosts = draw(st.integers(1, 8))
+    nb = draw(st.integers(num_hosts, 64))
+    hosts = tuple(
+        HostSpec(h, f"/data/w{h}", draw(_hostname))
+        for h in range(num_hosts))
+    return ClusterSpec(nb=nb, hosts=hosts,
+                       controller_host=draw(_hostname),
+                       controller_port=draw(st.integers(0, 65535)))
+
+
+@given(spec=cluster_specs())
+@settings(**_SETTINGS)
+def test_cluster_spec_json_round_trip(spec):
+    assert ClusterSpec.from_json(spec.to_json()) == spec
+
+
+@given(spec=cluster_specs())
+@settings(**_SETTINGS)
+def test_bucket_ownership_is_a_contiguous_partition(spec):
+    """Every bucket owned exactly once, ranges contiguous and in host order
+    (the paper's RP applied to hosts), owner_of inverts buckets_of."""
+    seen = []
+    for h in range(spec.num_hosts):
+        r = spec.buckets_of(h)
+        assert r.step == 1
+        seen.extend(r)
+    assert seen == list(range(spec.nb))
+    for b in range(spec.nb):
+        assert b in spec.buckets_of(spec.owner_of(b))
+
+
+@given(addrs=st.lists(
+    st.tuples(_hostname, st.integers(0, 65535)).map(
+        lambda t: f"{t[0]}:{t[1]}"),
+    min_size=1, max_size=16).map(tuple))
+@settings(**_SETTINGS)
+def test_peer_addrs_round_trip(addrs):
+    assert parse_peer_addrs(format_peer_addrs(addrs)) == addrs
+
+
+@st.composite
+def plain_cfgs(draw):
+    scale = draw(st.integers(6, 16))
+    nb = draw(st.sampled_from([1, 2, 4]))
+    return PlainCfg(
+        scale=scale, edge_factor=draw(st.integers(1, 8)),
+        seed=draw(st.integers(0, 2**31 - 1)),
+        a=0.57, b=0.19, c=0.19, d=0.05,
+        nb=nb, chunk_edges=draw(st.sampled_from([128, 256, 1 << 14])),
+        rounds=draw(st.integers(1, 4)),
+        merge_fanin=draw(st.sampled_from([0, 2, 64])),
+    )
+
+
+@given(pcfg=plain_cfgs(),
+       peers=st.none() | st.lists(
+           st.tuples(_hostname, st.integers(0, 65535)).map(
+               lambda t: f"{t[0]}:{t[1]}"),
+           min_size=1, max_size=4).map(tuple),
+       transport=st.sampled_from(["fs", "socket"]))
+@settings(**_SETTINGS)
+def test_result_config_key_erases_transport_and_peers(pcfg, peers, transport):
+    """The checkpoint key is invariant under everything that only moves
+    bytes differently — transport choice, peer addresses (any cluster
+    shape/ports) — and keyed on everything that changes the bytes or the
+    phase schedule."""
+    varied = dataclasses.replace(pcfg, transport=transport, peer_addrs=peers)
+    assert result_config_key(varied) == result_config_key(pcfg)
+    # ... but not under result-affecting fields:
+    assert result_config_key(dataclasses.replace(pcfg, seed=pcfg.seed ^ 1)) \
+        != result_config_key(pcfg)
+    # pooled_cascade changes the phase schedule -> deliberately kept in key
+    assert result_config_key(
+        dataclasses.replace(pcfg, pooled_cascade=True)) \
+        != result_config_key(dataclasses.replace(pcfg, pooled_cascade=False))
