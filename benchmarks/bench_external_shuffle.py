@@ -1,6 +1,6 @@
 """The external shuffle (paper Alg. 2-4 on disk) vs the device-spill path.
 
-Three measurements:
+Four measurements:
 
   memory   MemoryGauge peak resident rows across scales at fixed chunk_edges
            — the paper's claim: the external shuffle's working set does NOT
@@ -11,18 +11,55 @@ Three measurements:
   workers  wall time of the multi-process partitioned mode vs the
            single-process streaming driver at the same config (the
            single-host stand-in for the paper's strong scaling, Fig. 3).
+  recompute  the communication-free permutation (keyed Feistel family) vs
+           the materialized external shuffle at the same seed: wall time,
+           total IOLedger bytes, hash evaluations, and wire bytes split into
+           the shuffle phases (ZERO for recompute — there are none) vs the
+           whole run.  CSR bucket files are asserted bit-identical across
+           the variants before the row is reported.
 """
 
 from __future__ import annotations
 
+import hashlib
+import os
 import tempfile
 import time
 
 from repro.core.external import StreamingGenerator
-from repro.core.phases import PartitionedGenerator
+from repro.core.phases import PartitionedGenerator, csr_adjv_path, csr_offv_path
 from repro.core.types import GraphConfig
 
 from .common import print_table, save_json
+
+
+def _csr_digest(workdir: str, nb: int) -> str:
+    h = hashlib.sha256()
+    for i in range(nb):
+        for p in (csr_offv_path(workdir, i), csr_adjv_path(workdir, i)):
+            with open(p, "rb") as f:
+                h.update(f.read())
+    return h.hexdigest()
+
+
+def _recompute_row(label: str, cfg: GraphConfig, workers: int = 0):
+    with tempfile.TemporaryDirectory() as d:
+        t0 = time.perf_counter()
+        with PartitionedGenerator(cfg, d, max_workers=workers) as part:
+            part.run()
+            secs = time.perf_counter() - t0
+            rep = part.orchestrator.report()
+            led = part.ledger
+            digest = _csr_digest(d, cfg.nb)
+    shuffle_wire = sum(int(p.get("wire_bytes_sent", 0)) for p in rep
+                       if p["phase"].startswith("shuffle"))
+    total_wire = sum(int(p.get("wire_bytes_sent", 0)) for p in rep)
+    return {"variant": label, "seconds": secs,
+            "ledger_bytes": led.bytes_read + led.bytes_written,
+            "hash_evals": led.hash_evals,
+            "shuffle_wire_bytes": shuffle_wire,
+            "total_wire_bytes": total_wire,
+            "csr_sha256": digest}
 
 
 def run(scales=(10, 12, 14), chunk=1 << 10, nb=4, worker_counts=(0, 2, 4)):
@@ -63,9 +100,29 @@ def run(scales=(10, 12, 14), chunk=1 << 10, nb=4, worker_counts=(0, 2, 4)):
     print_table("partitioned mode wall time (scale=%d, nb=%d)" % (scales[0], nb),
                 worker_rows, ["workers", "seconds"])
 
+    recompute_rows = []
+    for label, variant, perm in (("external/shuffle", "external", "shuffle"),
+                                 ("external/feistel", "external", "feistel"),
+                                 ("recompute", "recompute", "feistel")):
+        rcfg = GraphConfig(scale=scales[-1], nb=nb, chunk_edges=chunk,
+                           shuffle_variant=variant, perm_family=perm,
+                           edge_factor=4)
+        recompute_rows.append(_recompute_row(label, rcfg))
+    # The tentpole's contract: same seed + feistel family => bit-identical
+    # CSR bucket files whether the permutation was materialized (external)
+    # or recomputed in-stream.
+    assert (recompute_rows[1]["csr_sha256"] == recompute_rows[2]["csr_sha256"]), \
+        "recompute CSR diverged from external+feistel"
+    print_table("recompute vs external (scale=%d, nb=%d)" % (scales[-1], nb),
+                recompute_rows,
+                ["variant", "seconds", "ledger_bytes", "hash_evals",
+                 "shuffle_wire_bytes", "total_wire_bytes"])
+
     save_json("external_shuffle",
-              {"memory": mem_rows, "per_phase_io": io_rows, "workers": worker_rows})
-    return mem_rows, io_rows, worker_rows
+              {"memory": mem_rows, "per_phase_io": io_rows,
+               "workers": worker_rows, "recompute": recompute_rows})
+    return {"memory": mem_rows, "per_phase_io": io_rows,
+            "workers": worker_rows, "recompute": recompute_rows}
 
 
 if __name__ == "__main__":

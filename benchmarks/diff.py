@@ -1,0 +1,171 @@
+"""Benchmark trajectory diff: fail CI when the current BENCH_*.json set
+regresses against the committed baseline.
+
+Two families of numeric leaves are compared, each against its own
+tolerance:
+
+  wall time     every bench's `wall_seconds` in BENCH_summary.json, plus any
+                leaf named `seconds`/`wall_seconds` inside a per-bench
+                result tree.  Wall clocks are noisy, so leaves whose
+                baseline is below `--min-wall` seconds are reported but
+                never fail the diff.
+  ledger bytes  every numeric leaf whose dotted path contains "bytes"
+                (ledger_bytes, shuffle_wire_bytes, seq_reads' byte twins,
+                ...).  These are deterministic accounting values — a
+                regression here is a real I/O-complexity change, so the
+                threshold applies at any magnitude above `--min-bytes`.
+
+A leaf regresses when  current > baseline * (1 + tol).  Leaves present only
+in the baseline (bench removed / renamed) or only in the current run (new
+bench) are warnings, not failures — the baseline is refreshed by copying
+`experiments/bench/BENCH_*.json` over `benchmarks/baseline/` when a change
+is intentional.
+
+Usage (the CI step):
+
+    PYTHONPATH=src python -m benchmarks.run --fast --only merge_fanin,...
+    python benchmarks/diff.py --baseline benchmarks/baseline \
+                              --current experiments/bench
+"""
+
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+from typing import Dict, Iterator, Tuple
+
+WALL_KEYS = ("seconds", "wall_seconds")
+
+
+def _leaves(node, path: str = "") -> Iterator[Tuple[str, float]]:
+    """Yield (dotted_path, value) for every numeric leaf of a JSON tree.
+    List indices are path components so rows line up positionally."""
+    if isinstance(node, dict):
+        for k in sorted(node):
+            yield from _leaves(node[k], f"{path}.{k}" if path else str(k))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _leaves(v, f"{path}.{i}")
+    elif isinstance(node, bool):
+        return
+    elif isinstance(node, (int, float)):
+        yield path, float(node)
+
+
+def _classify(path: str) -> str:
+    last = path.rsplit(".", 1)[-1]
+    if last in WALL_KEYS:
+        return "wall"
+    if "bytes" in last:
+        return "bytes"
+    return "other"
+
+
+def load_tree(dirname: str) -> Dict[str, Dict[str, float]]:
+    """{bench_name: {dotted_path: value}} over every BENCH_*.json in
+    `dirname` (the summary file contributes under its own name)."""
+    out: Dict[str, Dict[str, float]] = {}
+    for path in sorted(glob.glob(os.path.join(dirname, "BENCH_*.json"))):
+        name = os.path.basename(path)[len("BENCH_"):-len(".json")]
+        try:
+            with open(path) as f:
+                payload = json.load(f)
+        except (OSError, json.JSONDecodeError) as e:
+            print(f"[diff] WARNING: unreadable {path}: {e}")
+            continue
+        out[name] = {p: v for p, v in _leaves(payload)
+                     if _classify(p) != "other"}
+    return out
+
+
+def compare(baseline: Dict[str, Dict[str, float]],
+            current: Dict[str, Dict[str, float]],
+            wall_tol: float, bytes_tol: float,
+            min_wall: float, min_bytes: float) -> Tuple[list, list]:
+    """Returns (failures, warnings) as printable strings."""
+    failures, warnings = [], []
+    for bench in sorted(set(baseline) | set(current)):
+        if bench not in current:
+            warnings.append(f"bench '{bench}' in baseline but not in current "
+                            "run (removed or not selected)")
+            continue
+        if bench not in baseline:
+            warnings.append(f"bench '{bench}' is new (no baseline); copy "
+                            "experiments/bench over benchmarks/baseline to "
+                            "track it")
+            continue
+        base, cur = baseline[bench], current[bench]
+        for path in sorted(set(base) | set(cur)):
+            if path not in cur:
+                warnings.append(f"{bench}:{path} disappeared")
+                continue
+            if path not in base:
+                warnings.append(f"{bench}:{path} is new")
+                continue
+            b, c = base[path], cur[path]
+            kind = _classify(path)
+            tol = wall_tol if kind == "wall" else bytes_tol
+            if b <= 0:
+                if c > 0 and kind == "bytes":
+                    failures.append(f"{bench}:{path} grew from 0 to {c:g}")
+                continue
+            ratio = c / b
+            line = (f"{bench}:{path} {b:g} -> {c:g} "
+                    f"({(ratio - 1) * 100:+.1f}%)")
+            if ratio > 1 + tol:
+                if kind == "wall" and b < min_wall:
+                    warnings.append(line + " [below --min-wall, not failing]")
+                elif kind == "bytes" and b < min_bytes:
+                    warnings.append(line + " [below --min-bytes, not failing]")
+                else:
+                    failures.append(line)
+    return failures, warnings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--baseline", default="benchmarks/baseline")
+    ap.add_argument("--current", default="experiments/bench")
+    ap.add_argument("--wall-tol", type=float, default=0.20,
+                    help="fail when wall time grows past baseline*(1+tol)")
+    ap.add_argument("--bytes-tol", type=float, default=0.20,
+                    help="fail when a *bytes* leaf grows past baseline*(1+tol)")
+    ap.add_argument("--min-wall", type=float, default=1.0,
+                    help="wall leaves with baseline below this many seconds "
+                         "warn instead of fail (clock noise floor)")
+    ap.add_argument("--min-bytes", type=float, default=4096,
+                    help="bytes leaves with baseline below this warn instead "
+                         "of fail")
+    args = ap.parse_args(argv)
+
+    if not os.path.isdir(args.baseline) or not glob.glob(
+            os.path.join(args.baseline, "BENCH_*.json")):
+        print(f"[diff] no baseline at {args.baseline}; nothing to compare "
+              "(seed it by copying experiments/bench/BENCH_*.json there)")
+        return 0
+    baseline = load_tree(args.baseline)
+    current = load_tree(args.current)
+    if not current:
+        print(f"[diff] FAIL: no BENCH_*.json under {args.current} — did the "
+              "benchmark step run?")
+        return 1
+    failures, warnings = compare(baseline, current, args.wall_tol,
+                                 args.bytes_tol, args.min_wall, args.min_bytes)
+    for w in warnings:
+        print(f"[diff] warn: {w}")
+    for f_ in failures:
+        print(f"[diff] FAIL: {f_}")
+    if failures:
+        print(f"[diff] {len(failures)} regression(s) vs {args.baseline}")
+        return 1
+    print(f"[diff] ok: no regressions vs {args.baseline} "
+          f"({sum(len(v) for v in current.values())} leaves checked, "
+          f"{len(warnings)} warning(s))")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

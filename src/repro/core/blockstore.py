@@ -77,6 +77,13 @@ class IOLedger:
     rand_writes: int = 0
     bytes_read: int = 0
     bytes_written: int = 0
+    # Per-element hash evaluations (the recompute-shuffle cost unit: what the
+    # communication-free relabel pays INSTEAD of exchange bytes — Funke et
+    # al.'s trade, made visible next to the byte counters it displaces).
+    hash_evals: int = 0
+
+    def hashes(self, count: int):
+        self.hash_evals += count
 
     def read(self, nbytes: int, sequential: bool = True):
         self.bytes_read += nbytes
@@ -571,6 +578,7 @@ def partition_runs(
     outs: Sequence,
     part_of: Callable[..., np.ndarray],
     tag_prefix: Optional[str] = None,
+    transform: Optional[Callable[..., Tuple[np.ndarray, ...]]] = None,
 ) -> Sequence:
     """Bounded-memory bucket partition (paper Alg. 8's bucket exchange).
 
@@ -584,10 +592,16 @@ def partition_runs(
     names the written runs `{tag_prefix}_{seq}` so concurrent senders into
     a shared destination inbox never collide (multi-process mode), and so
     receivers recover sender order lexicographically on either backend.
+    `transform` rewrites each run's columns before partitioning (same
+    column count; `part_of` sees the TRANSFORMED values) — the inline-map
+    hook of the recompute relabel: u -> perm(u) applied during the very
+    scan that ships each edge to owner(perm(src)).
     """
     nparts = len(outs)
     seq = [0] * nparts
     for cols in store.iter_runs():
+        if transform is not None:
+            cols = tuple(transform(*cols))
         dest = np.asarray(part_of(*cols))
         if dest.size and (int(dest.min()) < 0 or int(dest.max()) >= nparts):
             bad = dest[(dest < 0) | (dest >= nparts)]

@@ -997,7 +997,7 @@ class ClusterGenerator(PartitionedGenerator):
         self.orchestrator = PhaseOrchestrator(
             workdir, self.ledger, checkpoint=checkpoint,
             config_key=repr(("cluster", result_config_key(self.pcfg))),
-            keep_all=keep_all,
+            keep_all=keep_all, stats=self.exchange_stats,
             cleaner=lambda names: self.transport.clean_inboxes(names))
 
     # -- pool plumbing --------------------------------------------------------

@@ -26,11 +26,23 @@ Phase algebra and I/O complexity (paper Alg. 2-11, §III-B):
                 bucket files via log_nb(n) rounds of {external sort by
                 counter-hash key, positional slice exchange}.  Peak RSS is
                 O(chunk_edges) at ANY scale, all I/O sequential.
+                "recompute": communication-free (Funke et al.'s hash-derived
+                permutation) — pv is the keyed invertible Feistel family
+                (hostgen.graph_perm_np), evaluated wherever a label is
+                needed.  ZERO shuffle phases: no pv store, no shuffle-round
+                I/O, no exchange bytes.  The permutation's cost moves from
+                the I/O column to the compute column: O(1) mix32 rounds per
+                evaluation, charged to ledger.hash_evals.
   generate      O(b*f / C_e) sequential writes          (Alg. 5)
   relabel       O(2*b*f*S(int) / C_e) sequential        (Alg. 6-7): edges
                 external-sorted by the key field, pv *runs* streamed past
                 them (MonotoneLookup) — a sort-merge-join against bucket
                 files, never a memmapped monolith.
+                "recompute": the two relabel passes AND redistribute fuse
+                into ONE O(b*f / C_e) sequential scan that maps
+                u -> perm(u) in-stream (2 hash evals per edge, 0 exchange
+                bytes beyond the owner exchange below): both external sorts,
+                both scatter exchanges and the pv join vanish.
   redistribute  O(B*f / C_e) sequential                 (Alg. 8-9)
   csr_scatter   O(b) RANDOM                             (Alg. 10-11 — the Fig. 2 blowup)
   csr_sorted    O(B / C_e) sequential                   (§III-B7 — the predicted fix)
@@ -187,9 +199,11 @@ class StreamingGenerator:
         self._transport = FilesystemTransport(workdir, self.ledger, self.gauge)
         if cfg.shuffle_variant == "external":
             validate_external_shape(self._pcfg)
+        # shuffle_variant (and the rest of the variant knobs) live inside
+        # result_config_key now — no need to append them separately.
         self.orchestrator = PhaseOrchestrator(
             workdir, self.ledger, checkpoint=ck,
-            config_key=repr((result_config_key(self._pcfg), cfg.shuffle_variant)),
+            config_key=repr(result_config_key(self._pcfg)),
             keep_all=bool(getattr(cfg, "keep_phase_stores", False)))
 
     # -- phase 1: permutation ------------------------------------------------
@@ -200,6 +214,11 @@ class StreamingGenerator:
             return self._permutation_device()
         if self.cfg.shuffle_variant == "external":
             return self._permutation_external()
+        if self.cfg.shuffle_variant == "recompute":
+            raise ValueError(
+                "shuffle_variant='recompute' materializes no pv stores — "
+                "evaluate hostgen.graph_perm_np(seed, ids, n) (or its "
+                "inverse) instead")
         raise ValueError(self.cfg.shuffle_variant)
 
     def _permutation_device(self) -> List[BlockStore]:
@@ -223,16 +242,17 @@ class StreamingGenerator:
             buckets.append(store)
         return buckets
 
-    def _run_kernels_inline(self, kernel: str, argss) -> None:
+    def _run_kernels_inline(self, kernel: str, argss) -> List:
         """In-process map strategy for the shared phase drivers: same bucket
         kernels the partitioned workers run, against this driver's ledger
-        and (filesystem) transport."""
+        and (filesystem) transport.  Returns the kernel outputs (the pooled
+        drivers plan cascades from counts-returning sort kernels)."""
         from .phases import _KERNELS
 
-        for args in argss:
-            _KERNELS[kernel](self._pcfg, self.workdir, *args,
-                             ledger=self.ledger, gauge=self.gauge,
-                             transport=self._transport)
+        return [_KERNELS[kernel](self._pcfg, self.workdir, *args,
+                                 ledger=self.ledger, gauge=self.gauge,
+                                 transport=self._transport)
+                for args in argss]
 
     def _permutation_external(self) -> List[BlockStore]:
         """Paper Alg. 2-4 on disk: rounds of {chunked local shuffle via
@@ -256,6 +276,29 @@ class StreamingGenerator:
                 out[pos : pos + v.size] = v
                 self.ledger.write(v.nbytes)
                 pos += v.size
+        out.flush()
+        del out
+        return np.load(path, mmap_mode="r")
+
+    def export_pv_recompute(self) -> np.ndarray:
+        """Assemble pv for callers/validation under shuffle_variant=
+        'recompute': there are no bucket stores to stream, so each chunk is
+        pure hash evaluation — pv[lo:hi] = perm([lo, hi)) — written straight
+        to the memmap.  Bit-identical to export_pv over an
+        external+feistel run of the same config (tested)."""
+        from .hostgen import graph_perm_np
+
+        p = self._pcfg
+        path = os.path.join(self.workdir, "pv.npy")
+        out = np.lib.format.open_memmap(path, mode="w+", dtype=np.int64,
+                                        shape=(self.cfg.n,))
+        chunk = self.cfg.chunk_edges
+        for lo in range(0, self.cfg.n, chunk):
+            ids = np.arange(lo, min(lo + chunk, self.cfg.n), dtype=np.int64)
+            self.ledger.hashes(ids.size)
+            v = graph_perm_np(p.seed, ids, p.n, rounds=p.feistel_rounds)
+            out[lo : lo + ids.size] = v
+            self.ledger.write(v.nbytes)
         out.flush()
         del out
         return np.load(path, mmap_mode="r")
@@ -305,6 +348,28 @@ class StreamingGenerator:
         # after the second pass columns are (new_src, new_dst)
         return cur
 
+    # -- phase 3': communication-free relabel (recompute) ----------------------
+    def relabel_recompute(self, edges: BlockStore) -> List[RunStore]:
+        """shuffle_variant='recompute': ONE streaming scan applies
+        u -> perm(u) to both endpoints by hash evaluation (no pv store, no
+        external sorts, no join) and partitions straight to the owner
+        stores — relabel (both passes) and redistribute fused.  Twin of
+        phases.relabel_recompute_bucket."""
+        from .hostgen import graph_perm_np
+
+        p = self._pcfg
+        nb, B = self.cfg.nb, self.cfg.bucket_size
+
+        def relabel(s, d):
+            self.ledger.hashes(s.size + d.size)
+            return (graph_perm_np(p.seed, s, p.n, rounds=p.feistel_rounds),
+                    graph_perm_np(p.seed, d, p.n, rounds=p.feistel_rounds))
+
+        owners = [RunStore(self.workdir, seq_owned_store_name(i), self.ledger,
+                           gauge=self.gauge, fresh=True) for i in range(nb)]
+        partition_runs(edges, owners, lambda s, d: s // B, transform=relabel)
+        return owners
+
     # -- phase 4: redistribute (Alg. 8-9) --------------------------------------
     def redistribute(self, edges: BlockStore) -> List[RunStore]:
         nb, B = self.cfg.nb, self.cfg.bucket_size
@@ -332,6 +397,16 @@ class StreamingGenerator:
         """Alg. 10-11: unordered scan with a bounded associative map flushed
         into a memmap'd adjv — every flush is a RANDOM write burst.  This is
         the variant whose I/O the paper measured blowing up (Fig. 2)."""
+        if self._pcfg.perm_family == "feistel":
+            # Scatter-CSR adjacency order is ENCOUNTER order; recompute and
+            # external deliver the same owned-edge multiset in different
+            # arrival orders, so the feistel family's bit-identity contract
+            # requires the (src, dst)-sorted variant.
+            raise ValueError(
+                "csr_variant='scatter' is incompatible with "
+                "perm_family='feistel': its adjacency lists are in arrival "
+                "order, which the recomputable-permutation paths do not "
+                "reproduce; use csr_variant='sorted'")
         B = self.cfg.bucket_size
         flush_at = max(16, self.cfg.chunk_edges // 256)  # mmc analogue
         results = []
@@ -394,14 +469,27 @@ class StreamingGenerator:
         nb = self.cfg.nb
         orch = self.orchestrator
         sv, ld = self._save_stores, self._load_stores
-        pv_buckets = orch.run_phase("shuffle", self.permutation, save=sv, load=ld)
-        edges = orch.run_phase("generate", self.generate_edges, save=sv, load=ld)
-        relabeled = orch.run_phase(
-            "relabel", lambda: self.relabel(edges, pv_buckets), save=sv, load=ld,
-            frees=[EDGES_STORE])
-        owners = orch.run_phase(
-            "redistribute", lambda: self.redistribute(relabeled), save=sv, load=ld,
-            frees=[relabeled_store_name(1)])
+        recompute = self.cfg.shuffle_variant == "recompute"
+        if recompute:
+            # Communication-free path: no shuffle phase at all (the
+            # permutation is a hash family, not a store), and relabel +
+            # redistribute fuse into one scan.
+            edges = orch.run_phase("generate", self.generate_edges,
+                                   save=sv, load=ld)
+            owners = orch.run_phase(
+                "relabel_recompute", lambda: self.relabel_recompute(edges),
+                save=sv, load=ld, frees=[EDGES_STORE])
+        else:
+            pv_buckets = orch.run_phase("shuffle", self.permutation,
+                                        save=sv, load=ld)
+            edges = orch.run_phase("generate", self.generate_edges,
+                                   save=sv, load=ld)
+            relabeled = orch.run_phase(
+                "relabel", lambda: self.relabel(edges, pv_buckets),
+                save=sv, load=ld, frees=[EDGES_STORE])
+            owners = orch.run_phase(
+                "redistribute", lambda: self.redistribute(relabeled),
+                save=sv, load=ld, frees=[relabeled_store_name(1)])
 
         def _load_csr(_m):
             return [load_bucket_csr(csr_offv_path(self.workdir, i),
@@ -432,11 +520,18 @@ class StreamingGenerator:
             csr = orch.run_phase("csr_scatter", lambda: self.build_csr_scatter(owners))
         else:
             raise ValueError(csr_variant)
-        pv = orch.run_phase(
-            "export_pv", lambda: self.export_pv(pv_buckets),
-            save=lambda _res: {"path": "pv.npy"},
-            load=lambda m: np.load(os.path.join(self.workdir, m["path"]),
-                                   mmap_mode="r"),
-            frees=[pv_store_name(self._pcfg.rounds, i) for i in range(nb)]
-                  if csr_variant == "sorted" else [])
+        if recompute:
+            pv = orch.run_phase(
+                "export_pv", self.export_pv_recompute,
+                save=lambda _res: {"path": "pv.npy"},
+                load=lambda m: np.load(os.path.join(self.workdir, m["path"]),
+                                       mmap_mode="r"))
+        else:
+            pv = orch.run_phase(
+                "export_pv", lambda: self.export_pv(pv_buckets),
+                save=lambda _res: {"path": "pv.npy"},
+                load=lambda m: np.load(os.path.join(self.workdir, m["path"]),
+                                       mmap_mode="r"),
+                frees=[pv_store_name(self._pcfg.rounds, i) for i in range(nb)]
+                      if csr_variant == "sorted" else [])
         return pv, csr, self.ledger

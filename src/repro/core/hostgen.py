@@ -96,6 +96,150 @@ def rmat_edges_np_cfg(cfg, start: int, count: int) -> Tuple[np.ndarray, np.ndarr
     return rmat_edges_np(cfg.scale, cfg.seed, start, count, cfg.a, cfg.b, cfg.c, cfg.d)
 
 
+# ---------------------------------------------------------------------------
+# Keyed invertible permutation family (Funke et al.'s communication-free
+# relabel): a Feistel network over mix32.  Because every round function is a
+# pure counter hash, ANY host can recompute perm(v) — and therefore the new
+# label and the owner of any edge endpoint — locally, with zero exchange.
+# The forward/inverse pair below is the numpy source of truth; core/shuffle.py
+# holds the jnp twin and kernels/rmat.py the Pallas kernel, all bit-exact.
+# ---------------------------------------------------------------------------
+
+# Default Feistel depth.  4 alternating rounds of a bijective-avalanche round
+# function already decorrelate adjacent inputs far beyond what the R-MAT
+# pipeline observes; must be EVEN so the half widths return to (hi, lo) and
+# the output packs back into nbits.
+FEISTEL_ROUNDS = 4
+
+# Domain-separation constant: the pipeline's permutation key is
+# seed ^ _FEISTEL_STREAM, so the Feistel round keys can never collide with
+# the R-MAT streams (seed ^ stream*GOLDEN) or the shuffle salts
+# (mix32(seed + r*GOLDEN)) derived from the same seed.
+_FEISTEL_STREAM = 0xFE15_7E11
+
+
+def perm_domain_bits(n: int) -> int:
+    """ceil(log2(n)) clamped to >= 1: the Feistel domain [0, 2**nbits) is the
+    smallest power of two covering [0, n); cycle-walking closes the gap."""
+    return max(1, int(n - 1).bit_length())
+
+
+def feistel_round_key_np(key: int, i: int) -> np.ndarray:
+    """Round key rk_i = mix32(key + (i+1)*GOLDEN) — scalar uint32 (0-d).
+
+    The sum is folded in PYTHON integers then reduced mod 2**32, so the jnp
+    and Pallas twins can reproduce it exactly with one mix32 call."""
+    s = (int(key) + (i + 1) * _GOLDEN) & 0xFFFFFFFF
+    return mix32_np(np.asarray([s], np.uint32))[0]
+
+
+def feistel_perm_np(x: np.ndarray, key: int, nbits: int,
+                    rounds: int = FEISTEL_ROUNDS) -> np.ndarray:
+    """Keyed bijection on [0, 2**nbits) (unbalanced Feistel over mix32).
+
+    The input splits into L (hi_bits = nbits - nbits//2) and R (lo_bits =
+    nbits//2); each round computes F = mix32(R ^ rk_i), swaps halves, and
+    masks the new R to the width the OLD L had — after an even number of
+    rounds the widths are back to (hi, lo) and (L << lo_bits) | R is again an
+    nbits value.  Bijective because every round is invertible (XOR with a
+    function of the untouched half) — see feistel_perm_inv_np.
+
+    Container is uint64 with uint32 halves: nbits <= 62 (each half <= 31
+    bits, so the masks fit uint32).  Returns uint64.
+    """
+    if rounds < 2 or rounds % 2:
+        raise ValueError(f"feistel rounds must be even and >= 2, got {rounds}")
+    if not 1 <= nbits <= 62:
+        raise ValueError(f"feistel domain needs 1 <= nbits <= 62, got {nbits}")
+    lo_bits = nbits // 2
+    x = np.asarray(x, np.uint64)
+    L = (x >> np.uint64(lo_bits)).astype(np.uint32)
+    R = (x & np.uint64((1 << lo_bits) - 1)).astype(np.uint32)
+    wL, wR = nbits - lo_bits, lo_bits
+    for i in range(rounds):
+        F = mix32_np(R ^ feistel_round_key_np(key, i))
+        L, R, wL, wR = R, (L ^ F) & np.uint32((1 << wL) - 1), wR, wL
+    return (L.astype(np.uint64) << np.uint64(lo_bits)) | R.astype(np.uint64)
+
+
+def feistel_perm_inv_np(y: np.ndarray, key: int, nbits: int,
+                        rounds: int = FEISTEL_ROUNDS) -> np.ndarray:
+    """Inverse of feistel_perm_np: same round keys, walked in reverse."""
+    if rounds < 2 or rounds % 2:
+        raise ValueError(f"feistel rounds must be even and >= 2, got {rounds}")
+    if not 1 <= nbits <= 62:
+        raise ValueError(f"feistel domain needs 1 <= nbits <= 62, got {nbits}")
+    lo_bits = nbits // 2
+    y = np.asarray(y, np.uint64)
+    L = (y >> np.uint64(lo_bits)).astype(np.uint32)
+    R = (y & np.uint64((1 << lo_bits) - 1)).astype(np.uint32)
+    wL, wR = nbits - lo_bits, lo_bits
+    for i in reversed(range(rounds)):
+        F = mix32_np(L ^ feistel_round_key_np(key, i))
+        L, R, wL, wR = (R ^ F) & np.uint32((1 << wR) - 1), L, wR, wL
+    return (L.astype(np.uint64) << np.uint64(lo_bits)) | R.astype(np.uint64)
+
+
+def keyed_perm_np(x: np.ndarray, key: int, n: int,
+                  rounds: int = FEISTEL_ROUNDS) -> np.ndarray:
+    """Keyed bijection on [0, n) for ARBITRARY n, by cycle-walking the
+    power-of-two Feistel: out-of-range outputs are re-permuted until they
+    land inside [0, n).  Terminates because the Feistel orbit of any x < n
+    returns to x, so walking forward from x must hit an in-range element
+    within one cycle (< 2**nbits steps; in expectation < 2 steps since the
+    domain is at most 2n).  For power-of-two n — the pipeline's case, n =
+    2**scale — the walk never triggers and the cost is exactly one Feistel
+    evaluation per element.  Returns int64."""
+    nbits = perm_domain_bits(n)
+    x = np.asarray(x)
+    flat = np.atleast_1d(x).astype(np.int64)
+    if flat.size and (flat.min() < 0 or flat.max() >= n):
+        raise ValueError(f"keyed_perm_np: inputs must lie in [0, {n})")
+    out = np.atleast_1d(feistel_perm_np(flat, key, nbits, rounds))
+    bad = out >= np.uint64(n)
+    while bad.any():
+        out[bad] = feistel_perm_np(out[bad], key, nbits, rounds)
+        bad = out >= np.uint64(n)
+    return out.astype(np.int64).reshape(np.shape(x))
+
+
+def keyed_perm_inv_np(y: np.ndarray, key: int, n: int,
+                      rounds: int = FEISTEL_ROUNDS) -> np.ndarray:
+    """Inverse of keyed_perm_np: the inverse walk retraces the forward
+    cycle-walk backwards (all intermediates of the forward walk were >= n,
+    so the first in-range preimage IS the original input)."""
+    nbits = perm_domain_bits(n)
+    y = np.asarray(y)
+    flat = np.atleast_1d(y).astype(np.int64)
+    if flat.size and (flat.min() < 0 or flat.max() >= n):
+        raise ValueError(f"keyed_perm_inv_np: inputs must lie in [0, {n})")
+    out = np.atleast_1d(feistel_perm_inv_np(flat, key, nbits, rounds))
+    bad = out >= np.uint64(n)
+    while bad.any():
+        out[bad] = feistel_perm_inv_np(out[bad], key, nbits, rounds)
+        bad = out >= np.uint64(n)
+    return out.astype(np.int64).reshape(np.shape(y))
+
+
+def graph_perm_key(seed: int) -> int:
+    """The pipeline's permutation key for graph seed `seed`."""
+    return (int(seed) ^ _FEISTEL_STREAM) & 0xFFFFFFFF
+
+
+def graph_perm_np(seed: int, x: np.ndarray, n: int,
+                  rounds: int = FEISTEL_ROUNDS) -> np.ndarray:
+    """pv[x] of the recomputable permutation family: what the external
+    shuffle would have materialized, evaluated on demand (shuffle_variant=
+    "recompute" / perm_family="feistel")."""
+    return keyed_perm_np(x, graph_perm_key(seed), n, rounds)
+
+
+def graph_perm_inv_np(seed: int, y: np.ndarray, n: int,
+                      rounds: int = FEISTEL_ROUNDS) -> np.ndarray:
+    """Original vertex id of new label y (pv^{-1}[y])."""
+    return keyed_perm_inv_np(y, graph_perm_key(seed), n, rounds)
+
+
 def walk_rand_np(seed: int, walker: np.ndarray, step: int) -> np.ndarray:
     """Counter RNG of the random-walk samplers (data/walks.py), keyed by
     (seed, walker_id, step).  Lives here, jax-free, because the external walk

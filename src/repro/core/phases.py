@@ -83,6 +83,7 @@ from .transport import (
     sweep_partial_frames,
 )
 from .hostgen import (
+    graph_perm_np,
     rmat_edges_np_cfg,
     round_salt,
     shuffle_keys,
@@ -123,6 +124,20 @@ class PlainCfg:
     # checkpoint taken in one mode must not be resumed in the other (its GC
     # may have freed the other mode's phase inputs).
     pooled_cascade: bool = False
+    # Disk-tier shuffle variant: "device" | "external" | "recompute".  The
+    # recompute variant (Funke et al.) materializes NO pv stores and fuses
+    # relabel + redistribute into one hash-evaluating scan — a different
+    # phase schedule AND different CSR sort key, so (like pooled_cascade)
+    # it stays in result_config_key.
+    shuffle_variant: str = "external"
+    # Permutation family: "shuffle" (the materialized shuffle-exchange
+    # permutation) or "feistel" (the keyed invertible family —
+    # hostgen.graph_perm_np; recomputable on any host, forced by
+    # shuffle_variant="recompute", also legal under "external" where the
+    # same pv flows through the store machinery for parity testing).
+    perm_family: str = "shuffle"
+    # Feistel depth (perm_family="feistel"); even, >= 2.
+    feistel_rounds: int = 4
 
     @property
     def n(self) -> int:
@@ -143,6 +158,12 @@ class PlainCfg:
 
 def plain_config(cfg) -> PlainCfg:
     """Accepts GraphConfig (or anything duck-typed like it)."""
+    shuffle_variant = str(getattr(cfg, "shuffle_variant", "external"))
+    perm_family = str(getattr(cfg, "perm_family", "shuffle"))
+    if shuffle_variant == "recompute" and perm_family == "shuffle":
+        # recompute REQUIRES a recomputable permutation; auto-select it so
+        # cfg.with_(shuffle_variant="recompute") alone does the right thing.
+        perm_family = "feistel"
     p = PlainCfg(
         scale=int(cfg.scale), edge_factor=int(cfg.edge_factor), seed=int(cfg.seed),
         a=float(cfg.a), b=float(cfg.b), c=float(cfg.c), d=float(cfg.d),
@@ -157,9 +178,35 @@ def plain_config(cfg) -> PlainCfg:
         peer_addrs=(None if getattr(cfg, "peer_addrs", None) is None
                     else tuple(str(a) for a in cfg.peer_addrs)),
         pooled_cascade=bool(getattr(cfg, "pooled_cascade", False)),
+        shuffle_variant=shuffle_variant,
+        perm_family=perm_family,
+        feistel_rounds=int(getattr(cfg, "feistel_rounds", 4)),
     )
     if p.n % p.nb != 0:
         raise ValueError(f"nb={p.nb} must divide n={p.n}")
+    if p.shuffle_variant not in ("device", "external", "recompute"):
+        raise ValueError(
+            f"shuffle_variant must be 'device', 'external' or 'recompute', "
+            f"got {p.shuffle_variant!r}")
+    if p.perm_family not in ("shuffle", "feistel"):
+        raise ValueError(
+            f"perm_family must be 'shuffle' or 'feistel', got "
+            f"{p.perm_family!r}")
+    if p.perm_family == "feistel":
+        if p.shuffle_variant == "device":
+            raise ValueError(
+                "perm_family='feistel' is the disk tier's recomputable "
+                "family; use shuffle_variant 'recompute' or 'external' "
+                "(the device twin is shuffle.shuffle_recompute)")
+        if p.scale > 31:
+            raise ValueError(
+                f"perm_family='feistel' needs scale <= 31 (ids in the "
+                f"uint32 container; (src, dst) sort keys in int64), got "
+                f"scale={p.scale}")
+        if p.feistel_rounds < 2 or p.feistel_rounds % 2:
+            raise ValueError(
+                f"feistel_rounds must be even and >= 2, got "
+                f"{p.feistel_rounds}")
     if p.merge_fanin == 1 or p.merge_fanin < 0:
         raise ValueError(
             f"merge_fanin must be 0 (flat) or >= 2, got {p.merge_fanin}")
@@ -194,8 +241,10 @@ def validate_external_shape(p: PlainCfg) -> PlainCfg:
     """Shape requirements specific to the nb-way external shuffle/exchange
     (the device-spill path only needs nb | n).  Same constraints the device
     shuffle asserts inside jit; here they must fail before any store is
-    written."""
-    if p.bucket_size % p.nb != 0:
+    written.  The feistel family never runs the positional slice exchange
+    (its pv is computed, not shuffled), so it is exempt from the nb**2 <= n
+    slice constraint."""
+    if p.perm_family != "feistel" and p.bucket_size % p.nb != 0:
         raise ValueError(
             f"bucket size B={p.bucket_size} must split into nb={p.nb} "
             f"exchange slices (need nb**2 <= n)")
@@ -286,6 +335,40 @@ def attach_pv_buckets(pcfg: PlainCfg, workdir: str, ledger: IOLedger,
                           columns=("v",), gauge=gauge)
         for i in range(pcfg.nb)
     ]
+
+
+class _SrcDstKey:
+    """Composite (src, dst) merge key src * n + dst — picklable (module-level
+    class, not a closure) so pool workers can receive it inside a KeySpec.
+    Fits int64 because perm_family='feistel' enforces scale <= 31."""
+
+    def __init__(self, n: int):
+        self.n = n
+
+    def __call__(self, s: np.ndarray, d: np.ndarray) -> np.ndarray:
+        return s * np.int64(self.n) + d
+
+
+def csr_merge_key(pcfg: PlainCfg):
+    """Sort/merge KeySpec of the CSR build.  The shuffle family sorts by src
+    only (column 0): redistribute arrival order is deterministic and the
+    stable sort makes within-row adjacency encounter order — the historical
+    contract.  The feistel family sorts by (src, dst): recompute and
+    external deliver the same owned-edge MULTISET in different arrival
+    orders, so only a total key makes their CSR files bit-identical."""
+    if pcfg.perm_family == "feistel":
+        return _SrcDstKey(pcfg.n)
+    return 0
+
+
+def resolve_merge_key(pcfg: PlainCfg, key):
+    """Decode a wire-safe cascade key spec: an int column index, or the
+    string "csr" for csr_merge_key (cluster task args travel as JSON, so a
+    callable KeySpec cannot ride in them — the sentinel is resolved
+    in-kernel from the config instead)."""
+    if key == "csr":
+        return csr_merge_key(pcfg)
+    return int(key)
 
 
 # ---------------------------------------------------------------------------
@@ -390,6 +473,51 @@ def generate_bucket_edges(pcfg: PlainCfg, workdir: str, i: int, *,
         store.append_run(s, d)
 
 
+def materialize_pv_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
+                          ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                          transport: Optional[Transport] = None):
+    """perm_family='feistel' under shuffle_variant='external': write bucket
+    i's pv chunk pv[i*B:(i+1)*B] = graph_perm(ids) directly — ONE local phase
+    replaces init + log_nb(n) shuffle-exchange rounds, because a recomputable
+    permutation needs no shuffling to exist.  (Under 'recompute' even this
+    store is skipped; this kernel serves the parity path that runs the
+    feistel family through the full store machinery.)  Local-only:
+    `transport` is accepted for the uniform kernel signature and unused."""
+    B, chunk = pcfg.bucket_size, pcfg.chunk_edges
+    store = BlockStore(workdir, pv_store_name(pcfg.rounds, i), ledger,
+                       columns=("v",), gauge=gauge, fresh=True)
+    for lo in range(i * B, (i + 1) * B, chunk):
+        ids = np.arange(lo, min(lo + chunk, (i + 1) * B), dtype=np.int64)
+        ledger.hashes(ids.size)
+        store.append_run(graph_perm_np(pcfg.seed, ids, pcfg.n,
+                                       rounds=pcfg.feistel_rounds))
+
+
+def relabel_recompute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
+                             ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                             transport: Optional[Transport] = None):
+    """The communication-free relabel (Funke et al.): ONE streaming scan of
+    bucket i's raw edges applies u -> perm(u) to both endpoints (pure hash
+    evaluations charged to ledger.hash_evals — no pv store, no scatter/join
+    exchange, no external sort) and partitions each run straight to
+    owner(perm(src))'s owned inbox.  The external pipeline's two relabel
+    passes AND the redistribute phase collapse into this kernel: the only
+    bytes on the wire are the one edge exchange every variant must pay to
+    place edges with their owners."""
+    B = pcfg.bucket_size
+
+    def relabel(s, d):
+        ledger.hashes(s.size + d.size)
+        return (graph_perm_np(pcfg.seed, s, pcfg.n, rounds=pcfg.feistel_rounds),
+                graph_perm_np(pcfg.seed, d, pcfg.n, rounds=pcfg.feistel_rounds))
+
+    store = BlockStore.attach(workdir, edges_store_name(i), ledger, gauge=gauge)
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        outs = tr.channels(owned_store_name, pcfg.nb)
+        partition_runs(store, outs, lambda a, b: a // B,
+                       tag_prefix=f"{i:03d}", transform=relabel)
+
+
 def relabel_scatter_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
                            ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
                            transport: Optional[Transport] = None):
@@ -429,6 +557,45 @@ def relabel_apply_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
     inbox.destroy()
 
 
+def relabel_sort_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
+                        ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                        transport: Optional[Transport] = None) -> int:
+    """Pooled-cascade relabel join, phase 1 of 3 (the csr_sort twin): sort
+    pass 1 over the relabel inbox, each run sorted by the key field.
+    Returns the run count for the driver's cascade plan; the inbox is freed
+    by the PHASE's `frees` (after the checkpoint write), never in-kernel."""
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        inbox = tr.drain_inbox(relabel_inbox_name(pass_ix, i))
+    out = BlockStore(workdir, relabel_inbox_name(pass_ix, i) + "_sorted",
+                     ledger, gauge=gauge, fresh=True)
+    sort_runs(inbox, out, key=1)
+    return out.num_runs
+
+
+def relabel_join_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int,
+                        src_name: str, presorted: bool, *,
+                        ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                        transport: Optional[Transport] = None):
+    """Pooled-cascade relabel join, final phase: the sort-merge-join of
+    relabel_apply_bucket, fed from `src_name` (the cascade's last level when
+    `presorted`, else a flat bounded merge of the sorted runs)."""
+    B, chunk = pcfg.bucket_size, pcfg.chunk_edges
+    src = BlockStore.attach(workdir, src_name, ledger, gauge=gauge)
+    if presorted:
+        stream = merge_segments([(src, list(range(src.num_runs)))], key=1,
+                                block_rows=pcfg.merge_block_rows)
+    else:
+        stream = merge_runs(src, key=1, block_rows=pcfg.merge_block_rows,
+                            max_fanin=pcfg.merge_fanin)
+    pv = BlockStore.attach(workdir, pv_store_name(pcfg.rounds, i), ledger,
+                           columns=("v",), gauge=gauge)
+    lookup = MonotoneLookup([pv], block_rows=chunk, base=i * B, gauge=gauge)
+    out = BlockStore(workdir, edges_store_name(i, pass_ix), ledger, gauge=gauge,
+                     fresh=True)
+    for a, b in stream:
+        out.append_run(lookup.lookup(b), a)
+
+
 def redistribute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
                         transport: Optional[Transport] = None):
@@ -452,10 +619,11 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     B, base = pcfg.bucket_size, i * pcfg.bucket_size
     if in_name is None:
         in_name = owned_store_name(i)
+    key = csr_merge_key(pcfg)
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         owned = tr.drain_inbox(in_name)   # redistribute's multi-writer inbox
     tmp = BlockStore(workdir, in_name + "_sorted", ledger, gauge=gauge, fresh=True)
-    sort_runs(owned, tmp, key=0)
+    sort_runs(owned, tmp, key=key)
     degv = np.zeros(B, np.int64)
     if gauge is not None:
         gauge.track(B)
@@ -463,7 +631,7 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     total = tmp.total_rows()
     adjv = np.lib.format.open_memmap(adjv_path, mode="w+", dtype=np.int64, shape=(total,))
     pos = 0
-    for s, d in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
+    for s, d in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
                            max_fanin=pcfg.merge_fanin):
         np.add.at(degv, s - base, 1)
         adjv[pos : pos + d.size] = d
@@ -516,13 +684,12 @@ def csr_sort_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
         owned = tr.drain_inbox(owned_store_name(i))
     out = BlockStore(workdir, sorted_owned_store_name(i), ledger, gauge=gauge,
                      fresh=True)
-    sort_runs(owned, out, key=0)
+    sort_runs(owned, out, key=csr_merge_key(pcfg))
     return out.num_runs
 
 
 def cascade_merge_bucket(pcfg: PlainCfg, workdir: str, i: int, base: str,
-                         level: int, g: int, lo: int, hi: int, *,
-                         key_col: int = 0,
+                         level: int, g: int, lo: int, hi: int, key=0, *,
                          ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
                          transport: Optional[Transport] = None):
     """One GROUP of one cascade level, as a pool task (PR 3's "intermediate
@@ -531,7 +698,10 @@ def cascade_merge_bucket(pcfg: PlainCfg, workdir: str, i: int, base: str,
     At level 0 a segment is one run of the `base` store; above that it is a
     whole previous-level group store (its runs back to back).  Stability +
     consecutive grouping keep the result bit-identical to merge_runs' inline
-    cascade — and to the flat merge."""
+    cascade — and to the flat merge.  `key` is a wire-safe spec (an int
+    column, or "csr" for the config-dependent CSR key) so the same task
+    tuple serializes to JSON for cluster dispatch."""
+    key = resolve_merge_key(pcfg, key)
     if level == 0:
         src = BlockStore.attach(workdir, base, ledger, gauge=gauge)
         segments = [(src, [k]) for k in range(lo, hi)]
@@ -544,7 +714,7 @@ def cascade_merge_bucket(pcfg: PlainCfg, workdir: str, i: int, base: str,
             segments.append((s, list(range(s.num_runs))))
     out = BlockStore(workdir, pooled_cascade_store_name(base, level, g),
                      ledger, gauge=gauge, fresh=True)
-    for cols in merge_segments(segments, key=key_col,
+    for cols in merge_segments(segments, key=key,
                                block_rows=pcfg.merge_block_rows):
         out.append_run(*cols)
 
@@ -556,12 +726,13 @@ def csr_emit_bucket(pcfg: PlainCfg, workdir: str, i: int, src_name: str,
     """Pooled-cascade CSR, final phase: emit offv/adjv from `src_name`.
     `presorted` means the store is one globally sorted segment (the cascade's
     last level) and is streamed; otherwise its runs are merged flat."""
+    key = csr_merge_key(pcfg)
     src = BlockStore.attach(workdir, src_name, ledger, gauge=gauge)
     if presorted:
-        stream = merge_segments([(src, list(range(src.num_runs)))], key=0,
+        stream = merge_segments([(src, list(range(src.num_runs)))], key=key,
                                 block_rows=pcfg.merge_block_rows)
     else:
-        stream = merge_runs(src, key=0, block_rows=pcfg.merge_block_rows,
+        stream = merge_runs(src, key=key, block_rows=pcfg.merge_block_rows,
                             max_fanin=pcfg.merge_fanin)
     return _emit_csr(pcfg, workdir, i, stream, src.total_rows(),
                      ledger=ledger, gauge=gauge)
@@ -578,6 +749,14 @@ def csr_bucket_scatter(pcfg: PlainCfg, workdir: str, i: int, *,
     variant; within-row adjacency is encounter order, which equals the
     sorted variant's stable order, so the FILES are bit-identical — only the
     I/O ledger (random vs sequential writes) differs."""
+    if pcfg.perm_family == "feistel":
+        # Under the feistel family the sorted variant orders adjacency by
+        # (src, dst) — encounter order no longer matches it, so the
+        # files-bit-identical contract between the CSR variants would break.
+        raise ValueError(
+            "csr 'scatter' emits adjacency in encounter order, which "
+            "perm_family='feistel' does not preserve; use csr_variant="
+            "'sorted'")
     B, base = pcfg.bucket_size, i * pcfg.bucket_size
     if in_name is None:
         in_name = owned_store_name(i)
@@ -649,6 +828,15 @@ def drive_shuffle(pcfg: PlainCfg, workdir: str, map_kernel,
             return fn()
         return orchestrator.run_phase(name, fn, save=_MARK, load=_SKIP)
 
+    if pcfg.perm_family == "feistel":
+        # A recomputable permutation needs no shuffling to exist: one local
+        # phase writes every pv bucket directly (zero exchange rounds, zero
+        # wire bytes).  Kept under the "shuffle_init" phase name so ledger
+        # reports line up across families.
+        step("shuffle_init",
+             lambda: map_kernel("pv_feistel", [(i,) for i in range(pcfg.nb)]))
+        return
+
     with _exchange(pcfg, workdir, IOLedger(), None, transport) as tr:
         step("shuffle_init",
              lambda: map_kernel("init_pv", [(i,) for i in range(pcfg.nb)]))
@@ -659,6 +847,62 @@ def drive_shuffle(pcfg: PlainCfg, workdir: str, map_kernel,
             step(f"shuffle_round_r{r}",
                  lambda r=r: map_kernel("shuffle_round",
                                         [(i, r) for i in range(pcfg.nb)]))
+
+
+def pooled_cascade_levels(pcfg: PlainCfg, orch: "PhaseOrchestrator",
+                          map_kernel, counts: Dict[int, int], base_of,
+                          phase_prefix: str, key=0) -> Dict[int, Tuple[str, bool]]:
+    """Dispatch a bounded-fan-in merge cascade's LEVELS through the worker
+    pool / cluster — the shared core of the pooled CSR sort, the pooled
+    relabel join, and the pooled walk hops (PR 3's "intermediate levels are
+    embarrassingly parallel" upside, generalized).  `counts[i]` is the
+    sorted-run count of `base_of(i)`; each level is one checkpointed barrier
+    (`{phase_prefix}_cascade_l{level}`) whose tasks are that level's
+    (bucket, group) merges, keyed by the wire-safe `key` spec.  Returns
+    {i: (src_name, presorted)} for the consumer phase: the final cascade
+    store (presorted) or the untouched base when it never cascaded.
+    Stability + consecutive grouping keep the result bit-identical to the
+    inline cascade and to the flat merge."""
+    fanin = pcfg.merge_fanin
+    seg = dict(counts)
+    last_level: Dict[int, Optional[int]] = {i: None for i in seg}
+    level = 0
+    while fanin >= 2 and any(c > 1 for c in seg.values()):
+        tasks, frees, plan = [], [], {}
+        for i in sorted(seg):
+            c = seg[i]
+            if c <= 1:
+                continue
+            base = base_of(i)
+            ng = -(-c // fanin)
+            for g in range(ng):
+                tasks.append((i, base, level, g, g * fanin,
+                              min((g + 1) * fanin, c), key))
+            plan[i] = ng
+            # This level is the last consumer of its input segments.
+            if level == 0:
+                frees.append(base)
+            else:
+                frees += [pooled_cascade_store_name(base, level - 1, k)
+                          for k in range(c)]
+        orch.run_phase(
+            f"{phase_prefix}_cascade_l{level}",
+            lambda tasks=tasks: map_kernel("cascade_merge", tasks),
+            save=_MARK, load=_SKIP, frees=frees)
+        for i, ng in plan.items():
+            seg[i] = ng
+            last_level[i] = level
+        level += 1
+    out: Dict[int, Tuple[str, bool]] = {}
+    for i in sorted(seg):
+        if last_level[i] is None:
+            # Never cascaded: <= 1 sorted run (stream) — or fanin == 0
+            # (flat), where the consumer merges the runs inline.
+            out[i] = (base_of(i), seg[i] <= 1)
+        else:
+            out[i] = (pooled_cascade_store_name(base_of(i), last_level[i], 0),
+                      True)
+    return out
 
 
 # ---------------------------------------------------------------------------
@@ -752,51 +996,100 @@ def walk_hop_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg,
     no random CSR I/O.
     """
     gauge = gauge if gauge is not None else MemoryGauge()
-    B, chunk, n = pcfg.bucket_size, pcfg.chunk_edges, pcfg.n
-    base = j * B
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         front = tr.drain_inbox(wfront_store_name(t, j), columns=("pos", "wid"))
         tmp = BlockStore(workdir, wfront_store_name(t, j) + "_sorted", ledger,
                          columns=("pos", "wid"), gauge=gauge, fresh=True)
         sort_runs(front, tmp, key=0)
-        offv_file = csr_offv_path(workdir, j)
-        # Two independent offv cursors, one per row end: a single interleaved
-        # probe stream (row, row+1, row', row'+1, ...) is NOT monotone when
-        # consecutive walkers share a vertex (5,6,5,6), so the 2x offv scan is
-        # the price of keeping each stream strictly nondecreasing.
-        lk_lo = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
-                               block_rows=chunk, gauge=gauge)
-        lk_hi = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
-                               block_rows=chunk, gauge=gauge)
-        adjv_mm = np.load(csr_adjv_path(workdir, j), mmap_mode="r")
-        hist = BlockStore(workdir, whist_store_name(t + 1, j), ledger,
-                          columns=("wid", "step", "v"), gauge=gauge, fresh=True)
-        adv = None
-        if t + 1 < wcfg.length:
-            adv = BlockStore(workdir, f"wadv_s{t:04d}_b{j:03d}", ledger,
-                             columns=("pos", "wid"), gauge=gauge, fresh=True)
-        for pos, wid in merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
-                                   max_fanin=pcfg.merge_fanin):
-            row = pos - base
-            start = lk_lo.lookup(row)
-            end = lk_hi.lookup(row + 1)
-            deg = end - start
-            r = walk_rand_np(wcfg.seed, wid.astype(np.uint32), t + 1).astype(np.int64)
-            sink = deg == 0
-            idx = start + np.where(sink, 0, r % np.maximum(deg, 1))
-            nxt = np.where(sink, r % n, 0).astype(np.int64)
-            live = ~sink
-            if live.any():
-                nxt[live] = _gather_adjv(adjv_mm, idx[live], chunk, ledger, gauge)
-            hist.append_run(wid, np.full(wid.size, t + 1, np.int64), nxt)
-            if adv is not None:
-                adv.append_run(nxt, wid)
-        if adv is not None:
-            outs = tr.channels(lambda d: wfront_store_name(t + 1, d), pcfg.nb,
-                               columns=("pos", "wid"))
-            partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
-            adv.destroy()
+        stream = merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
+                            max_fanin=pcfg.merge_fanin)
+        _walk_advance(pcfg, workdir, j, t, wcfg, stream, tr,
+                      ledger=ledger, gauge=gauge)
         tmp.destroy()
+
+
+def _walk_advance(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg,
+                  stream, tr: Transport, *,
+                  ledger: IOLedger, gauge: MemoryGauge):
+    """The hop's join+advance tail, shared by walk_hop_bucket (inline sort)
+    and walk_hop_join_bucket (pooled cascade): sort-merge-join the
+    vertex-sorted frontier `stream` against bucket j's CSR, emit step-t+1
+    history rows, and partition the advanced walkers to their new owners."""
+    B, chunk, n = pcfg.bucket_size, pcfg.chunk_edges, pcfg.n
+    base = j * B
+    offv_file = csr_offv_path(workdir, j)
+    # Two independent offv cursors, one per row end: a single interleaved
+    # probe stream (row, row+1, row', row'+1, ...) is NOT monotone when
+    # consecutive walkers share a vertex (5,6,5,6), so the 2x offv scan is
+    # the price of keeping each stream strictly nondecreasing.
+    lk_lo = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
+                           block_rows=chunk, gauge=gauge)
+    lk_hi = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
+                           block_rows=chunk, gauge=gauge)
+    adjv_mm = np.load(csr_adjv_path(workdir, j), mmap_mode="r")
+    hist = BlockStore(workdir, whist_store_name(t + 1, j), ledger,
+                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
+    adv = None
+    if t + 1 < wcfg.length:
+        adv = BlockStore(workdir, f"wadv_s{t:04d}_b{j:03d}", ledger,
+                         columns=("pos", "wid"), gauge=gauge, fresh=True)
+    for pos, wid in stream:
+        row = pos - base
+        start = lk_lo.lookup(row)
+        end = lk_hi.lookup(row + 1)
+        deg = end - start
+        r = walk_rand_np(wcfg.seed, wid.astype(np.uint32), t + 1).astype(np.int64)
+        sink = deg == 0
+        idx = start + np.where(sink, 0, r % np.maximum(deg, 1))
+        nxt = np.where(sink, r % n, 0).astype(np.int64)
+        live = ~sink
+        if live.any():
+            nxt[live] = _gather_adjv(adjv_mm, idx[live], chunk, ledger, gauge)
+        hist.append_run(wid, np.full(wid.size, t + 1, np.int64), nxt)
+        if adv is not None:
+            adv.append_run(nxt, wid)
+    if adv is not None:
+        outs = tr.channels(lambda d: wfront_store_name(t + 1, d), pcfg.nb,
+                           columns=("pos", "wid"))
+        partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
+        adv.destroy()
+
+
+def walk_hop_sort_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int,
+                         wcfg: WalkCfg, *,
+                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                         transport: Optional[Transport] = None) -> int:
+    """Pooled-cascade walk hop, phase 1 of 3: sort pass over bucket j's
+    step-t frontier inbox.  Returns the run count for the cascade plan."""
+    gauge = gauge if gauge is not None else MemoryGauge()
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        front = tr.drain_inbox(wfront_store_name(t, j), columns=("pos", "wid"))
+    out = BlockStore(workdir, wfront_store_name(t, j) + "_sorted", ledger,
+                     columns=("pos", "wid"), gauge=gauge, fresh=True)
+    sort_runs(front, out, key=0)
+    return out.num_runs
+
+
+def walk_hop_join_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int,
+                         src_name: str, presorted: bool, wcfg: WalkCfg, *,
+                         ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                         transport: Optional[Transport] = None):
+    """Pooled-cascade walk hop, final phase: advance from `src_name` (the
+    cascade's last level when `presorted`, else a flat bounded merge).
+    `wcfg` stays the LAST positional arg — the cluster wire protocol
+    extracts and re-appends WalkCfg there."""
+    gauge = gauge if gauge is not None else MemoryGauge()
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        src = BlockStore.attach(workdir, src_name, ledger,
+                                columns=("pos", "wid"), gauge=gauge)
+        if presorted:
+            stream = merge_segments([(src, list(range(src.num_runs)))], key=0,
+                                    block_rows=pcfg.merge_block_rows)
+        else:
+            stream = merge_runs(src, key=0, block_rows=pcfg.merge_block_rows,
+                                max_fanin=pcfg.merge_fanin)
+        _walk_advance(pcfg, workdir, j, t, wcfg, stream, tr,
+                      ledger=ledger, gauge=gauge)
 
 
 def walk_hist_scatter_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
@@ -916,9 +1209,35 @@ def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
                 tr.clean_inboxes(
                     [wfront_store_name(t + 1, d) for d in range(nb)])
 
-            phase(f"walk_hop_{t:04d}", _clean,
-                  lambda t=t: map_kernel("walk_hop",
-                                         [(j, t, wcfg) for j in range(nb)]))
+            if not pcfg.pooled_cascade:
+                phase(f"walk_hop_{t:04d}", _clean,
+                      lambda t=t: map_kernel("walk_hop",
+                                             [(j, t, wcfg) for j in range(nb)]))
+                continue
+            # Pooled-cascade hop: sort barrier, cascade levels as (bucket,
+            # group) pool tasks, then the join+advance barrier — the walk
+            # twin of the pooled CSR sort.  Every step is its own
+            # checkpointed phase (the clean separately, for the per-host
+            # resume reason drive_shuffle documents).
+            orch.run_phase(f"walk_hop_{t:04d}_clean", _clean,
+                           save=mark, load=skip)
+            counts = orch.run_phase(
+                f"walk_sort_{t:04d}",
+                lambda t=t: [int(c) for c in map_kernel(
+                    "walk_hop_sort", [(j, t, wcfg) for j in range(nb)])],
+                save=lambda r: {"counts": list(r)},
+                load=lambda m: [int(c) for c in m["counts"]])
+            srcs = pooled_cascade_levels(
+                pcfg, orch, map_kernel, {j: counts[j] for j in range(nb)},
+                lambda j, t=t: wfront_store_name(t, j) + "_sorted",
+                f"walk_{t:04d}", key=0)
+            orch.run_phase(
+                f"walk_hop_{t:04d}",
+                lambda t=t, srcs=srcs: map_kernel(
+                    "walk_hop_join",
+                    [(j, t, srcs[j][0], srcs[j][1], wcfg) for j in range(nb)]),
+                save=mark, load=skip,
+                frees=[srcs[j][0] for j in range(nb)])
 
         def _collect():
             map_kernel("walk_hist_scatter", [(j, wcfg) for j in range(nb)])
@@ -990,7 +1309,8 @@ class PhaseOrchestrator:
     def __init__(self, workdir: str, ledger: IOLedger, checkpoint: bool = False,
                  config_key: Optional[str] = None, state_name: str = "phases.json",
                  keep_all: bool = False, sweep: bool = True,
-                 cleaner: Optional[Callable[[Sequence[str]], None]] = None):
+                 cleaner: Optional[Callable[[Sequence[str]], None]] = None,
+                 stats: Optional[TransportStats] = None):
         # `state_name` separates checkpoint namespaces sharing one workdir
         # (the walk pipeline resumes independently of the generation pipeline
         # whose CSR it reads — see drive_walks).
@@ -1003,10 +1323,17 @@ class PhaseOrchestrator:
         # transport-backed cleaner (the cluster controller routing frees to
         # whichever host owns each store) can batch names per CLEAN frame
         # instead of paying one RPC round per store.
+        # `stats` (optional) is a live TransportStats the driver keeps
+        # aggregated across its barriers (e.g. PartitionedGenerator's
+        # exchange_stats); when provided, every phase record also carries a
+        # `wire_`-prefixed delta of it — per-phase WIRE bytes next to the
+        # per-phase disk bytes, which is what lets benchmarks and tests
+        # assert "the recompute shuffle moved zero exchange bytes" per phase.
         self.workdir = workdir
         self.ledger = ledger
         self.checkpoint = checkpoint
         self._cleaner = cleaner
+        self._stats = stats
         # Checkpoint GC: run_phase(frees=[...]) names stores whose LAST
         # consumer is that phase; once the phase is done (and, when
         # checkpointing, its manifest is durably on disk) they are dropped,
@@ -1060,14 +1387,19 @@ class PhaseOrchestrator:
         if self.checkpoint and load is not None and name in self._completed:
             result = load(self._completed[name])
             self.records.append(PhaseRecord(name, "resumed", 0.0,
-                                            {k: 0 for k in self.ledger.as_dict()}))
+                                            {k: 0 for k in self.ledger.as_dict()
+                                             } | {k: 0 for k in self._wire_dict()}))
             self._apply_frees(frees)
             return result
         snap = self.ledger.snapshot()
+        wire_snap = self._wire_dict()
         t0 = time.perf_counter()
         result = fn()
+        delta = self.ledger.delta_since(snap)
+        delta.update({k: v - wire_snap[k]
+                      for k, v in self._wire_dict().items()})
         self.records.append(PhaseRecord(
-            name, "done", time.perf_counter() - t0, self.ledger.delta_since(snap)))
+            name, "done", time.perf_counter() - t0, delta))
         if self.checkpoint and save is not None:
             self._completed[name] = save(result)
             state = dict(self._completed)
@@ -1079,6 +1411,12 @@ class PhaseOrchestrator:
             os.replace(tmp, self._state_path)  # atomic: never a torn state file
         self._apply_frees(frees)
         return result
+
+    def _wire_dict(self) -> Dict[str, int]:
+        if self._stats is None:
+            return {}
+        return {f"wire_{k}": v
+                for k, v in dataclasses.asdict(self._stats).items()}
 
     def completed(self, name: str) -> bool:
         """Whether a checkpointed run of phase `name` exists (the cluster
@@ -1116,9 +1454,13 @@ class PhaseOrchestrator:
 _KERNELS = {
     "init_pv": init_pv_bucket,
     "shuffle_round": shuffle_bucket_round,
+    "pv_feistel": materialize_pv_bucket,
     "generate": generate_bucket_edges,
     "relabel_scatter": relabel_scatter_bucket,
     "relabel_apply": relabel_apply_bucket,
+    "relabel_sort": relabel_sort_bucket,
+    "relabel_join": relabel_join_bucket,
+    "relabel_recompute": relabel_recompute_bucket,
     "redistribute": redistribute_bucket,
     "csr_sorted": csr_bucket_sorted,
     "csr_sort": csr_sort_bucket,
@@ -1127,6 +1469,8 @@ _KERNELS = {
     "csr_scatter": csr_bucket_scatter,
     "walk_init": walk_init_bucket,
     "walk_hop": walk_hop_bucket,
+    "walk_hop_sort": walk_hop_sort_bucket,
+    "walk_hop_join": walk_hop_join_bucket,
     "walk_hist_scatter": walk_hist_scatter_bucket,
     "walk_hist_gather": walk_hist_gather_bucket,
 }
@@ -1223,7 +1567,7 @@ class PartitionedGenerator:
         self.orchestrator = PhaseOrchestrator(
             workdir, self.ledger, checkpoint=checkpoint,
             config_key=repr(("partitioned", result_config_key(self.pcfg))),
-            keep_all=keep_all)
+            keep_all=keep_all, stats=self.exchange_stats)
 
     def _shutdown_pool(self):
         if self._pool is not None:
@@ -1336,6 +1680,61 @@ class PartitionedGenerator:
                        lambda p=p: self._map("relabel_apply",
                                              [(i, p) for i in range(nb)]))
 
+    def _relabel_pooled(self):
+        """The relabel join with its external sort's cascade merge LEVELS
+        dispatched through the worker pool / cluster (the csr pooled-cascade
+        treatment applied to relabel, per pass): scatter, then a counts-
+        returning sort barrier, then one barrier per cascade level, then the
+        sort-merge-join against pv.  Bit-identical to _relabel."""
+        nb = self.pcfg.nb
+        orch = self.orchestrator
+        for p in (0, 1):
+            orch.run_phase(
+                f"relabel_clean_p{p}",
+                lambda p=p: self.transport.clean_inboxes(
+                    [relabel_inbox_name(p, j) for j in range(nb)]),
+                save=_MARK, load=_SKIP)
+            # Scatter is the last consumer of its input edge stores.
+            orch.run_phase(
+                f"relabel_scatter_p{p}",
+                lambda p=p: self._map("relabel_scatter",
+                                      [(i, p) for i in range(nb)]),
+                save=_MARK, load=_SKIP,
+                frees=[edges_store_name(i) if p == 0 else edges_store_name(i, 0)
+                       for i in range(nb)])
+            counts = orch.run_phase(
+                f"relabel_sort_p{p}",
+                lambda p=p: [int(c) for c in
+                             self._map("relabel_sort",
+                                       [(i, p) for i in range(nb)])],
+                save=lambda r: {"counts": list(r)},
+                load=lambda m: [int(c) for c in m["counts"]],
+                frees=[relabel_inbox_name(p, j) for j in range(nb)])
+            srcs = pooled_cascade_levels(
+                self.pcfg, orch, self._map, {i: counts[i] for i in range(nb)},
+                lambda i, p=p: relabel_inbox_name(p, i) + "_sorted",
+                f"relabel_p{p}", key=1)
+            orch.run_phase(
+                f"relabel_join_p{p}",
+                lambda p=p, srcs=srcs: self._map(
+                    "relabel_join",
+                    [(i, p, srcs[i][0], srcs[i][1]) for i in range(nb)]),
+                save=_MARK, load=_SKIP,
+                frees=[srcs[i][0] for i in range(nb)])
+
+    def _relabel_recompute(self):
+        """shuffle_variant='recompute': the single scan+exchange that
+        replaces relabel (both passes) AND redistribute — endpoints are
+        relabeled by hash evaluation in-stream (see
+        relabel_recompute_bucket)."""
+        nb = self.pcfg.nb
+        self._step("relabel_recompute_clean",
+                   lambda: self.transport.clean_inboxes(
+                       [owned_store_name(j) for j in range(nb)]))
+        return self._step("relabel_recompute_map",
+                          lambda: self._map("relabel_recompute",
+                                            [(i,) for i in range(nb)]))
+
     def _redistribute(self):
         nb = self.pcfg.nb
         self._step("redistribute_clean",
@@ -1374,48 +1773,11 @@ class PartitionedGenerator:
             save=lambda r: {"counts": list(r)},
             load=lambda m: [int(c) for c in m["counts"]],
             frees=[owned_store_name(j) for j in range(nb)])
-        fanin = self.pcfg.merge_fanin
-        seg = {i: counts[i] for i in range(nb)}
-        last_level: Dict[int, Optional[int]] = {i: None for i in range(nb)}
-        level = 0
-        while fanin >= 2 and any(c > 1 for c in seg.values()):
-            tasks, frees, plan = [], [], {}
-            for i in range(nb):
-                c = seg[i]
-                if c <= 1:
-                    continue
-                base = sorted_owned_store_name(i)
-                ng = -(-c // fanin)
-                for g in range(ng):
-                    tasks.append((i, base, level, g, g * fanin,
-                                  min((g + 1) * fanin, c)))
-                plan[i] = ng
-                # This level is the last consumer of its input segments.
-                if level == 0:
-                    frees.append(base)
-                else:
-                    frees += [pooled_cascade_store_name(base, level - 1, k)
-                              for k in range(c)]
-            orch.run_phase(
-                f"csr_cascade_l{level}",
-                lambda tasks=tasks: self._map("cascade_merge", tasks),
-                save=_MARK, load=_SKIP, frees=frees)
-            for i, ng in plan.items():
-                seg[i] = ng
-                last_level[i] = level
-            level += 1
-        emit_tasks, emit_frees = [], []
-        for i in range(nb):
-            if last_level[i] is None:
-                # Never cascaded: <= 1 sorted run (stream) — or fanin == 0
-                # (flat), where emit merges the runs inline.
-                src, presorted = sorted_owned_store_name(i), seg[i] <= 1
-            else:
-                src = pooled_cascade_store_name(sorted_owned_store_name(i),
-                                                last_level[i], 0)
-                presorted = True
-            emit_tasks.append((i, src, presorted))
-            emit_frees.append(src)
+        srcs = pooled_cascade_levels(
+            self.pcfg, orch, self._map, {i: counts[i] for i in range(nb)},
+            sorted_owned_store_name, "csr", key="csr")
+        emit_tasks = [(i, srcs[i][0], srcs[i][1]) for i in range(nb)]
+        emit_frees = [srcs[i][0] for i in range(nb)]
         return orch.run_phase(
             "csr_emit", lambda: self._map("csr_emit", emit_tasks),
             save=self._save_csr, load=self._load_csr, frees=emit_frees)
@@ -1451,19 +1813,33 @@ class PartitionedGenerator:
                 f"partitioned csr_variant must be 'sorted' or 'scatter', "
                 f"got {csr_variant!r}")
         nb = self.pcfg.nb
-        self._outer("shuffle", self._shuffle)
-        self.orchestrator.run_phase(
-            "generate",
-            lambda: self._map("generate", [(i,) for i in range(nb)]),
-            save=_MARK, load=_SKIP)
-        # GC declarations: each store list's LAST consumer is the naming
-        # phase.  pv buckets are never freed here — they ARE the partitioned
-        # driver's permutation output (pv_buckets()).
-        self._outer("relabel", self._relabel,
-                    frees=[edges_store_name(i) for i in range(nb)]
-                          + [edges_store_name(i, 0) for i in range(nb)])
-        self._outer("redistribute", self._redistribute,
-                    frees=[edges_store_name(i, 1) for i in range(nb)])
+        if self.pcfg.shuffle_variant == "recompute":
+            # Communication-free path: no shuffle (the permutation is a
+            # hash family, not a store), and relabel+redistribute collapse
+            # into one scan+exchange.
+            self.orchestrator.run_phase(
+                "generate",
+                lambda: self._map("generate", [(i,) for i in range(nb)]),
+                save=_MARK, load=_SKIP)
+            self._outer("relabel_recompute", self._relabel_recompute,
+                        frees=[edges_store_name(i) for i in range(nb)])
+        else:
+            self._outer("shuffle", self._shuffle)
+            self.orchestrator.run_phase(
+                "generate",
+                lambda: self._map("generate", [(i,) for i in range(nb)]),
+                save=_MARK, load=_SKIP)
+            # GC declarations: each store list's LAST consumer is the naming
+            # phase.  pv buckets are never freed here — they ARE the
+            # partitioned driver's permutation output (pv_buckets()).
+            if self.pcfg.pooled_cascade:
+                self._relabel_pooled()
+            else:
+                self._outer("relabel", self._relabel,
+                            frees=[edges_store_name(i) for i in range(nb)]
+                                  + [edges_store_name(i, 0) for i in range(nb)])
+            self._outer("redistribute", self._redistribute,
+                        frees=[edges_store_name(i, 1) for i in range(nb)])
         if csr_variant == "scatter":
             paths = self._run_csr_scatter(nb)
         elif self.pcfg.pooled_cascade:
@@ -1489,6 +1865,12 @@ class PartitionedGenerator:
         return csr, self.ledger
 
     def pv_buckets(self) -> List[BlockStore]:
+        if self.pcfg.shuffle_variant == "recompute":
+            raise ValueError(
+                "shuffle_variant='recompute' materializes no pv stores — "
+                "the permutation is recomputable: evaluate "
+                "hostgen.graph_perm_np(seed, ids, n) (or its inverse) "
+                "instead of reading bucket files")
         return attach_pv_buckets(self.pcfg, self.workdir, self.ledger, self.gauge)
 
     def walk_corpus(self, num_walkers: int, length: int, seed: int = 0,
@@ -1508,7 +1890,8 @@ class PartitionedGenerator:
         orch = PhaseOrchestrator(self.workdir, self.ledger, checkpoint=checkpoint,
                                  state_name="walk_phases.json",
                                  config_key=repr((result_config_key(self.pcfg), wcfg)),
-                                 keep_all=self.keep_all)
+                                 keep_all=self.keep_all,
+                                 stats=self.exchange_stats)
         path = drive_walks(self.pcfg, self.workdir, wcfg, self._map, orch,
                            transport=self.transport,
                            shard_dir_of=self._shard_dir_of,

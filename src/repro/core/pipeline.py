@@ -24,9 +24,9 @@ from jax.sharding import Mesh, PartitionSpec as P
 from ..distributed.collectives import flat_mesh, shard_map
 from .csr import CSRShards, build_csr_scatter, build_csr_sorted
 from .redistribute import OwnedEdges, redistribute, redistribute_sorted
-from .relabel import relabel_alltoall, relabel_ring
+from .relabel import relabel_alltoall, relabel_recompute, relabel_ring
 from .rmat import rmat_edge_block
-from .shuffle import distributed_shuffle, shuffle_argsort
+from .shuffle import distributed_shuffle, shuffle_argsort, shuffle_recompute
 from .types import GraphConfig
 
 
@@ -63,7 +63,7 @@ def generate(
     cfg: GraphConfig,
     mesh: Optional[Mesh] = None,
     axis: str = "shards",
-    shuffle_variant: str = "paper",        # "paper" | "argsort"
+    shuffle_variant: str = "paper",        # "paper" | "argsort" | "recompute"
 ) -> GraphResult:
     """Run the full pipeline.  Returns device arrays (sharded over `axis`)."""
     mesh = mesh if mesh is not None else flat_mesh(cfg.nb, axis)
@@ -74,6 +74,11 @@ def generate(
         pv = distributed_shuffle(cfg, mesh, axis)
     elif shuffle_variant == "argsort":
         pv = shuffle_argsort(cfg, mesh, axis)
+    elif shuffle_variant == "recompute":
+        # Communication-free: the permutation is the keyed Feistel family.
+        # pv is materialized only because GraphResult exposes it — the
+        # relabel below recomputes labels directly and never reads it.
+        pv = shuffle_recompute(cfg, mesh, axis)
     else:
         raise ValueError(shuffle_variant)
 
@@ -82,7 +87,10 @@ def generate(
 
     # 3. relabeling phase
     dropped_rel = jnp.zeros((), jnp.int32)
-    if cfg.relabel_variant == "ring":
+    if shuffle_variant == "recompute":
+        # Zero collectives: both endpoints relabel as hash evaluations.
+        new_src, new_dst = relabel_recompute(cfg, mesh, src, dst, axis)
+    elif cfg.relabel_variant == "ring":
         new_src, new_dst = relabel_ring(cfg, mesh, src, dst, pv, axis)
     elif cfg.relabel_variant == "alltoall":
         new_src, new_dst, dropped_rel = relabel_alltoall(cfg, mesh, src, dst, pv, axis)

@@ -17,6 +17,14 @@ TPU adaptation (ring variant, paper-faithful):
     sorted, the pv chunk is contiguous, so `pv_chunk[field - base]` is a
     sequential-access gather (kernels/relabel.py tiles it through VMEM).
 
+Communication-free variant (`relabel_recompute`, Funke et al.): when the
+permutation is the keyed Feistel family (cfg.perm_family="feistel"), pv[u]
+is a pure hash of u — so the relabel is an ELEMENTWISE map u -> perm(u)
+with no pv operand, no sorting, and no collectives at all.  The exchange
+bytes of both ring and all_to_all variants become per-element hash
+evaluations; this is the device twin of the disk tier's
+shuffle_variant="recompute" fast path.
+
 Optimized variant (`relabel_alltoall`): ship each endpoint to its owner
 (capacity_all_to_all), gather, ship back.  One round trip instead of nb
 rounds — but the destinations are *raw R-MAT ids*, whose ownership is
@@ -96,6 +104,29 @@ def relabel_ring(
         out_specs=(P(axis), P(axis)),
     )
     return fn(src, dst, pv)
+
+
+@partial(jax.jit, static_argnames=("cfg", "mesh", "axis"))
+def relabel_recompute(
+    cfg: GraphConfig,
+    mesh: Mesh,
+    src: jnp.ndarray,
+    dst: jnp.ndarray,
+    axis: str = "shards",
+) -> Tuple[jnp.ndarray, jnp.ndarray]:
+    """Communication-free relabel: (perm(src), perm(dst)) elementwise.
+
+    Takes NO pv operand — the permutation is recomputed from cfg.seed via
+    the keyed Feistel family (shuffle.graph_perm), so there is nothing to
+    stream, ring-shift, or exchange.  `mesh`/`axis` are accepted for
+    signature symmetry with the other variants and unused: the map is
+    embarrassingly shard-local.  Bit-identical to relabel_ring against
+    pv = shuffle_recompute(cfg, ...) (tested)."""
+    from .shuffle import graph_perm
+
+    del mesh, axis  # no collectives: the whole point
+    return (graph_perm(cfg.seed, src, cfg.n, rounds=cfg.feistel_rounds),
+            graph_perm(cfg.seed, dst, cfg.n, rounds=cfg.feistel_rounds))
 
 
 @partial(jax.jit, static_argnames=("cfg", "mesh", "axis", "capacity"))

@@ -13,13 +13,20 @@ TPU adaptation:
   * the round loop is a `lax.fori_loop`, so the whole shuffle is one compiled
     program regardless of n.
 
-Two variants:
+Three variants:
   distributed_shuffle       paper-faithful multi-round shuffle-exchange
   shuffle_argsort           beyond-paper exact one-shot shuffle (global sort
                             by random keys) — what you'd do when the whole
                             key vector fits aggregate HBM.
+  shuffle_recompute         the communication-free family (Funke et al.):
+                            pv[i] = keyed_perm(i), a Feistel bijection over
+                            mix32 — ZERO collectives, every shard evaluates
+                            its own slice, and any host can recompute any
+                            entry (the disk tier never materializes pv at
+                            all).  jnp twin of hostgen.keyed_perm_np,
+                            bit-exact (tested).
 
-Both return pv as a global array of shape (n,) sharded over the mesh axis.
+All return pv as a global array of shape (n,) sharded over the mesh axis.
 """
 
 from __future__ import annotations
@@ -32,6 +39,12 @@ from jax import lax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..distributed.collectives import shard_map
+from .hostgen import (
+    FEISTEL_ROUNDS,
+    feistel_round_key_np,
+    graph_perm_key,
+    perm_domain_bits,
+)
 from .rmat import mix32
 from .types import GraphConfig
 
@@ -102,6 +115,80 @@ def shuffle_argsort(cfg: GraphConfig, mesh: Mesh, axis: str = "shards") -> jnp.n
     # sort (keys, ids) pairs by key: ids land in uniformly-random order.
     # mix32 is bijective => no duplicate keys => exact uniform permutation.
     _, pv = lax.sort([keys, ids], dimension=0, num_keys=1)
+    return lax.with_sharding_constraint(pv, sharding)
+
+
+# ---------------------------------------------------------------------------
+# Keyed invertible permutation family — jnp twin of hostgen's Feistel.
+# Container is uint32 (jax x64 stays disabled), so nbits <= 32; the numpy
+# source of truth covers nbits <= 62 with its uint64 container.  For the
+# overlap the two agree bit for bit (tested), as does the Pallas kernel
+# (kernels/rmat.feistel_perm_pallas).
+# ---------------------------------------------------------------------------
+
+
+def feistel_perm(x: jnp.ndarray, key: int, nbits: int,
+                 rounds: int = FEISTEL_ROUNDS) -> jnp.ndarray:
+    """Keyed bijection on [0, 2**nbits), nbits <= 32.  Returns uint32.
+
+    Identical round structure to hostgen.feistel_perm_np: F = mix32(R ^
+    rk_i) with rk_i = mix32(key + (i+1)*GOLDEN) folded in Python ints, the
+    halves swap, and the new R is masked to the old L's width.  The round
+    loop is a static unroll (rounds is a compile-time constant)."""
+    if rounds < 2 or rounds % 2:
+        raise ValueError(f"feistel rounds must be even and >= 2, got {rounds}")
+    if not 1 <= nbits <= 32:
+        raise ValueError(
+            f"jnp feistel container is uint32: need 1 <= nbits <= 32, got "
+            f"{nbits} (use hostgen.feistel_perm_np for wider domains)")
+    lo_bits = nbits // 2
+    x = jnp.asarray(x).astype(jnp.uint32)
+    L = x >> lo_bits
+    R = x & jnp.uint32((1 << lo_bits) - 1)
+    wL, wR = nbits - lo_bits, lo_bits
+    for i in range(rounds):
+        rk = jnp.uint32(int(feistel_round_key_np(key, i)))
+        F = mix32(R ^ rk)
+        L, R, wL, wR = R, (L ^ F) & jnp.uint32((1 << wL) - 1), wR, wL
+    return (L << lo_bits) | R
+
+
+def keyed_perm(x: jnp.ndarray, key: int, n: int,
+               rounds: int = FEISTEL_ROUNDS) -> jnp.ndarray:
+    """Keyed bijection on [0, n) via cycle-walking (twin of
+    hostgen.keyed_perm_np).  For power-of-two n the while_loop body never
+    runs; otherwise out-of-range lanes are re-permuted until in range
+    (termination: the Feistel orbit of any x < n returns to x).  Returns
+    the input's dtype."""
+    nbits = perm_domain_bits(n)
+    dtype = jnp.asarray(x).dtype
+    y = feistel_perm(x, key, nbits, rounds)
+    bound = jnp.uint32(n)
+
+    def walk(y):
+        return jnp.where(y >= bound, feistel_perm(y, key, nbits, rounds), y)
+
+    if n != (1 << nbits):  # non-power-of-two domain: cycle-walk
+        y = lax.while_loop(lambda y: jnp.any(y >= bound), walk, y)
+    return y.astype(dtype)
+
+
+def graph_perm(seed: int, x: jnp.ndarray, n: int,
+               rounds: int = FEISTEL_ROUNDS) -> jnp.ndarray:
+    """Device twin of hostgen.graph_perm_np (same key derivation)."""
+    return keyed_perm(x, graph_perm_key(seed), n, rounds)
+
+
+@partial(jax.jit, static_argnames=("cfg", "mesh", "axis"))
+def shuffle_recompute(cfg: GraphConfig, mesh: Mesh, axis: str = "shards") -> jnp.ndarray:
+    """Communication-free pv: every shard evaluates keyed_perm over its own
+    range partition — no shuffle rounds, no all_to_all, no materialized
+    state beyond the output itself.  Requires cfg.scale <= 31 (vertex ids
+    must fit the uint32 Feistel container)."""
+    sharding = NamedSharding(mesh, P(axis))
+    ids = lax.with_sharding_constraint(
+        jnp.arange(cfg.n, dtype=cfg.vertex_dtype), sharding)
+    pv = graph_perm(cfg.seed, ids, cfg.n, rounds=cfg.feistel_rounds)
     return lax.with_sharding_constraint(pv, sharding)
 
 

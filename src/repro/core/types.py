@@ -63,7 +63,22 @@ class GraphConfig:
     # "external": paper Alg. 2-4 on disk — pv built as nb bucket files via
     #           rounds of chunked local shuffle + bucket exchange; peak RSS
     #           stays O(chunk_edges) at any scale.
+    # "recompute": communication-free (Funke et al.): the permutation is the
+    #           keyed Feistel family (hostgen.graph_perm_np), so pv[u] is a
+    #           pure hash of u — no pv store is materialized and relabel is a
+    #           streaming map u -> perm(u) inline in the edge scan.  Zero
+    #           exchange bytes; implies perm_family="feistel".
     shuffle_variant: str = "device"
+    # Which permutation family defines the vertex relabeling:
+    # "shuffle": the materialized shuffle-exchange permutation (paper).
+    # "feistel": the keyed invertible Feistel family — recomputable anywhere,
+    #           required (and auto-selected) by shuffle_variant="recompute",
+    #           also legal with "external" (materializes the same pv through
+    #           the store machinery; used by parity tests).  Needs scale <= 31
+    #           (ids must fit the uint32 Feistel container).
+    perm_family: str = "shuffle"
+    # Feistel depth for perm_family="feistel"; even, >= 2.
+    feistel_rounds: int = 4
     # Rows per cursor block in external merges; 0 = auto (one chunk of
     # memory split evenly across the merge fan-in).
     merge_block_rows: int = 0

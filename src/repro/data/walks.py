@@ -317,9 +317,11 @@ def external_walks(cfg, workdir: str, *, num_walkers: int, length: int,
     with make_transport(pcfg, workdir, ledger, gauge) as tr:
 
         def inline_map(kernel: str, argss):
-            for args in argss:
-                _KERNELS[kernel](pcfg, workdir, *args, ledger=ledger,
-                                 gauge=gauge, transport=tr)
+            # Outputs matter: the pooled-cascade hop plans its merge levels
+            # from the counts the sort kernels return.
+            return [_KERNELS[kernel](pcfg, workdir, *args, ledger=ledger,
+                                     gauge=gauge, transport=tr)
+                    for args in argss]
 
         path = drive_walks(pcfg, workdir, wcfg, inline_map, orch, transport=tr)
     return ExternalWalkResult(ShardedWalks(path), ledger, gauge, orch)

@@ -22,6 +22,7 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from ..core.hostgen import FEISTEL_ROUNDS, feistel_round_key_np
 from ..core.types import GraphConfig, quadrant_thresholds
 
 LANE = 128
@@ -92,3 +93,53 @@ def rmat_edges_pallas(cfg: GraphConfig, start: int, count: int, interpret: bool 
         interpret=interpret,
     )()
     return src.reshape(-1), dst.reshape(-1)
+
+
+def _feistel_kernel(x_ref, o_ref, *, key: int, nbits: int, rounds: int):
+    """Keyed Feistel permutation tile (twin of hostgen.feistel_perm_np).
+
+    Round keys are Python-int constants folded at trace time (the SAME
+    numpy derivation the host family uses, so the three implementations
+    share one key schedule by construction); the round loop is a static
+    unroll like the R-MAT level walk — per element it is `rounds` mix32
+    evaluations plus shifts/xors, pure VPU work."""
+    lo_bits = nbits // 2
+    x = x_ref[...].astype(jnp.uint32)
+    L = x >> lo_bits
+    R = x & jnp.uint32((1 << lo_bits) - 1)
+    wL, wR = nbits - lo_bits, lo_bits
+    for i in range(rounds):  # static unroll
+        rk = jnp.uint32(int(feistel_round_key_np(key, i)))
+        F = _mix32(R ^ rk)
+        L, R, wL, wR = R, (L ^ F) & jnp.uint32((1 << wL) - 1), wR, wL
+    o_ref[...] = ((L << lo_bits) | R).astype(jnp.int32)
+
+
+@functools.partial(jax.jit, static_argnames=("key", "nbits", "rounds", "interpret"))
+def feistel_perm_pallas(x: jnp.ndarray, key: int, nbits: int,
+                        rounds: int = FEISTEL_ROUNDS,
+                        interpret: bool = True) -> jnp.ndarray:
+    """Permute int32 ids through the keyed Feistel bijection on
+    [0, 2**nbits), as (BLOCK_ROWS, 128) VMEM tiles.
+
+    Power-of-two domains only (the pipeline's n = 2**scale case — cycle
+    walking is data-dependent control flow and stays on the host/jnp
+    paths); nbits <= 31 so outputs fit int32.  x.size must be a multiple
+    of TILE (callers pad, as with rmat_edges_pallas).  Bit-exact vs
+    shuffle.feistel_perm and hostgen.feistel_perm_np (tested).
+    """
+    assert x.size % TILE == 0, f"size={x.size} must be a multiple of {TILE}"
+    assert 1 <= nbits <= 31, f"int32 lanes need 1 <= nbits <= 31, got {nbits}"
+    rows = x.size // LANE
+    grid = rows // BLOCK_ROWS
+    kernel = functools.partial(_feistel_kernel, key=key, nbits=nbits,
+                               rounds=rounds)
+    out = pl.pallas_call(
+        kernel,
+        grid=(grid,),
+        in_specs=(pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),),
+        out_specs=pl.BlockSpec((BLOCK_ROWS, LANE), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, LANE), jnp.int32),
+        interpret=interpret,
+    )(x.reshape(rows, LANE))
+    return out.reshape(-1)

@@ -304,3 +304,36 @@ def test_cluster_cli_end_to_end(tmp_path):
     walks = ShardedWalks(os.path.join(root, "ctrl", "walks_manifest.json"))
     assert np.asarray(walks).shape == (12, 5)
     assert os.path.exists(os.path.join(root, "ctrl", "graph_manifest.json"))
+
+
+# ---------------------------------------------------------------------------
+# recompute shuffle on the cluster (communication-free permutation)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_two_host_cluster_recompute_parity(tmp_path):
+    """shuffle_variant='recompute' across two real hosts: bit-identical CSR
+    and walk corpus vs the single-host partitioned driver, with ZERO shuffle
+    phases in the schedule — the permutation is recomputed on whichever host
+    needs a label, never exchanged."""
+    rcfg = CFG.with_(shuffle_variant="recompute")
+    ref_dir = str(tmp_path / "ref")
+    with PartitionedGenerator(rcfg, ref_dir, max_workers=0) as part:
+        csr, _ = part.run()
+        ref_walks = np.asarray(part.walk_corpus(W, L, seed=WSEED)).copy()
+        ref_sha = _csr_sha(csr)
+    spec = ClusterSpec.local(2, str(tmp_path / "cl"), nb=CFG.nb)
+    gen = ClusterGenerator(rcfg.with_(transport="socket"), spec,
+                           str(tmp_path / "cl" / "ctrl"),
+                           backend=LocalExecBackend(env=_ENV), checkpoint=True)
+    try:
+        gen.run()
+        walks = gen.walk_corpus(W, L, seed=WSEED)
+        np.testing.assert_array_equal(np.asarray(walks), ref_walks)
+        assert _csr_sha(gen.load_csr()) == ref_sha
+        phases = [r["phase"] for r in gen.orchestrator.report()]
+        assert not any(p.startswith("shuffle") for p in phases)
+        assert "relabel_recompute_map" in phases
+    finally:
+        gen.close()

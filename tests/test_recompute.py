@@ -1,0 +1,250 @@
+"""The communication-free recompute shuffle (shuffle_variant='recompute').
+
+Acceptance contract: with the keyed Feistel permutation family, a recompute
+run produces BIT-IDENTICAL CSR bucket files to an external run of the same
+seed that materializes the same family through the full store machinery —
+while running zero shuffle phases, exchanging zero shuffle-phase wire bytes,
+and moving strictly fewer ledger bytes.  Plus: the pooled-cascade routing of
+the relabel join and the walk hops (PR 3 residue) stays bit-identical to the
+inline cascade.
+"""
+
+import hashlib
+import os
+
+import numpy as np
+import pytest
+
+from repro.core.external import StreamingGenerator
+from repro.core.hostgen import graph_perm_inv_np, graph_perm_np
+from repro.core.phases import (
+    PartitionedGenerator,
+    csr_adjv_path,
+    csr_offv_path,
+    plain_config,
+)
+from repro.core.types import GraphConfig
+
+CFG = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=4)
+
+
+def _file_sha(*paths) -> str:
+    h = hashlib.sha256()
+    for p in paths:
+        with open(p, "rb") as f:
+            h.update(f.read())
+    return h.hexdigest()
+
+
+def _csr_file_sha(workdir: str, nb: int) -> str:
+    return _file_sha(*[p for i in range(nb)
+                       for p in (csr_offv_path(workdir, i),
+                                 csr_adjv_path(workdir, i))])
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_recompute_canonicalizes_to_feistel():
+    p = plain_config(CFG.with_(shuffle_variant="recompute"))
+    assert p.perm_family == "feistel"
+    assert p.feistel_rounds == 4
+
+
+def test_config_validation():
+    with pytest.raises(ValueError, match="shuffle_variant"):
+        plain_config(CFG.with_(shuffle_variant="telepathy"))
+    with pytest.raises(ValueError, match="perm_family"):
+        plain_config(CFG.with_(perm_family="rot13"))
+    with pytest.raises(ValueError, match="device"):
+        plain_config(CFG.with_(shuffle_variant="device",
+                               perm_family="feistel"))
+    with pytest.raises(ValueError, match="scale"):
+        plain_config(CFG.with_(scale=32, shuffle_variant="recompute"))
+    with pytest.raises(ValueError, match="even"):
+        plain_config(CFG.with_(shuffle_variant="recompute",
+                               feistel_rounds=3))
+    # feistel configs are exempt from the slice-exchange shape constraint
+    # (nb need not divide bucket_size): scale 9 / nb 4 / feistel must build.
+    plain_config(CFG.with_(shuffle_variant="external", perm_family="feistel"))
+
+
+def test_result_config_key_separates_variants():
+    from repro.core.phases import result_config_key
+    keys = {result_config_key(plain_config(c))
+            for c in (CFG.with_(shuffle_variant="external"),
+                      CFG.with_(shuffle_variant="recompute"),
+                      CFG.with_(shuffle_variant="external",
+                                perm_family="feistel"),
+                      CFG.with_(shuffle_variant="recompute",
+                                feistel_rounds=6))}
+    assert len(keys) == 4
+
+
+# ---------------------------------------------------------------------------
+# streaming driver parity
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def streaming_pair(tmp_path_factory):
+    out = {}
+    for label, variant in (("external", "external"), ("recompute", "recompute")):
+        d = str(tmp_path_factory.mktemp(label))
+        gen = StreamingGenerator(
+            CFG.with_(shuffle_variant=variant, perm_family="feistel"), d)
+        pv, csr, ledger = gen.run()
+        out[label] = {
+            "workdir": d, "pv": np.asarray(pv).copy(),
+            "csr_sha": _csr_file_sha(d, CFG.nb),
+            "pv_sha": _file_sha(os.path.join(d, "pv.npy")),
+            "bytes": ledger.bytes_read + ledger.bytes_written,
+            "hash_evals": ledger.hash_evals,
+            "report": gen.orchestrator.report(),
+        }
+    return out
+
+
+def test_streaming_csr_bit_identical(streaming_pair):
+    assert (streaming_pair["recompute"]["csr_sha"]
+            == streaming_pair["external"]["csr_sha"])
+
+
+def test_streaming_pv_bit_identical(streaming_pair):
+    assert (streaming_pair["recompute"]["pv_sha"]
+            == streaming_pair["external"]["pv_sha"])
+    pv = streaming_pair["recompute"]["pv"]
+    # pv is the recomputable family: forward and inverse agree with hostgen
+    ids = np.arange(CFG.n, dtype=np.int64)
+    np.testing.assert_array_equal(pv, graph_perm_np(CFG.seed, ids, CFG.n))
+    np.testing.assert_array_equal(graph_perm_inv_np(CFG.seed, pv, CFG.n), ids)
+    np.testing.assert_array_equal(np.sort(pv), ids)  # pv_is_permutation
+
+
+def test_streaming_recompute_runs_no_shuffle_and_fewer_bytes(streaming_pair):
+    rec, ext = streaming_pair["recompute"], streaming_pair["external"]
+    rec_phases = [r["phase"] for r in rec["report"]]
+    assert not any(p.startswith("shuffle") for p in rec_phases)
+    assert "relabel_recompute" in rec_phases
+    assert rec["bytes"] < ext["bytes"]
+    assert rec["hash_evals"] > 0
+
+
+def test_streaming_recompute_refuses_pv_stores(tmp_path):
+    gen = StreamingGenerator(CFG.with_(shuffle_variant="recompute"),
+                             str(tmp_path))
+    with pytest.raises(ValueError, match="graph_perm_np"):
+        gen.permutation()
+
+
+def test_scatter_csr_rejects_feistel(tmp_path):
+    gen = StreamingGenerator(
+        CFG.with_(shuffle_variant="recompute", csr_variant="scatter"),
+        str(tmp_path))
+    with pytest.raises(ValueError, match="scatter"):
+        gen.run()
+
+
+# ---------------------------------------------------------------------------
+# partitioned driver parity (pool) + zero shuffle wire bytes
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("workers", [0, 2])
+def test_partitioned_recompute_parity(tmp_path, workers, streaming_pair):
+    d = str(tmp_path / "part")
+    cfg = CFG.with_(shuffle_variant="recompute")
+    with PartitionedGenerator(cfg, d, max_workers=workers) as part:
+        part.run()
+        report = part.orchestrator.report()
+        assert part.ledger.hash_evals > 0
+    assert _csr_file_sha(d, CFG.nb) == streaming_pair["external"]["csr_sha"]
+    phases = [r["phase"] for r in report]
+    assert not any(p.startswith("shuffle") for p in phases)
+    # zero wire bytes outside the one owner exchange every variant pays
+    for r in report:
+        if not r["phase"].startswith("relabel_recompute"):
+            assert r.get("wire_bytes_sent", 0) == 0, r
+
+
+def test_partitioned_recompute_refuses_pv_buckets(tmp_path):
+    with PartitionedGenerator(CFG.with_(shuffle_variant="recompute"),
+                              str(tmp_path), max_workers=0) as part:
+        with pytest.raises(ValueError, match="graph_perm_np"):
+            part.pv_buckets()
+
+
+def test_partitioned_recompute_pooled_cascade_parity(tmp_path, streaming_pair):
+    d = str(tmp_path / "pooled")
+    cfg = CFG.with_(shuffle_variant="recompute", pooled_cascade=True,
+                    merge_fanin=2)
+    with PartitionedGenerator(cfg, d, max_workers=2) as part:
+        part.run()
+    assert _csr_file_sha(d, CFG.nb) == streaming_pair["external"]["csr_sha"]
+
+
+def test_partitioned_recompute_checkpoint_resume(tmp_path):
+    cfg = CFG.with_(shuffle_variant="recompute")
+    d = str(tmp_path / "ck")
+    with PartitionedGenerator(cfg, d, max_workers=0, checkpoint=True) as part:
+        part.run()
+        sha = _csr_file_sha(d, CFG.nb)
+    with PartitionedGenerator(cfg, d, max_workers=0, checkpoint=True) as part:
+        part.run()
+        report = part.orchestrator.report()
+    assert _csr_file_sha(d, CFG.nb) == sha
+    assert all(r["status"] == "resumed" for r in report)
+
+
+# ---------------------------------------------------------------------------
+# pooled relabel + pooled walk hops (PR 3 residue) — inline parity
+# ---------------------------------------------------------------------------
+
+
+def test_pooled_relabel_and_walks_bit_identical_to_inline(tmp_path):
+    shas, corpora = [], []
+    for pooled in (False, True):
+        d = str(tmp_path / f"pc{pooled}")
+        cfg = CFG.with_(shuffle_variant="external", pooled_cascade=pooled,
+                        merge_fanin=2)
+        with PartitionedGenerator(cfg, d, max_workers=0) as part:
+            part.run()
+            corpora.append(np.asarray(part.walk_corpus(19, 5, seed=7)).copy())
+        shas.append(_csr_file_sha(d, CFG.nb))
+    assert shas[0] == shas[1]
+    np.testing.assert_array_equal(corpora[0], corpora[1])
+
+
+def test_recompute_walks_match_external_feistel(tmp_path):
+    corpora = []
+    for variant in ("external", "recompute"):
+        d = str(tmp_path / variant)
+        cfg = CFG.with_(shuffle_variant=variant, perm_family="feistel")
+        with PartitionedGenerator(cfg, d, max_workers=0) as part:
+            part.run()
+            corpora.append(np.asarray(part.walk_corpus(19, 5, seed=7)).copy())
+    np.testing.assert_array_equal(corpora[0], corpora[1])
+
+
+# ---------------------------------------------------------------------------
+# device pipeline twins
+# ---------------------------------------------------------------------------
+
+
+def test_device_pipeline_recompute_variant():
+    from repro.core.pipeline import generate
+    from repro.distributed.collectives import flat_mesh
+
+    cfg = GraphConfig(scale=7, nb=1, edge_factor=4)
+    res = generate(cfg, flat_mesh(1), shuffle_variant="recompute")
+    pv = np.asarray(res.pv)
+    ids = np.arange(cfg.n, dtype=np.int64)
+    np.testing.assert_array_equal(np.sort(pv), ids)
+    np.testing.assert_array_equal(pv, graph_perm_np(cfg.seed, ids, cfg.n))
+    # relabel_recompute relabeled through the same family: new = pv[old]
+    from repro.core.pipeline import generate_edges
+    src, dst = generate_edges(cfg, flat_mesh(1))
+    np.testing.assert_array_equal(np.asarray(res.src), pv[np.asarray(src)])
+    np.testing.assert_array_equal(np.asarray(res.dst), pv[np.asarray(dst)])
