@@ -16,6 +16,9 @@ One module per paper table/figure (DESIGN.md §6):
   bench_transport       bucket-exchange transport: filesystem {sender}_{seq}
                         runs vs framed TCP (loopback), wall time + wire
                         bytes, bit-identity asserted per point
+  bench_jobqueue        multi-tenant job queue: serial vs work-stealing
+                        drain of the same job batch on a 2-host cluster —
+                        makespan, utilization, overlap factor, parity
   bench_lm              substrate sanity: train/serve throughput
   bench_roofline        deliverable (g): render the dry-run roofline table
 """
@@ -51,9 +54,10 @@ def main():
     args = ap.parse_args()
 
     from . import (bench_csr_variants, bench_external_shuffle,
-                   bench_external_walks, bench_hash_vs_sort, bench_lm,
-                   bench_merge_fanin, bench_roofline, bench_single_node,
-                   bench_strong_scaling, bench_transport, bench_weak_scaling)
+                   bench_external_walks, bench_hash_vs_sort, bench_jobqueue,
+                   bench_lm, bench_merge_fanin, bench_roofline,
+                   bench_single_node, bench_strong_scaling, bench_transport,
+                   bench_weak_scaling)
 
     benches = {
         "single_node": lambda: bench_single_node.run(
@@ -78,6 +82,12 @@ def main():
             scales=(9, 10) if args.fast else (10, 12),
             walkers=32 if args.fast else 64,
             length=6 if args.fast else 8),
+        # no reduced fast variant: below this batch size the per-job work
+        # is so small that cross-job barrier interleaving costs more than
+        # the idle time it fills and the overlap factor dips under 1.0 —
+        # a fast point would benchmark the scheduler's floor, not its win.
+        "jobqueue": lambda: bench_jobqueue.run(
+            scale=9, walkers=32, length=6),
         "external_walks": lambda: bench_external_walks.run(
             scales=(9, 10) if args.fast else (10, 12, 14),
             walkers=64 if args.fast else 256,

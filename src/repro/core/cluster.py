@@ -78,6 +78,7 @@ from .phases import (
     csr_offv_path,
     plain_config,
     result_config_key,
+    task_key,
     validate_external_shape,
 )
 from .transport import (
@@ -90,6 +91,7 @@ from .transport import (
     _MAGIC,
     _MAX_HEADER_BYTES,
     _PLEN,
+    _check_subdir,
     _recv_exact,
     _send_frame,
     sweep_partial_frames,
@@ -104,7 +106,34 @@ _KIND_CTRL = 2
 
 class ClusterError(RuntimeError):
     """A cluster-level failure: lost host past its restart budget, barrier
-    timeout, or a non-retriable kernel error reported by a host."""
+    timeout, or a non-retriable kernel error reported by a host.  When the
+    failure is task-scoped, `task_key` and `attempts` name exactly which
+    task died and how many dispatches it burned (`job` names the owning
+    queue job, when any) — structured so schedulers can park the job
+    instead of parsing the message."""
+
+    def __init__(self, msg: str, *, task_key: Optional[str] = None,
+                 attempts: Optional[int] = None, job: Optional[str] = None):
+        super().__init__(msg)
+        self.task_key = task_key
+        self.attempts = attempts
+        self.job = job
+
+
+class TaskError(ClusterError):
+    """One task exhausted its lease/retry budget.  JOB-scoped, not
+    cluster-scoped: the hosts are healthy and other jobs keep draining —
+    the job-queue scheduler catches this, dead-letters the owning job, and
+    moves on, where a plain ClusterError aborts the whole cluster run."""
+
+
+def heartbeat_period(timeout: float) -> float:
+    """Heartbeat send period derived from the controller's advertised
+    heartbeat_timeout: timeout/8 (several beats must fit in one timeout
+    window so a single dropped RPC never flaps the host), clamped to
+    [0.2s, 15s] so short-timeout tests don't spin and long-timeout
+    deployments don't fall to one beat per epoch."""
+    return min(max(float(timeout) / 8.0, 0.2), 15.0)
 
 
 # ---------------------------------------------------------------------------
@@ -473,23 +502,44 @@ class HostRunner:
         self.poll_interval = poll_interval
         self.max_tasks = int(max_tasks)
         os.makedirs(workdir, exist_ok=True)
+        # Sweep stray cascade scratch and partial frames BEFORE the server
+        # accepts — at the top level AND inside every job subdir (namespaced
+        # exchanges land in <workdir>/<job>/; sweep_partial_frames already
+        # walks recursively).
         clean_cascade_stores(workdir)
+        for entry in os.scandir(workdir):
+            if entry.is_dir():
+                clean_cascade_stores(entry.path)
         sweep_partial_frames(workdir)
         self.server = ExchangeServer(workdir, host=exchange_host)
-        self._orch: Optional[PhaseOrchestrator] = None
+        self._orchs: Dict[str, PhaseOrchestrator] = {}
         self._orch_ledger = IOLedger()
         self._pool: Optional[ProcessPoolExecutor] = None
         self._executed = 0
 
     # -- checkpoint state ----------------------------------------------------
-    def _orchestrator(self, pcfg: PlainCfg) -> PhaseOrchestrator:
-        if self._orch is None:
-            self._orch = PhaseOrchestrator(
-                self.workdir, self._orch_ledger, checkpoint=self.checkpoint,
+    def _task_workdir(self, task: Dict) -> str:
+        sub = task.get("subdir")
+        if not sub:
+            return self.workdir
+        return os.path.join(self.workdir, _check_subdir(str(sub)))
+
+    def _orchestrator(self, pcfg: PlainCfg, task: Dict) -> PhaseOrchestrator:
+        """Per-JOB checkpoint state: each job subdir keeps its own
+        host_phases.json (plus the default '' namespace for bare cluster
+        runs), so concurrent jobs' task checkpoints never interleave and a
+        dead-lettered job's state dies with its subdir."""
+        sub = str(task.get("subdir") or "")
+        orch = self._orchs.get(sub)
+        if orch is None:
+            wdir = self._task_workdir(task)
+            os.makedirs(wdir, exist_ok=True)
+            orch = self._orchs[sub] = PhaseOrchestrator(
+                wdir, self._orch_ledger, checkpoint=self.checkpoint,
                 state_name="host_phases.json",
                 config_key=repr(("host", result_config_key(pcfg))),
                 sweep=False)   # swept in __init__, before the server accepts
-        return self._orch
+        return orch
 
     # -- execution -----------------------------------------------------------
     def _kernel_task(self, task: Dict) -> Tuple:
@@ -497,7 +547,9 @@ class HostRunner:
         args = list(task["args"])
         if task.get("wcfg"):
             args.append(WalkCfg(**task["wcfg"]))
-        return (task["kernel"], pcfg, self.workdir, tuple(args))
+        if task.get("wcfgs"):
+            args.append([WalkCfg(**d) for d in task["wcfgs"]])
+        return (task["kernel"], pcfg, self._task_workdir(task), tuple(args))
 
     def _execute(self, tasks: List[Dict]):
         """Run a batch of tasks (resumed ones skip; fresh ones run in-process
@@ -507,10 +559,11 @@ class HostRunner:
         batch."""
         if not tasks:
             return
-        orch = self._orchestrator(_pcfg_from_wire(tasks[0]["pcfg"]))
         futs: Dict[int, object] = {}
         if self.workers > 0:
-            fresh = [t for t in tasks if not orch.completed(t["key"])]
+            fresh = [t for t in tasks
+                     if not self._orchestrator(_pcfg_from_wire(t["pcfg"]),
+                                               t).completed(t["key"])]
             if len(fresh) > 1:
                 if self._pool is None:
                     self._pool = ProcessPoolExecutor(
@@ -522,7 +575,9 @@ class HostRunner:
         for t in tasks:
             rep: Dict = {"op": "report", "host_id": self.host_id,
                          "task_id": t["id"]}
+            t0 = time.monotonic()
             try:
+                orch = self._orchestrator(_pcfg_from_wire(t["pcfg"]), t)
                 if orch.completed(t["key"]):
                     out = orch.run_phase(t["key"], lambda: None,
                                          load=lambda m: m.get("out"))
@@ -545,6 +600,9 @@ class HostRunner:
                            error=f"{type(e).__name__}: {e}",
                            retriable=isinstance(e, (TransportError, OSError)),
                            ledger={}, peak=0, stats={})
+            # Busy-seconds for the controller's fleet-utilization accounting
+            # (resumed checkpoint replays cost ~0 and report as such).
+            rep["seconds"] = time.monotonic() - t0
             # Receiver-side accounting accumulated since the last report —
             # folded into the controller's per-phase deltas at the barrier.
             sl, sg = IOLedger(), MemoryGauge()
@@ -578,15 +636,26 @@ class HostRunner:
         sock = socket.create_connection((host, int(port)), timeout=60.0)
         sock.setsockopt(socket.IPPROTO_TCP, socket.TCP_NODELAY, 1)
         hb_stop = threading.Event()
-        threading.Thread(target=self._heartbeat_loop, args=(hb_stop, 2.0),
-                         daemon=True).start()
         try:
-            _ctrl_request(sock, {"op": "hello", "host_id": self.host_id,
-                                 "exchange_addr": self.server.addr,
-                                 "pid": os.getpid()})
+            hello = _ctrl_request(sock, {"op": "hello",
+                                         "host_id": self.host_id,
+                                         "exchange_addr": self.server.addr,
+                                         "pid": os.getpid()})
+            # Heartbeat cadence follows the controller's configured timeout
+            # (hello reply), so short-timeout tests don't flap and
+            # long-timeout deployments don't spam the control socket.
+            period = heartbeat_period(float(hello.get("heartbeat_timeout",
+                                                      16.0)))
+            threading.Thread(target=self._heartbeat_loop,
+                             args=(hb_stop, period), daemon=True).start()
             while True:
+                # Long-poll: the controller parks this RPC on its condition
+                # variable until tasks/stop arrive (or the wait expires), so
+                # an idle host costs one RPC per wait window, not a
+                # sleep-spin.
                 r = _ctrl_request(sock, {"op": "poll",
-                                         "host_id": self.host_id})
+                                         "host_id": self.host_id,
+                                         "wait": 2.0})
                 if r["cmd"] == "stop":
                     return
                 if r["cmd"] == "idle":
@@ -616,14 +685,28 @@ class HostRunner:
 
 
 class ClusterController:
-    """The driver-side half of the control plane.  All mutable state is
-    guarded by one lock and touched from two directions: ControlServer
-    connection threads (hello/poll/report) and the generator thread
-    (run_tasks' barrier loop, liveness checks, restarts)."""
+    """The driver-side half of the control plane, and (since the job queue)
+    a multi-job scheduler: every task carries its owning `job`, each job has
+    its own wire pcfg (exchange namespace, graph shape), hosts PULL bounded
+    lease batches, and an idle host STEALS migratable tasks from a busy
+    peer's queue tail — so one job's straggler never idles the fleet.
+
+    All mutable state is guarded by one lock (with a condition variable for
+    the barrier/poll waits) and touched from two directions: ControlServer
+    connection threads (hello/poll/report) and generator threads — plural:
+    concurrent jobs each run their own barrier loop over this controller.
+
+    `lease_size` bounds how many tasks one poll hands out (0 = the host's
+    whole queue, the single-job batch behavior); small leases are what make
+    work-stealing effective, because un-leased tasks are still stealable.
+    Only tasks dispatched with `stealable=True` (no local state — e.g. the
+    fused regenerate+relabel kernel) ever migrate; everything else stays
+    with the bucket owner whose disk holds its inputs."""
 
     def __init__(self, spec: ClusterSpec, backend: Optional[ExecBackend] = None,
                  heartbeat_timeout: float = 60.0, max_restarts: int = 1,
-                 task_retries: int = 3, advertise: Optional[str] = None):
+                 task_retries: int = 3, advertise: Optional[str] = None,
+                 lease_size: int = 0):
         # `advertise` is the controller address HANDED TO workers when it
         # differs from the bind address (bind 0.0.0.0, advertise the routable
         # interface); a bare hostname gets the bound port appended.
@@ -632,7 +715,10 @@ class ClusterController:
         self.heartbeat_timeout = heartbeat_timeout
         self.max_restarts = max_restarts
         self.task_retries = task_retries
+        self.lease_size = int(lease_size)
         self._lock = threading.Lock()
+        self._cond = threading.Condition(self._lock)
+        self._revive_lock = threading.Lock()
         self._exchange_addrs: Dict[int, Optional[str]] = {
             h.host_id: None for h in spec.hosts}
         self._last_seen: Dict[int, float] = {}
@@ -643,12 +729,16 @@ class ClusterController:
         self._reports: Dict[int, Dict] = {}
         self._tasks: Dict[int, Dict] = {}
         self._task_seq = 0
-        self._pcfg_wire: Optional[Dict] = None
+        self._job_pcfg: Dict[str, Dict] = {}
+        self._job_tids: Dict[str, set] = {}
         self._stopping = False
         self.peers_version = 0
         self.restarts: Dict[int, int] = {h.host_id: 0 for h in spec.hosts}
         self._handles: Dict[int, object] = {}
-        self.task_log: List[Dict] = []   # (host, key, resumed) per report
+        self.task_log: List[Dict] = []   # (host, key, job, resumed) per report
+        self.busy_seconds: Dict[int, float] = {h.host_id: 0.0
+                                               for h in spec.hosts}
+        self.steals = 0
         self.server = ControlServer(self._handle, host=spec.controller_host,
                                     port=spec.controller_port)
         self.addr = self.server.addr
@@ -658,6 +748,38 @@ class ClusterController:
                             else f"{advertise}:{bound_port}")
 
     # -- control RPC handler (server threads) --------------------------------
+    def _lease_locked(self, h: int) -> List[Dict]:
+        """Pop a lease batch for host h under the lock: up to lease_size
+        tasks from its own queue, else STEAL stealable tasks from the
+        longest peer queue's tail (the classic work-stealing discipline:
+        owners pop their own head, thieves take the cold tail)."""
+        out: List[Dict] = []
+        cap = self.lease_size
+        while self._queues[h] and (not cap or len(out) < cap):
+            task = self._queues[h].popleft()
+            self._inflight[h][task["id"]] = task
+            out.append(task)
+        if out:
+            return out
+        victims = sorted((o for o in self._queues if o != h),
+                         key=lambda o: -len(self._queues[o]))
+        for o in victims:
+            q = self._queues[o]
+            # Scan the tail for stealable tasks without reordering the rest.
+            keep = deque()
+            while q and (not cap or len(out) < cap):
+                task = q.pop()
+                if task.get("stealable"):
+                    self._inflight[h][task["id"]] = task
+                    out.append(task)
+                    self.steals += 1
+                else:
+                    keep.appendleft(task)
+            q.extend(keep)
+            if out:
+                break
+        return out
+
     def _handle(self, req: Dict) -> Dict:
         op = req.get("op")
         h = int(req.get("host_id", -1))
@@ -668,45 +790,64 @@ class ClusterController:
             with self._lock:
                 self._exchange_addrs[h] = str(req["exchange_addr"])
                 self._last_seen[h] = now
-                # A (re)registering host lost whatever it had taken.
+                # A (re)registering host lost whatever it had taken; work
+                # goes back to its OWNER's queue (a stolen task's home).
                 for tid, task in self._inflight[h].items():
-                    self._queues[h].appendleft(task)
+                    self._queues[task.get("owner", h)].appendleft(task)
                 self._inflight[h].clear()
                 self.peers_version += 1
+                self._cond.notify_all()
             return {"ok": True, "hosts": self.spec.num_hosts,
-                    "nb": self.spec.nb}
+                    "nb": self.spec.nb,
+                    "heartbeat_timeout": self.heartbeat_timeout}
         if op == "heartbeat":
             with self._lock:
                 self._last_seen[h] = now
             return {}
         if op == "poll":
+            # Long-poll: park on the condition variable until work, stop,
+            # or the host's requested wait expires — the host side spends
+            # the window blocked on the RPC, not sleep-spinning.
+            wait = min(float(req.get("wait", 0.0)), 10.0)
+            deadline = now + wait
             with self._lock:
                 self._last_seen[h] = now
-                if self._stopping:
-                    return {"cmd": "stop"}
-                if not self._queues[h] or self._pcfg_wire is None:
-                    return {"cmd": "idle"}
-                peers = self._peer_addrs_locked()
-                if peers is None:
-                    return {"cmd": "idle"}   # mid-restart: wait for rendezvous
-                pcfg = dict(self._pcfg_wire,
-                            transport="socket", peer_addrs=list(peers))
-                out = []
-                while self._queues[h]:
-                    task = self._queues[h].popleft()
-                    self._inflight[h][task["id"]] = task
-                    out.append(dict(task, pcfg=pcfg))
-                return {"cmd": "tasks", "tasks": out}
+                while True:
+                    if self._stopping:
+                        return {"cmd": "stop"}
+                    peers = self._peer_addrs_locked()
+                    if peers is not None:
+                        out = self._lease_locked(h)
+                        if out:
+                            tasks = []
+                            for task in out:
+                                pcfg = dict(self._job_pcfg[task["job"]],
+                                            transport="socket",
+                                            peer_addrs=list(peers))
+                                tasks.append(dict(task, pcfg=pcfg))
+                            return {"cmd": "tasks", "tasks": tasks}
+                    remaining = deadline - time.monotonic()
+                    if remaining <= 0:
+                        return {"cmd": "idle"}
+                    self._cond.wait(timeout=remaining)
+                    self._last_seen[h] = time.monotonic()
         if op == "report":
             with self._lock:
                 self._last_seen[h] = now
                 tid = int(req["task_id"])
                 self._inflight[h].pop(tid, None)
+                task = self._tasks.get(tid)
+                if task is None:
+                    # A cancelled (dead-lettered) job's straggler report —
+                    # the job is gone; drop it.
+                    return {}
                 self._reports[tid] = req
+                self.busy_seconds[h] += float(req.get("seconds", 0.0))
                 self.task_log.append({
-                    "host": h, "key": self._tasks[tid]["key"],
+                    "host": h, "key": task["key"], "job": task.get("job", ""),
                     "ok": bool(req.get("ok")),
                     "resumed": bool(req.get("resumed"))})
+                self._cond.notify_all()
             return {}
         raise ClusterError(f"unknown control op {op!r}")
 
@@ -726,6 +867,23 @@ class ClusterController:
             raise ClusterError("not all hosts have registered")
         return peers
 
+    def wait_peer_addrs(self, timeout: float = 0.0) -> Tuple[str, ...]:
+        """peer_addrs that tolerates a revive in flight on another thread:
+        a dead host's slot is None from the moment `_revive` requeues its
+        lease until the relaunch says hello, and any job thread building a
+        transport inside that window must park on the registration signal
+        rather than abort its phase."""
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while True:
+                peers = self._peer_addrs_locked()
+                if peers is not None:
+                    return peers
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    raise ClusterError("not all hosts have registered")
+                self._cond.wait(timeout=min(0.5, remaining))
+
     # -- lifecycle -----------------------------------------------------------
     def launch_hosts(self) -> None:
         if self.backend is None:
@@ -737,7 +895,17 @@ class ClusterController:
     def wait_for_hosts(self, timeout: float = 120.0) -> None:
         deadline = time.monotonic() + timeout
         while True:
+            # Registration (hello) notifies the condition variable, so this
+            # wait is event-driven; the bounded timeout only exists to
+            # re-probe exec handles for a host that died before saying hello.
             with self._lock:
+                missing = [h for h, a in self._exchange_addrs.items()
+                           if a is None]
+                if not missing:
+                    return
+                remaining = deadline - time.monotonic()
+                if remaining > 0:
+                    self._cond.wait(timeout=min(0.5, remaining))
                 missing = [h for h, a in self._exchange_addrs.items()
                            if a is None]
             if not missing:
@@ -751,18 +919,22 @@ class ClusterController:
             if time.monotonic() > deadline:
                 raise ClusterError(f"rendezvous timeout: hosts {missing} "
                                    "never registered")
-            time.sleep(0.02)
 
     def stop(self) -> None:
         with self._lock:
             self._stopping = True
+            self._cond.notify_all()
         # Hosts exit at their next poll; reap backend handles either way.
+        # Exponential backoff, not a tight poll — handle exit is the slow
+        # external event here.
         deadline = time.monotonic() + 5.0
         for h, handle in self._handles.items():
             if handle is None:
                 continue
+            delay = 0.02
             while self.backend.alive(handle) and time.monotonic() < deadline:
-                time.sleep(0.02)
+                time.sleep(delay)
+                delay = min(delay * 2.0, 0.25)
             self.backend.stop(handle)
         self.server.stop()
 
@@ -776,14 +948,16 @@ class ClusterController:
             time.monotonic() - seen > self.heartbeat_timeout)
 
     def _revive(self, h: int) -> None:
-        """A host with outstanding work died: requeue what it held and
-        relaunch it through the backend (within the restart budget)."""
+        """A host with outstanding work died: requeue what it held (stolen
+        tasks go home to their owner's queue) and relaunch it through the
+        backend (within the restart budget)."""
         with self._lock:
             for tid, task in self._inflight[h].items():
-                self._queues[h].appendleft(task)
+                self._queues[task.get("owner", h)].appendleft(task)
             self._inflight[h].clear()
             self._exchange_addrs[h] = None
             self.peers_version += 1
+            self._cond.notify_all()
         if self.backend is None or self.restarts[h] >= self.max_restarts:
             raise ClusterError(
                 f"host {h} died mid-phase and the restart budget "
@@ -799,39 +973,85 @@ class ClusterController:
         """Controller-side recovery hook for non-barrier failures (e.g. a
         CLEAN broadcast hitting a host that died BETWEEN barriers): relaunch
         every dead host within the restart budget, then return — the caller
-        retries its operation against the healed peer map."""
-        for h in list(self._queues):
-            if self._host_dead(h):
-                self._revive(h)
+        retries its operation against the healed peer map.  Serialized
+        under its own lock: concurrent job threads both spotting the same
+        dead host must produce ONE relaunch, not two."""
+        with self._revive_lock:
+            for h in list(self._queues):
+                if self._host_dead(h):
+                    self._revive(h)
+
+    def heal_peers(self, since_version: int, timeout: float) -> None:
+        """Recover from a controller-side transport failure observed against
+        peer map version `since_version`.  A hard-killed host resets its
+        sockets a few milliseconds BEFORE its exec handle polls as exited, so
+        an immediate `revive_dead_hosts` can be a no-op and an immediate
+        retry redials the same dead port — instead, poll until either the
+        peer map has moved past the failed version with every host
+        registered (a revive healed it, here or on another job thread) or
+        the grace period expires with everyone still alive (the failure was
+        transient; let the caller retry against the unchanged map)."""
+        deadline = time.monotonic() + timeout
+        while True:
+            self.revive_dead_hosts()
+            with self._lock:
+                changed = self.peers_version != since_version
+                complete = self._peer_addrs_locked() is not None
+            if (changed and complete) or time.monotonic() >= deadline:
+                return
+            time.sleep(0.05)
 
     # -- the barrier ---------------------------------------------------------
     def run_tasks(self, kernel: str, argss: Sequence[Tuple], pcfg: PlainCfg,
-                  namespace: str, timeout: float = 600.0) -> List[Dict]:
+                  namespace: str, timeout: float = 600.0, job: str = "",
+                  stealable: bool = False,
+                  lease_budget: int = 1) -> List[Dict]:
         """Dispatch one kernel invocation per args tuple to the owner host of
         bucket args[0], wait for every report (the phase barrier), and return
         the reports in args order.  Task keys are content-addressed
-        (namespace:kernel:args) so per-host checkpoints survive controller
-        relaunches and re-dispatch after failures."""
+        (namespace:kernel:args, see phases.task_key) so per-host checkpoints
+        survive controller relaunches and re-dispatch after failures.
+
+        `job` scopes the barrier to one queue job (its pcfg — exchange
+        namespace included — rides every lease); concurrent jobs run their
+        own run_tasks threads against this one controller.  `stealable`
+        marks the tasks migratable (no local inputs) so idle hosts may pull
+        them.  `lease_budget` is how many DISPATCHES a deterministically
+        failing (non-retriable) task gets before the barrier gives up;
+        exhaustion raises TaskError naming the task key and attempt count —
+        job-scoped, so a scheduler dead-letters that job while the fleet
+        keeps going.  (Retriable transport failures keep the separate
+        task_retries budget.)"""
         tids = []
+        pcfg_wire = _pcfg_to_wire(pcfg)
+        subdir = getattr(pcfg, "exchange_namespace", None)
         with self._lock:
-            self._pcfg_wire = _pcfg_to_wire(pcfg)
+            self._job_pcfg[job] = pcfg_wire
+            job_tids = self._job_tids.setdefault(job, set())
             for args in argss:
-                wire_args, wcfg = [], None
+                wire_args, wcfg, wcfgs = [], None, None
                 for a in args:
                     if isinstance(a, WalkCfg):
                         wcfg = dataclasses.asdict(a)
+                    elif (isinstance(a, (list, tuple)) and a
+                          and all(isinstance(w, WalkCfg) for w in a)):
+                        wcfgs = [dataclasses.asdict(w) for w in a]
                     else:
                         wire_args.append(a)
                 tid = self._task_seq
                 self._task_seq += 1
-                key = f"{namespace}:{kernel}:" + \
-                    ":".join(str(a) for a in wire_args)
-                task = {"id": tid, "key": key, "kernel": kernel,
-                        "args": wire_args, "wcfg": wcfg, "attempt": 0}
-                self._tasks[tid] = task
+                key = task_key(namespace, kernel, wire_args,
+                               ns=(wcfg or {}).get("ns", ""))
                 owner = self.spec.owner_of(int(wire_args[0]))
+                task = {"id": tid, "key": key, "kernel": kernel,
+                        "args": wire_args, "wcfg": wcfg, "wcfgs": wcfgs,
+                        "attempt": 0, "job": job, "subdir": subdir,
+                        "stealable": bool(stealable), "owner": owner}
+                self._tasks[tid] = task
+                job_tids.add(tid)
                 self._queues[owner].append(task)
                 tids.append(tid)
+            self._cond.notify_all()
         deadline = time.monotonic() + timeout
         while True:
             with self._lock:
@@ -841,17 +1061,21 @@ class ClusterController:
                           and not self._reports[t].get("ok")]
             for tid, rep in failed:
                 task = self._tasks[tid]
-                if rep.get("retriable") and task["attempt"] < self.task_retries:
+                retriable = bool(rep.get("retriable"))
+                budget = self.task_retries if retriable else lease_budget - 1
+                if task["attempt"] < budget:
                     task["attempt"] += 1
                     with self._lock:
                         self._reports.pop(tid, None)
-                        self._queues[self.spec.owner_of(
-                            int(task["args"][0]))].append(task)
+                        self._queues[task["owner"]].append(task)
+                        self._cond.notify_all()
                 else:
-                    raise ClusterError(
-                        f"task {task['key']} failed on host "
-                        f"{self.spec.owner_of(int(task['args'][0]))}: "
-                        f"{rep.get('error')}")
+                    raise TaskError(
+                        f"task {task['key']} failed after "
+                        f"{task['attempt'] + 1} attempt(s): "
+                        f"{rep.get('error')}",
+                        task_key=task["key"],
+                        attempts=task["attempt"] + 1, job=job)
             if not pending and not failed:
                 break
             # Liveness: while a barrier is in progress EVERY host must be
@@ -861,17 +1085,47 @@ class ClusterController:
             # it (rather than letting the senders burn their retry budget
             # against a dead server) is what heals those retries: once the
             # host re-registers, re-dispatched tasks get the fresh peer map.
-            for h in list(self._queues):
-                if self._host_dead(h):
-                    self._revive(h)
+            # (Revive is serialized against concurrent job threads; the
+            # double-check under the revive lock keeps it single-shot.)
+            with self._revive_lock:
+                for h in list(self._queues):
+                    if self._host_dead(h):
+                        self._revive(h)
             if time.monotonic() > deadline:
                 raise ClusterError(
                     f"barrier timeout waiting for {kernel} "
-                    f"({len(pending)} tasks outstanding)")
-            time.sleep(0.02)
+                    f"({len(pending)} tasks outstanding)", job=job)
+            # Event-driven barrier: reports/requeues notify; the bounded
+            # timeout only paces the liveness re-check above.
+            with self._lock:
+                if all(t in self._reports for t in tids):
+                    continue
+                self._cond.wait(timeout=0.5)
         with self._lock:
             out = [self._reports.pop(t) for t in tids]
+            job_tids = self._job_tids.get(job)
+            if job_tids is not None:
+                job_tids.difference_update(tids)
         return out
+
+    def cancel_job(self, job: str) -> None:
+        """Purge every queued task of `job` (dead-letter path): unqueue,
+        forget reports, and drop the job's pcfg.  Inflight tasks on hosts
+        finish and their straggler reports are ignored (the report handler
+        drops unknown tids)."""
+        with self._lock:
+            tids = self._job_tids.pop(job, set())
+            for h in list(self._queues):
+                self._queues[h] = deque(
+                    t for t in self._queues[h] if t["id"] not in tids)
+                for tid in list(self._inflight[h]):
+                    if tid in tids:
+                        self._inflight[h].pop(tid)
+            for tid in tids:
+                self._reports.pop(tid, None)
+                self._tasks.pop(tid, None)
+            self._job_pcfg.pop(job, None)
+            self._cond.notify_all()
 
 
 # ---------------------------------------------------------------------------
@@ -897,27 +1151,45 @@ class _ControllerTransport:
         if self._tr is None or self._ver != ctl.peers_version:
             if self._tr is not None:
                 self._tr.close()
-            self._tr = SocketTransport(self._gen.workdir, self._gen.ledger,
-                                       self._gen.gauge,
-                                       peers=ctl.peer_addrs())
+            self._tr = SocketTransport(
+                self._gen.workdir, self._gen.ledger, self._gen.gauge,
+                peers=ctl.wait_peer_addrs(timeout=ctl.heartbeat_timeout),
+                namespace=getattr(self._gen.pcfg, "exchange_namespace", None))
             self._ver = ctl.peers_version
         return self._tr
 
     def clean_inboxes(self, names: Sequence[str]) -> None:
-        try:
-            self._cur().clean_inboxes(names)
-        except (TransportError, OSError):
-            # A peer died between barriers (no task owed, so the barrier
-            # loop's liveness never saw it).  Revive within the restart
-            # budget and retry ONCE against the healed peer map; a second
-            # failure is real and propagates.  The retried CLEAN is
-            # idempotent — inboxes already swept on surviving hosts just
-            # get swept again.
-            if self._tr is not None:
-                self._tr.close()
-                self._tr = None
-            self._gen.controller.revive_dead_hosts()
-            self._cur().clean_inboxes(names)
+        # A peer can die between barriers (no task owed, so the barrier
+        # loop's liveness never saw it).  Revive within the controller's
+        # max_restarts budget and retry against each healed peer map; once
+        # the budget is spent the failure is real and surfaces as a
+        # structured ClusterError naming the sweep and attempt count.  The
+        # retried CLEAN is idempotent — inboxes already swept on surviving
+        # hosts just get swept again.
+        ctl = self._gen.controller
+        budget = max(1, int(ctl.max_restarts))
+        for attempt in range(budget + 1):
+            try:
+                self._cur().clean_inboxes(names)
+                return
+            except (TransportError, OSError) as e:
+                failed_ver = self._ver   # map version the failed dial used
+                if self._tr is not None:
+                    self._tr.close()
+                    self._tr = None
+                if attempt >= budget:
+                    raise ClusterError(
+                        f"clean_inboxes failed after {attempt + 1} "
+                        f"attempt(s) ({len(names)} inbox(es), first "
+                        f"{names[0] if names else '<none>'!r}): {e}",
+                        task_key=f"clean:{names[0] if names else ''}",
+                        attempts=attempt + 1) from e
+                ctl.heal_peers(failed_ver, timeout=ctl.heartbeat_timeout)
+
+    def purge_namespace(self) -> None:
+        """Dead-letter GC: remove this generator's exchange namespace dir on
+        every peer (partial inbound stores of a cancelled job)."""
+        self._cur().purge_namespace()
 
     def flush(self) -> None:
         pass
@@ -957,7 +1229,9 @@ class ClusterGenerator(PartitionedGenerator):
                  heartbeat_timeout: float = 60.0, max_restarts: int = 1,
                  rendezvous_timeout: float = 120.0,
                  barrier_timeout: float = 600.0,
-                 advertise: Optional[str] = None):
+                 advertise: Optional[str] = None,
+                 controller: Optional[ClusterController] = None,
+                 job: str = "", lease_budget: int = 1):
         pcfg = validate_external_shape(
             cfg if isinstance(cfg, PlainCfg) else plain_config(cfg))
         if pcfg.transport != "socket":
@@ -978,19 +1252,30 @@ class ClusterGenerator(PartitionedGenerator):
         self._pool = None
         self.max_workers = 0
         self.barrier_timeout = barrier_timeout
+        self.lease_budget = lease_budget
         self._namespace = "gen"
+        self._job = job
+        if job:
+            # Multi-tenant: every exchange frame and every host-side store of
+            # this generator lives under the job's namespace subdir, so
+            # concurrent jobs on one fleet never share an inbox and a
+            # dead-lettered job's partials can be purged by one rmtree.
+            pcfg = dataclasses.replace(pcfg, exchange_namespace=job)
         if keep_all is None:
             keep_all = bool(getattr(cfg, "keep_phase_stores", False))
         self.keep_all = keep_all
-        self.controller = ClusterController(
-            spec, backend=backend, heartbeat_timeout=heartbeat_timeout,
-            max_restarts=max_restarts, advertise=advertise)
-        try:
-            self.controller.launch_hosts()
-            self.controller.wait_for_hosts(rendezvous_timeout)
-        except BaseException:
-            self.controller.stop()
-            raise
+        self._owns_controller = controller is None
+        if controller is None:
+            controller = ClusterController(
+                spec, backend=backend, heartbeat_timeout=heartbeat_timeout,
+                max_restarts=max_restarts, advertise=advertise)
+            try:
+                controller.launch_hosts()
+                controller.wait_for_hosts(rendezvous_timeout)
+            except BaseException:
+                controller.stop()
+                raise
+        self.controller = controller
         self.pcfg = dataclasses.replace(
             pcfg, peer_addrs=self.controller.peer_addrs())
         self.transport = _ControllerTransport(self)
@@ -1002,9 +1287,14 @@ class ClusterGenerator(PartitionedGenerator):
 
     # -- pool plumbing --------------------------------------------------------
     def _submit(self, kernel: str, tasks: Sequence[Tuple]) -> List:
+        # Recompute-shuffle generation reads nothing local (the RMAT chunk
+        # regenerates from (pcfg, lo) alone), so those leases may migrate to
+        # idle hosts; everything else is pinned to the bucket owner's disk.
         reports = self.controller.run_tasks(
             kernel, [t[3] for t in tasks], self.pcfg, self._namespace,
-            timeout=self.barrier_timeout)
+            timeout=self.barrier_timeout, job=self._job,
+            stealable=(kernel == "gen_relabel_recompute"),
+            lease_budget=self.lease_budget)
         results = []
         for rep in reports:
             for k, v in rep.get("server_ledger", {}).items():
@@ -1032,11 +1322,16 @@ class ClusterGenerator(PartitionedGenerator):
         return outs
 
     # -- placement hooks ------------------------------------------------------
+    def _host_dir(self, b: int) -> str:
+        base = self.spec.workdir_of(b)
+        ns = getattr(self.pcfg, "exchange_namespace", None)
+        return os.path.join(base, ns) if ns else base
+
     def _csr_dir(self, i: int) -> str:
-        return self.spec.workdir_of(i)
+        return self._host_dir(i)
 
     def _shard_dir_of(self, j: int) -> str:
-        return self.spec.workdir_of(j)
+        return self._host_dir(j)
 
     def _shard_host_of(self, j: int) -> int:
         return self.spec.owner_of(j)
@@ -1057,7 +1352,7 @@ class ClusterGenerator(PartitionedGenerator):
                 "csr_variant": csr_variant,
                 "buckets": [
                     {"bucket": i, "host": self.spec.owner_of(i),
-                     "workdir": self.spec.workdir_of(i),
+                     "workdir": self._host_dir(i),
                      "offv": os.path.basename(o), "adjv": os.path.basename(a)}
                     for i, (o, a) in enumerate(paths)],
             }
@@ -1074,8 +1369,8 @@ class ClusterGenerator(PartitionedGenerator):
         """Assemble [(offv, adjv memmap)] per bucket by reading each owner
         host's files — colocated/shared-view deployments only."""
         from .phases import load_bucket_csr
-        return [load_bucket_csr(csr_offv_path(self.spec.workdir_of(i), i),
-                                csr_adjv_path(self.spec.workdir_of(i), i),
+        return [load_bucket_csr(csr_offv_path(self._host_dir(i), i),
+                                csr_adjv_path(self._host_dir(i), i),
                                 self.ledger, self.gauge)
                 for i in range(self.pcfg.nb)]
 
@@ -1089,8 +1384,21 @@ class ClusterGenerator(PartitionedGenerator):
         finally:
             self._namespace = "gen"
 
+    def walk_corpus_fused(self, specs, checkpoint: bool = True):
+        """Batched corpora over the cluster: one fused hop barrier per
+        bucket per step advances every (num_walkers, length, seed, out_name)
+        spec through a single CSR scan on the owner host — PR 2's carried
+        upside, now a first-class job-queue fusion."""
+        self._namespace = "walkf:" + ";".join(
+            f"{w}:{l}:{s}:{o}" for w, l, s, o in specs)
+        try:
+            return super().walk_corpus_fused(specs, checkpoint=checkpoint)
+        finally:
+            self._namespace = "gen"
+
     def close(self):
         try:
-            self.controller.stop()
+            if self._owns_controller:
+                self.controller.stop()
         finally:
             self.transport.close()

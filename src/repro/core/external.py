@@ -75,6 +75,23 @@ term — training streams per-batch rows from the shard files where they lie
 (data/loader.ExternalWalkLoader over the manifest).  The same placement
 holds for the graph itself: bucket CSR files live only on their owner host.
 
+Multi-job scheduling term (core/jobqueue.py over core/cluster.py): a drain
+of J concurrent jobs adds ONLY control-plane bytes — per host-poll one
+lease of up to lease_size tasks and one report per task, each a
+header-only control frame of O(100) bytes; steals ride the same poll
+frames, so lease/steal control traffic is O((T/lease_size + T) * 100 B)
+for T total tasks across all jobs, a vanishing term next to any E_x.
+Data-bearing tasks never migrate (placement stays with the bucket owner's
+disk); only communication-free recompute tasks are stealable, and a steal
+moves ZERO input bytes — the thief regenerates from (cfg, bucket) alone.
+What the queue buys is the OVERLAP FACTOR, serial_makespan /
+queued_makespan >= 1: while one job's barrier waits on a straggler the
+fleet runs other jobs' sequential I/O and exchanges, so fleet utilization
+(busy-seconds / H * makespan) rises toward 1 without changing any job's
+per-phase I/O terms above — and k same-length corpora submitted as one
+fused walk job (walk_hop_fused) share each hop's O(B / C_e) CSR scan,
+dividing that read term by k.
+
 Every external merge above pays an extra O(log_merge_fanin(nruns))-deep
 cascade of sequential read+write passes whenever a store's run count exceeds
 cfg.merge_fanin (blockstore.merge_runs): the bounded-fan-in multiway merge

@@ -138,6 +138,13 @@ class PlainCfg:
     perm_family: str = "shuffle"
     # Feistel depth (perm_family="feistel"); even, >= 2.
     feistel_rounds: int = 4
+    # Per-job exchange namespace (the multi-tenant job queue): when set,
+    # every socket frame carries it as a subdir, so concurrent jobs share
+    # one ExchangeServer per host without their same-named inboxes ever
+    # colliding (`<host workdir>/<namespace>/<store>`).  Pure routing —
+    # never affects result bytes — so result_config_key normalizes it out
+    # exactly like transport/peer_addrs.
+    exchange_namespace: Optional[str] = None
 
     @property
     def n(self) -> int:
@@ -181,6 +188,9 @@ def plain_config(cfg) -> PlainCfg:
         shuffle_variant=shuffle_variant,
         perm_family=perm_family,
         feistel_rounds=int(getattr(cfg, "feistel_rounds", 4)),
+        exchange_namespace=(None
+                            if getattr(cfg, "exchange_namespace", None) is None
+                            else str(cfg.exchange_namespace)),
     )
     if p.n % p.nb != 0:
         raise ValueError(f"nb={p.nb} must divide n={p.n}")
@@ -234,7 +244,8 @@ def result_config_key(pcfg: PlainCfg) -> PlainCfg:
     `pooled_cascade` stays IN the key on purpose: its bytes are identical
     but its phase schedule is not, and a cross-mode resume could replay a
     phase whose inputs the other mode's checkpoint GC already freed."""
-    return dataclasses.replace(pcfg, transport="fs", peer_addrs=None)
+    return dataclasses.replace(pcfg, transport="fs", peer_addrs=None,
+                               exchange_namespace=None)
 
 
 def validate_external_shape(p: PlainCfg) -> PlainCfg:
@@ -297,21 +308,23 @@ def csr_adjv_path(workdir: str, i: int) -> str:
     return os.path.join(workdir, f"csr_adjv_{i:03d}.npy")
 
 
-def wfront_store_name(t: int, j: int) -> str:
-    """Walker frontier inbox of bucket j at walk step t (multi-writer)."""
-    return f"wfront_s{t:04d}_b{j:03d}"
+def wfront_store_name(t: int, j: int, ns: str = "") -> str:
+    """Walker frontier inbox of bucket j at walk step t (multi-writer).
+    `ns` is WalkCfg.ns — the per-config prefix that keeps several walk
+    configs' stores apart when they advance through one fused CSR scan."""
+    return f"{ns}wfront_s{t:04d}_b{j:03d}"
 
 
-def whist_store_name(s: int, j: int) -> str:
+def whist_store_name(s: int, j: int, ns: str = "") -> str:
     """History rows (wid, step=s, vertex) emitted by bucket j (single-writer:
     written fresh by the kernel that advances step s, so a crashed attempt's
     partial rows can never leak into a rerun)."""
-    return f"whist_s{s:04d}_b{j:03d}"
+    return f"{ns}whist_s{s:04d}_b{j:03d}"
 
 
-def whist_inbox_name(j: int) -> str:
+def whist_inbox_name(j: int, ns: str = "") -> str:
     """Walker-block inbox of the history collect phase (multi-writer)."""
-    return f"whout_b{j:03d}"
+    return f"{ns}whout_b{j:03d}"
 
 
 def load_bucket_csr(offv_path: str, adjv_path: str, ledger: IOLedger,
@@ -515,6 +528,64 @@ def relabel_recompute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         outs = tr.channels(owned_store_name, pcfg.nb)
         partition_runs(store, outs, lambda a, b: a // B,
+                       tag_prefix=f"{i:03d}", transform=relabel)
+
+
+class _RegenRuns:
+    """A virtual, read-only BlockStore over bucket i's RAW edge stream that
+    REGENERATES each run from the counter-based RNG instead of reading disk
+    — run boundaries exactly match what generate_bucket_edges would have
+    appended, so any consumer (partition_runs) sees a bit-identical store.
+    Exists for gen_relabel_recompute_bucket: a task with no local inputs at
+    all is freely migratable between hosts, which is what makes it stealable
+    under the job-queue scheduler."""
+
+    def __init__(self, pcfg: PlainCfg, i: int, ledger: IOLedger,
+                 gauge: Optional[MemoryGauge]):
+        self.pcfg, self.i = pcfg, i
+        self.ledger = ledger
+        self.gauge = gauge if gauge is not None else MemoryGauge()
+        self.name = edges_store_name(i)
+
+    def iter_runs(self):
+        pcfg = self.pcfg
+        eps, chunk = pcfg.edges_per_bucket, pcfg.chunk_edges
+        start = self.i * eps
+        for lo in range(start, start + eps, chunk):
+            cnt = min(chunk, start + eps - lo)
+            s, d = rmat_edges_np_cfg(pcfg, lo, cnt)
+            self.gauge.track(s.size)
+            yield s, d
+
+
+def gen_relabel_recompute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
+                                 ledger: IOLedger,
+                                 gauge: Optional[MemoryGauge] = None,
+                                 transport: Optional[Transport] = None):
+    """Fused generate+relabel for shuffle_variant='recompute' (Funke et
+    al. taken to its conclusion): regenerate bucket i's raw edges chunk by
+    chunk from the counter-based RNG and pipe them straight through the
+    hash-evaluating relabel into owner(perm(src))'s inbox — the raw-edge
+    store is never written.  Wire bytes and inbox contents are bit-identical
+    to generate_bucket_edges + relabel_recompute_bucket because _RegenRuns
+    reproduces the exact run boundaries; what changes is the task's
+    footprint: zero local reads, zero local writes, so the scheduler may
+    hand it to ANY host (stealable) without migrating data."""
+    if pcfg.shuffle_variant != "recompute":
+        raise ValueError("gen_relabel_recompute_bucket requires "
+                         f"shuffle_variant='recompute', got "
+                         f"{pcfg.shuffle_variant!r}")
+    B = pcfg.bucket_size
+
+    def relabel(s, d):
+        ledger.hashes(s.size + d.size)
+        return (graph_perm_np(pcfg.seed, s, pcfg.n, rounds=pcfg.feistel_rounds),
+                graph_perm_np(pcfg.seed, d, pcfg.n, rounds=pcfg.feistel_rounds))
+
+    src = _RegenRuns(pcfg, i, ledger, gauge)
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        outs = tr.channels(owned_store_name, pcfg.nb)
+        partition_runs(src, outs, lambda a, b: a // B,
                        tag_prefix=f"{i:03d}", transform=relabel)
 
 
@@ -925,6 +996,11 @@ class WalkCfg:
     length: int
     seed: int = 0
     out_name: str = "walks.npy"
+    # Store-name prefix isolating this config's frontier/history stores when
+    # several walk configs advance through ONE fused CSR scan per hop
+    # (walk_hop_fused / drive_walks_fused — the job queue's batched-seeds
+    # upside); "" is the classic un-prefixed single-config layout.
+    ns: str = ""
 
 
 def walker_block(wcfg: WalkCfg, nb: int, j: int) -> Tuple[int, int]:
@@ -965,9 +1041,9 @@ def walk_init_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
     gauge = gauge if gauge is not None else MemoryGauge()
     B, chunk = pcfg.bucket_size, pcfg.chunk_edges
     w0, w1 = walker_block(wcfg, pcfg.nb, j)
-    hist = BlockStore(workdir, whist_store_name(0, j), ledger,
+    hist = BlockStore(workdir, whist_store_name(0, j, wcfg.ns), ledger,
                       columns=("wid", "step", "v"), gauge=gauge, fresh=True)
-    adv = BlockStore(workdir, f"wadv_init_b{j:03d}", ledger,
+    adv = BlockStore(workdir, f"{wcfg.ns}wadv_init_b{j:03d}", ledger,
                      columns=("pos", "wid"), gauge=gauge, fresh=True)
     for lo in range(w0, w1, chunk):
         hi = min(lo + chunk, w1)
@@ -976,7 +1052,7 @@ def walk_init_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
         hist.append_run(wid, np.zeros(wid.size, np.int64), pos)
         adv.append_run(pos, wid)
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
-        outs = tr.channels(lambda d: wfront_store_name(0, d), pcfg.nb,
+        outs = tr.channels(lambda d: wfront_store_name(0, d, wcfg.ns), pcfg.nb,
                            columns=("pos", "wid"))
         partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
     adv.destroy()
@@ -997,15 +1073,89 @@ def walk_hop_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg,
     """
     gauge = gauge if gauge is not None else MemoryGauge()
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
-        front = tr.drain_inbox(wfront_store_name(t, j), columns=("pos", "wid"))
-        tmp = BlockStore(workdir, wfront_store_name(t, j) + "_sorted", ledger,
-                         columns=("pos", "wid"), gauge=gauge, fresh=True)
+        front = tr.drain_inbox(wfront_store_name(t, j, wcfg.ns),
+                               columns=("pos", "wid"))
+        tmp = BlockStore(workdir, wfront_store_name(t, j, wcfg.ns) + "_sorted",
+                         ledger, columns=("pos", "wid"), gauge=gauge, fresh=True)
         sort_runs(front, tmp, key=0)
         stream = merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
                             max_fanin=pcfg.merge_fanin)
         _walk_advance(pcfg, workdir, j, t, wcfg, stream, tr,
                       ledger=ledger, gauge=gauge)
         tmp.destroy()
+
+
+class _HopEmitter:
+    """One walk config's sinks for one hop of bucket j: the step-t+1 history
+    store and (unless this is the last hop) the advance store that gets
+    partitioned to the next frontier.  `emit` consumes merged (pos, wid)
+    chunks in nondecreasing pos order against CALLER-OWNED CSR cursors —
+    which is what lets walk_hop_fused_bucket advance several configs through
+    ONE shared scan of offv/adjv (one emitter per config, one cursor set)."""
+
+    def __init__(self, pcfg: PlainCfg, workdir: str, j: int, t: int,
+                 wcfg: WalkCfg, ledger: IOLedger, gauge: MemoryGauge):
+        self.pcfg, self.wcfg, self.j, self.t = pcfg, wcfg, j, t
+        self.base = j * pcfg.bucket_size
+        self.ledger, self.gauge = ledger, gauge
+        self.hist = BlockStore(workdir, whist_store_name(t + 1, j, wcfg.ns),
+                               ledger, columns=("wid", "step", "v"),
+                               gauge=gauge, fresh=True)
+        self.adv = None
+        if t + 1 < wcfg.length:
+            self.adv = BlockStore(workdir,
+                                  f"{wcfg.ns}wadv_s{t:04d}_b{j:03d}", ledger,
+                                  columns=("pos", "wid"), gauge=gauge,
+                                  fresh=True)
+
+    def emit(self, pos: np.ndarray, wid: np.ndarray,
+             lk_lo: MonotoneLookup, lk_hi: MonotoneLookup,
+             adjv_mm: np.ndarray) -> None:
+        pcfg, wcfg, t = self.pcfg, self.wcfg, self.t
+        row = pos - self.base
+        start = lk_lo.lookup(row)
+        end = lk_hi.lookup(row + 1)
+        deg = end - start
+        r = walk_rand_np(wcfg.seed, wid.astype(np.uint32),
+                         t + 1).astype(np.int64)
+        sink = deg == 0
+        idx = start + np.where(sink, 0, r % np.maximum(deg, 1))
+        nxt = np.where(sink, r % pcfg.n, 0).astype(np.int64)
+        live = ~sink
+        if live.any():
+            nxt[live] = _gather_adjv(adjv_mm, idx[live], pcfg.chunk_edges,
+                                     self.ledger, self.gauge)
+        self.hist.append_run(wid, np.full(wid.size, t + 1, np.int64), nxt)
+        if self.adv is not None:
+            self.adv.append_run(nxt, wid)
+
+    def finish(self, tr: Transport) -> None:
+        if self.adv is None:
+            return
+        pcfg, t, ns = self.pcfg, self.t, self.wcfg.ns
+        outs = tr.channels(lambda d: wfront_store_name(t + 1, d, ns),
+                           pcfg.nb, columns=("pos", "wid"))
+        partition_runs(self.adv, outs,
+                       lambda p, w: p // pcfg.bucket_size,
+                       tag_prefix=f"{self.j:03d}")
+        self.adv.destroy()
+
+
+def _csr_cursors(pcfg: PlainCfg, workdir: str, j: int, ledger: IOLedger,
+                 gauge: MemoryGauge):
+    """Bucket j's hop-join read state: two offv cursors + the adjv memmap.
+    Two independent offv cursors, one per row end: a single interleaved
+    probe stream (row, row+1, row', row'+1, ...) is NOT monotone when
+    consecutive walkers share a vertex (5,6,5,6), so the 2x offv scan is
+    the price of keeping each stream strictly nondecreasing."""
+    offv_file = csr_offv_path(workdir, j)
+    chunk = pcfg.chunk_edges
+    lk_lo = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
+                           block_rows=chunk, gauge=gauge)
+    lk_hi = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
+                           block_rows=chunk, gauge=gauge)
+    adjv_mm = np.load(csr_adjv_path(workdir, j), mmap_mode="r")
+    return lk_lo, lk_hi, adjv_mm
 
 
 def _walk_advance(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg,
@@ -1015,44 +1165,91 @@ def _walk_advance(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg,
     and walk_hop_join_bucket (pooled cascade): sort-merge-join the
     vertex-sorted frontier `stream` against bucket j's CSR, emit step-t+1
     history rows, and partition the advanced walkers to their new owners."""
-    B, chunk, n = pcfg.bucket_size, pcfg.chunk_edges, pcfg.n
-    base = j * B
-    offv_file = csr_offv_path(workdir, j)
-    # Two independent offv cursors, one per row end: a single interleaved
-    # probe stream (row, row+1, row', row'+1, ...) is NOT monotone when
-    # consecutive walkers share a vertex (5,6,5,6), so the 2x offv scan is
-    # the price of keeping each stream strictly nondecreasing.
-    lk_lo = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
-                           block_rows=chunk, gauge=gauge)
-    lk_hi = MonotoneLookup([NpyColumnStore(offv_file, ledger, gauge)],
-                           block_rows=chunk, gauge=gauge)
-    adjv_mm = np.load(csr_adjv_path(workdir, j), mmap_mode="r")
-    hist = BlockStore(workdir, whist_store_name(t + 1, j), ledger,
-                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
-    adv = None
-    if t + 1 < wcfg.length:
-        adv = BlockStore(workdir, f"wadv_s{t:04d}_b{j:03d}", ledger,
-                         columns=("pos", "wid"), gauge=gauge, fresh=True)
+    lk_lo, lk_hi, adjv_mm = _csr_cursors(pcfg, workdir, j, ledger, gauge)
+    em = _HopEmitter(pcfg, workdir, j, t, wcfg, ledger, gauge)
     for pos, wid in stream:
-        row = pos - base
-        start = lk_lo.lookup(row)
-        end = lk_hi.lookup(row + 1)
-        deg = end - start
-        r = walk_rand_np(wcfg.seed, wid.astype(np.uint32), t + 1).astype(np.int64)
-        sink = deg == 0
-        idx = start + np.where(sink, 0, r % np.maximum(deg, 1))
-        nxt = np.where(sink, r % n, 0).astype(np.int64)
-        live = ~sink
-        if live.any():
-            nxt[live] = _gather_adjv(adjv_mm, idx[live], chunk, ledger, gauge)
-        hist.append_run(wid, np.full(wid.size, t + 1, np.int64), nxt)
-        if adv is not None:
-            adv.append_run(nxt, wid)
-    if adv is not None:
-        outs = tr.channels(lambda d: wfront_store_name(t + 1, d), pcfg.nb,
-                           columns=("pos", "wid"))
-        partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
-        adv.destroy()
+        em.emit(pos, wid, lk_lo, lk_hi, adjv_mm)
+    em.finish(tr)
+
+
+def walk_hop_fused_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int,
+                          wcfgs: Sequence[WalkCfg], *,
+                          ledger: IOLedger, gauge: Optional[MemoryGauge] = None,
+                          transport: Optional[Transport] = None):
+    """Advance SEVERAL independent walk configs (different seeds/widths,
+    same length, distinct ns prefixes) one hop through bucket j with ONE
+    scan of the bucket's CSR — the PR 2 upside: hop phases for different
+    corpora are independent, so their sorted frontiers k-way merge at chunk
+    granularity into a single globally nondecreasing pos stream that shares
+    one pair of offv MonotoneLookup cursors and one adjv memmap.
+
+    Per config the outputs (history rows, next frontier frames) are
+    bit-identical to running walk_hop_bucket alone: each config keeps its
+    own _HopEmitter (own RNG stream, own ns-prefixed stores), and the merge
+    only decides the interleaving — which the corpus gather erases by
+    sorting on the unique wid*(L+1)+step key."""
+    gauge = gauge if gauge is not None else MemoryGauge()
+    wcfgs = list(wcfgs)
+    if len({w.ns for w in wcfgs}) != len(wcfgs):
+        raise ValueError("walk_hop_fused_bucket: walk configs must carry "
+                         "distinct ns prefixes")
+    with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
+        tmps, heads = [], []
+        for w in wcfgs:
+            front = tr.drain_inbox(wfront_store_name(t, j, w.ns),
+                                   columns=("pos", "wid"))
+            tmp = BlockStore(workdir,
+                             wfront_store_name(t, j, w.ns) + "_sorted",
+                             ledger, columns=("pos", "wid"), gauge=gauge,
+                             fresh=True)
+            sort_runs(front, tmp, key=0)
+            tmps.append(tmp)
+            stream = merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
+                                max_fanin=pcfg.merge_fanin)
+            # head = [stream, pos_chunk, wid_chunk, offset] or None (drained)
+            try:
+                pos, wid = next(stream)
+                heads.append([stream, pos, wid, 0])
+            except StopIteration:
+                heads.append(None)
+        lk_lo, lk_hi, adjv_mm = _csr_cursors(pcfg, workdir, j, ledger, gauge)
+        ems = [_HopEmitter(pcfg, workdir, j, t, w, ledger, gauge)
+               for w in wcfgs]
+        while True:
+            live = [s for s, h in enumerate(heads) if h is not None]
+            if not live:
+                break
+            # Chunk-level k-way merge: pick the stream whose head value is
+            # minimal (ties to the lowest stream id), then emit its longest
+            # head-chunk prefix that stays below every OTHER live head —
+            # `<= other` when we win the tie (other id higher), `< other`
+            # when the other would (id lower).  The chosen head's first
+            # value always qualifies, so every round makes progress, and
+            # the concatenated emits are globally nondecreasing in pos —
+            # exactly the monotonicity the shared cursors need.
+            s_star = min(live,
+                         key=lambda s: (int(heads[s][1][heads[s][3]]), s))
+            stream, pos, wid, off = heads[s_star]
+            cut = None
+            for o in live:
+                if o == s_star:
+                    continue
+                bound = int(heads[o][1][heads[o][3]]) + (1 if o > s_star else 0)
+                cut = bound if cut is None else min(cut, bound)
+            hi = pos.size if cut is None else int(
+                np.searchsorted(pos[off:], cut, side="left")) + off
+            ems[s_star].emit(pos[off:hi], wid[off:hi], lk_lo, lk_hi, adjv_mm)
+            if hi < pos.size:
+                heads[s_star][3] = hi
+            else:
+                try:
+                    npos, nwid = next(stream)
+                    heads[s_star] = [stream, npos, nwid, 0]
+                except StopIteration:
+                    heads[s_star] = None
+        for em, tmp in zip(ems, tmps):
+            em.finish(tr)
+            tmp.destroy()
 
 
 def walk_hop_sort_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int,
@@ -1063,9 +1260,10 @@ def walk_hop_sort_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int,
     step-t frontier inbox.  Returns the run count for the cascade plan."""
     gauge = gauge if gauge is not None else MemoryGauge()
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
-        front = tr.drain_inbox(wfront_store_name(t, j), columns=("pos", "wid"))
-    out = BlockStore(workdir, wfront_store_name(t, j) + "_sorted", ledger,
-                     columns=("pos", "wid"), gauge=gauge, fresh=True)
+        front = tr.drain_inbox(wfront_store_name(t, j, wcfg.ns),
+                               columns=("pos", "wid"))
+    out = BlockStore(workdir, wfront_store_name(t, j, wcfg.ns) + "_sorted",
+                     ledger, columns=("pos", "wid"), gauge=gauge, fresh=True)
     sort_runs(front, out, key=0)
     return out.num_runs
 
@@ -1100,11 +1298,12 @@ def walk_hist_scatter_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg
     gauge = gauge if gauge is not None else MemoryGauge()
     wpb = -(-wcfg.num_walkers // pcfg.nb)
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
-        outs = tr.channels(whist_inbox_name, pcfg.nb,
+        outs = tr.channels(lambda d: whist_inbox_name(d, wcfg.ns), pcfg.nb,
                            columns=("wid", "step", "v"))
         for s in range(wcfg.length + 1):
-            src = BlockStore.attach(workdir, whist_store_name(s, j), ledger,
-                                    columns=("wid", "step", "v"), gauge=gauge)
+            src = BlockStore.attach(workdir, whist_store_name(s, j, wcfg.ns),
+                                    ledger, columns=("wid", "step", "v"),
+                                    gauge=gauge)
             partition_runs(src, outs, lambda w, st, v: w // wpb,
                            tag_prefix=f"{j:03d}_{s:04d}")
 
@@ -1128,13 +1327,13 @@ def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg,
         return w * (L + 1) + s
 
     with _exchange(pcfg, workdir, ledger, gauge, transport) as _tr:
-        inbox = _tr.drain_inbox(whist_inbox_name(j),
+        inbox = _tr.drain_inbox(whist_inbox_name(j, wcfg.ns),
                                 columns=("wid", "step", "v"))
     if w1 == w0:
         # Degenerate walker block (W < nb): an empty, valid shard.
         np.save(shard_path, np.zeros((0, L + 1), np.int64))
         return shard_path
-    tmp = BlockStore(workdir, whist_inbox_name(j) + "_sorted", ledger,
+    tmp = BlockStore(workdir, whist_inbox_name(j, wcfg.ns) + "_sorted", ledger,
                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
     sort_runs(inbox, tmp, key=key)
     out = np.lib.format.open_memmap(shard_path, mode="w+", dtype=np.int64,
@@ -1197,7 +1396,7 @@ def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
     with _exchange(pcfg, workdir, IOLedger(), None, transport) as tr:
         phase("walk_init",
               lambda: tr.clean_inboxes(
-                  [wfront_store_name(0, d) for d in range(nb)]),
+                  [wfront_store_name(0, d, wcfg.ns) for d in range(nb)]),
               lambda: map_kernel("walk_init", [(j, wcfg) for j in range(nb)]))
         for t in range(L):
             def _clean(t=t):
@@ -1205,9 +1404,10 @@ def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
                     # Reclaim the PREVIOUS hop's consumed frontier (GC, not
                     # correctness: hop t-1 drained it already).
                     tr.clean_inboxes(
-                        [wfront_store_name(t - 1, d) for d in range(nb)])
+                        [wfront_store_name(t - 1, d, wcfg.ns)
+                         for d in range(nb)])
                 tr.clean_inboxes(
-                    [wfront_store_name(t + 1, d) for d in range(nb)])
+                    [wfront_store_name(t + 1, d, wcfg.ns) for d in range(nb)])
 
             if not pcfg.pooled_cascade:
                 phase(f"walk_hop_{t:04d}", _clean,
@@ -1229,7 +1429,7 @@ def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
                 load=lambda m: [int(c) for c in m["counts"]])
             srcs = pooled_cascade_levels(
                 pcfg, orch, map_kernel, {j: counts[j] for j in range(nb)},
-                lambda j, t=t: wfront_store_name(t, j) + "_sorted",
+                lambda j, t=t: wfront_store_name(t, j, wcfg.ns) + "_sorted",
                 f"walk_{t:04d}", key=0)
             orch.run_phase(
                 f"walk_hop_{t:04d}",
@@ -1244,7 +1444,7 @@ def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
             map_kernel("walk_hist_gather", [(j, wcfg) for j in range(nb)])
 
         phase("walk_collect",
-              lambda: tr.clean_inboxes([whist_inbox_name(d)
+              lambda: tr.clean_inboxes([whist_inbox_name(d, wcfg.ns)
                                         for d in range(nb)]),
               _collect)
 
@@ -1274,13 +1474,124 @@ def drive_walks(pcfg: PlainCfg, workdir: str, wcfg: WalkCfg, map_kernel,
             names = []
             for d in range(nb):
                 for t in range(L + 1):
-                    names.append(wfront_store_name(t, d))
-                    names.append(whist_store_name(t, d))
-                names.append(whist_inbox_name(d))
+                    names.append(wfront_store_name(t, d, wcfg.ns))
+                    names.append(whist_store_name(t, d, wcfg.ns))
+                names.append(whist_inbox_name(d, wcfg.ns))
             tr.clean_inboxes(names)
 
         orch.run_phase("walk_gc", _gc, save=mark, load=skip)
     return manifest_path
+
+
+def drive_walks_fused(pcfg: PlainCfg, workdir: str, wcfgs: Sequence[WalkCfg],
+                      map_kernel, orchestrator: "PhaseOrchestrator",
+                      transport: Optional[Transport] = None,
+                      shard_dir_of=None, shard_host_of=None,
+                      fine_phases: bool = False) -> List[str]:
+    """drive_walks for SEVERAL independent corpora at once: init/collect
+    barriers batch all configs, and each hop is one walk_hop_fused barrier
+    whose bucket tasks merge every config's frontier through a single CSR
+    scan (the PR 2 carried upside — k corpora pay one offv/adjv pass per
+    hop instead of k).  Configs must share `length` (hops are lockstep) and
+    carry distinct, NONEMPTY ns prefixes plus distinct out_names; hops use
+    the inline-sort variant (pooled_cascade does not apply here).  Returns
+    the manifest path per config, in input order; each corpus is
+    bit-identical to its own drive_walks run."""
+    nb = pcfg.nb
+    wcfgs = list(wcfgs)
+    if not wcfgs:
+        raise ValueError("drive_walks_fused: no walk configs")
+    L = wcfgs[0].length
+    if any(w.length != L for w in wcfgs):
+        raise ValueError("drive_walks_fused: configs must share length "
+                         f"(got {[w.length for w in wcfgs]})")
+    if any(not w.ns for w in wcfgs) or len({w.ns for w in wcfgs}) != len(wcfgs):
+        raise ValueError("drive_walks_fused: configs need distinct nonempty "
+                         "ns prefixes")
+    if len({w.out_name for w in wcfgs}) != len(wcfgs):
+        raise ValueError("drive_walks_fused: configs need distinct out_names")
+    orch = orchestrator
+    mark, skip = _MARK, _SKIP
+    shard_dir_of = shard_dir_of if shard_dir_of is not None else (
+        lambda j: workdir)
+    shard_host_of = shard_host_of if shard_host_of is not None else (
+        lambda j: 0)
+
+    def phase(name, clean_fn, map_fn):
+        if fine_phases:
+            orch.run_phase(f"{name}_clean", clean_fn, save=mark, load=skip)
+            orch.run_phase(name, map_fn, save=mark, load=skip)
+        else:
+            orch.run_phase(name, lambda: (clean_fn(), map_fn()),
+                           save=mark, load=skip)
+
+    with _exchange(pcfg, workdir, IOLedger(), None, transport) as tr:
+        phase("walk_init",
+              lambda: tr.clean_inboxes(
+                  [wfront_store_name(0, d, w.ns)
+                   for w in wcfgs for d in range(nb)]),
+              lambda: map_kernel("walk_init",
+                                 [(j, w) for w in wcfgs for j in range(nb)]))
+        for t in range(L):
+            def _clean(t=t):
+                if t > 0:
+                    tr.clean_inboxes(
+                        [wfront_store_name(t - 1, d, w.ns)
+                         for w in wcfgs for d in range(nb)])
+                tr.clean_inboxes(
+                    [wfront_store_name(t + 1, d, w.ns)
+                     for w in wcfgs for d in range(nb)])
+
+            phase(f"walk_hop_{t:04d}", _clean,
+                  lambda t=t: map_kernel(
+                      "walk_hop_fused",
+                      [(j, t, wcfgs) for j in range(nb)]))
+
+        def _collect():
+            map_kernel("walk_hist_scatter",
+                       [(j, w) for w in wcfgs for j in range(nb)])
+            map_kernel("walk_hist_gather",
+                       [(j, w) for w in wcfgs for j in range(nb)])
+
+        phase("walk_collect",
+              lambda: tr.clean_inboxes(
+                  [whist_inbox_name(d, w.ns)
+                   for w in wcfgs for d in range(nb)]),
+              _collect)
+
+        paths = [os.path.join(workdir, corpus_manifest_name(w.out_name))
+                 for w in wcfgs]
+
+        def _manifests():
+            for w, path in zip(wcfgs, paths):
+                shards = []
+                for j in range(nb):
+                    w0, w1 = walker_block(w, nb, j)
+                    shards.append({
+                        "bucket": j, "w0": w0, "w1": w1,
+                        "host": shard_host_of(j),
+                        "path": os.path.join(
+                            shard_dir_of(j),
+                            corpus_shard_name(w.out_name, j)),
+                    })
+                write_manifest(path, w.num_walkers, L, shards)
+
+        orch.run_phase("walk_manifest", _manifests, save=mark, load=skip)
+
+        def _gc():
+            if orch.keep_all:
+                return
+            names = []
+            for w in wcfgs:
+                for d in range(nb):
+                    for t in range(L + 1):
+                        names.append(wfront_store_name(t, d, w.ns))
+                        names.append(whist_store_name(t, d, w.ns))
+                    names.append(whist_inbox_name(d, w.ns))
+            tr.clean_inboxes(names)
+
+        orch.run_phase("walk_gc", _gc, save=mark, load=skip)
+    return paths
 
 
 # ---------------------------------------------------------------------------
@@ -1461,6 +1772,7 @@ _KERNELS = {
     "relabel_sort": relabel_sort_bucket,
     "relabel_join": relabel_join_bucket,
     "relabel_recompute": relabel_recompute_bucket,
+    "gen_relabel_recompute": gen_relabel_recompute_bucket,
     "redistribute": redistribute_bucket,
     "csr_sorted": csr_bucket_sorted,
     "csr_sort": csr_sort_bucket,
@@ -1469,6 +1781,7 @@ _KERNELS = {
     "csr_scatter": csr_bucket_scatter,
     "walk_init": walk_init_bucket,
     "walk_hop": walk_hop_bucket,
+    "walk_hop_fused": walk_hop_fused_bucket,
     "walk_hop_sort": walk_hop_sort_bucket,
     "walk_hop_join": walk_hop_join_bucket,
     "walk_hist_scatter": walk_hist_scatter_bucket,
@@ -1493,7 +1806,10 @@ def _run_kernel(task):
     kernel, pcfg, workdir, args = task
     ledger = IOLedger()
     gauge = MemoryGauge()
-    key = (workdir, pcfg.transport, pcfg.peer_addrs)
+    # exchange_namespace is part of the identity: two jobs sharing one host
+    # workdir must not reuse each other's (differently-namespaced) channels.
+    key = (workdir, pcfg.transport, pcfg.peer_addrs,
+           getattr(pcfg, "exchange_namespace", None))
     tr = _TRANSPORT_CACHE.get(key)
     if tr is None:
         tr = _TRANSPORT_CACHE[key] = make_transport(pcfg, workdir, ledger, gauge)
@@ -1507,6 +1823,142 @@ def _run_kernel(task):
         tr.close()
         raise
     return out, ledger.as_dict(), gauge.peak_rows, dataclasses.asdict(tr.stats)
+
+
+def task_key(namespace: str, kernel: str, wire_args: Sequence,
+             ns: str = "") -> str:
+    """The canonical task identity the cluster checkpoints under — shared
+    by ClusterController.run_tasks (live dispatch) and phase_task_plan
+    (static export) so the two can never drift.  `wire_args` are the
+    JSON-safe positional args (WalkCfg already extracted); `ns` is the walk
+    config's store prefix, appended only when nonempty so fused multi-corpus
+    barriers (same j, same kernel, different seeds) stay distinct while
+    every pre-existing key is unchanged."""
+    key = f"{namespace}:{kernel}:" + ":".join(str(a) for a in wire_args)
+    if ns:
+        key += f":{ns}"
+    return key
+
+
+def phase_task_plan(pcfg: PlainCfg, csr_variant: str = "sorted",
+                    walks: Sequence[Tuple[int, int, int, str]] = (),
+                    gen_namespace: str = "gen",
+                    fuse_gen_relabel: bool = False,
+                    fuse_walks: bool = False) -> List[Dict]:
+    """Static export of the per-phase task-key decomposition a cluster run
+    of this config dispatches — the job queue's DAG source: the scheduler
+    calls this ONCE at submit time to know every barrier, every task key
+    inside it, and the dependency edges between barriers, without running
+    anything.  Returns ordered [{"phase", "kernel", "keys", "deps"}];
+    `deps` name earlier phases (barriers), keys match task_key()/run_tasks
+    exactly.  Driver-side cleans are not tasks and do not appear.  Walk
+    corpora (one (num_walkers, length, seed, out_name) tuple each) chain
+    after the CSR phase and are mutually independent — unless `fuse_walks`,
+    in which case all of them (equal lengths required) advance through ONE
+    walk_hop_fused barrier per hop, the shape walk_corpus_fused dispatches.
+    pooled_cascade plans are data-dependent (cascade level counts come from
+    sort output) and raise ValueError."""
+    if pcfg.pooled_cascade:
+        raise ValueError(
+            "phase_task_plan: pooled_cascade merge levels are data-dependent "
+            "(level count derives from sorted-run counts at runtime) — no "
+            "static task plan exists; submit with pooled_cascade=False")
+    if csr_variant not in ("sorted", "scatter"):
+        raise ValueError(f"csr_variant must be 'sorted' or 'scatter', "
+                         f"got {csr_variant!r}")
+    nb = pcfg.nb
+    plan: List[Dict] = []
+
+    def add(phase, kernel, argss, deps):
+        plan.append({
+            "phase": phase, "kernel": kernel,
+            "keys": [task_key(gen_namespace if not phase.startswith("walk")
+                              else deps_ns, kernel, args) for args in argss],
+            "deps": list(deps),
+        })
+        return phase
+
+    deps_ns = gen_namespace
+    buckets = [(i,) for i in range(nb)]
+    if pcfg.shuffle_variant == "recompute":
+        if fuse_gen_relabel:
+            last = add("gen_relabel", "gen_relabel_recompute", buckets, [])
+        else:
+            last = add("generate", "generate", buckets, [])
+            last = add("relabel_recompute", "relabel_recompute", buckets,
+                       [last])
+    else:
+        if fuse_gen_relabel:
+            raise ValueError("fuse_gen_relabel requires "
+                             "shuffle_variant='recompute'")
+        if pcfg.perm_family == "feistel":
+            last = add("shuffle_init", "pv_feistel", buckets, [])
+        else:
+            last = add("shuffle_init", "init_pv", buckets, [])
+            for r in range(pcfg.rounds):
+                last = add(f"shuffle_round_r{r}", "shuffle_round",
+                           [(i, r) for i in range(nb)], [last])
+        shuffle_done = last
+        last = add("generate", "generate", buckets, [])
+        for p in (0, 1):
+            last = add(f"relabel_scatter_p{p}", "relabel_scatter",
+                       [(i, p) for i in range(nb)],
+                       [last, shuffle_done] if p == 0 else [last])
+            last = add(f"relabel_apply_p{p}", "relabel_apply",
+                       [(i, p) for i in range(nb)], [last])
+        last = add("redistribute", "redistribute", buckets, [last])
+    csr_kernel = "csr_scatter" if csr_variant == "scatter" else "csr_sorted"
+    csr_phase = add("csr_scatter" if csr_variant == "scatter" else
+                    "csr_sorted", csr_kernel, buckets, [last])
+    if fuse_walks and walks:
+        lengths = {L for (_, L, _, _) in walks}
+        if len(lengths) != 1:
+            raise ValueError(f"fuse_walks requires equal lengths, "
+                             f"got {sorted(lengths)}")
+        (L,) = lengths
+        # Matches ClusterGenerator.walk_corpus_fused dispatch exactly: one
+        # shared namespace, per-config ns suffixes w{k}_ on init/collect
+        # keys, ns-free keys on the fused hop (the WalkCfg list is not a
+        # wire arg).
+        deps_ns = "walkf:" + ";".join(
+            f"{w}:{l}:{s}:{o}" for (w, l, s, o) in walks)
+        nss = [f"w{k}_" for k in range(len(walks))]
+        per_cfg = [(i, ns) for ns in nss for i in range(nb)]
+
+        def add_fused(phase, kernel, keys, deps):
+            plan.append({"phase": phase, "kernel": kernel,
+                         "keys": keys, "deps": list(deps)})
+            return phase
+
+        last = add_fused(
+            "walk_init", "walk_init",
+            [task_key(deps_ns, "walk_init", (i,), ns=ns)
+             for i, ns in per_cfg], [csr_phase])
+        for t in range(L):
+            last = add_fused(
+                f"walk_hop_{t:04d}", "walk_hop_fused",
+                [task_key(deps_ns, "walk_hop_fused", (j, t))
+                 for j in range(nb)], [last])
+        last = add_fused(
+            "walk_hist_scatter", "walk_hist_scatter",
+            [task_key(deps_ns, "walk_hist_scatter", (i,), ns=ns)
+             for i, ns in per_cfg], [last])
+        add_fused(
+            "walk_hist_gather", "walk_hist_gather",
+            [task_key(deps_ns, "walk_hist_gather", (i,), ns=ns)
+             for i, ns in per_cfg], [last])
+        return plan
+    for (W, L, seed, out_name) in walks:
+        deps_ns = f"walk:{W}:{L}:{seed}:{out_name}"
+        wtag = deps_ns.replace(":", "_")
+        last = add(f"walk_init[{wtag}]", "walk_init", buckets, [csr_phase])
+        for t in range(L):
+            last = add(f"walk_hop_{t:04d}[{wtag}]", "walk_hop",
+                       [(j, t) for j in range(nb)], [last])
+        last = add(f"walk_hist_scatter[{wtag}]", "walk_hist_scatter",
+                   buckets, [last])
+        add(f"walk_hist_gather[{wtag}]", "walk_hist_gather", buckets, [last])
+    return plan
 
 
 class PartitionedGenerator:
@@ -1612,6 +2064,11 @@ class PartitionedGenerator:
     # bucket to its owner host's workdir.
     _shard_dir_of = None
     _shard_host_of = None
+    # Fuse generate+relabel into gen_relabel_recompute (recompute variant
+    # only): the raw-edge store is never written, so the task reads and
+    # writes NOTHING locally — the job-queue scheduler marks such tasks
+    # stealable and migrates them freely between hosts.
+    _fuse_gen_relabel = False
 
     def _submit(self, kernel: str, tasks: Sequence[Tuple]) -> List:
         """Execution strategy: run bucket-kernel tasks to completion and
@@ -1735,6 +2192,18 @@ class PartitionedGenerator:
                           lambda: self._map("relabel_recompute",
                                             [(i,) for i in range(nb)]))
 
+    def _gen_relabel_fused(self):
+        """shuffle_variant='recompute' with _fuse_gen_relabel: generate and
+        relabel in ONE kernel per bucket, regenerating edges from the RNG
+        (see gen_relabel_recompute_bucket) — no raw-edge store, no frees."""
+        nb = self.pcfg.nb
+        self._step("gen_relabel_clean",
+                   lambda: self.transport.clean_inboxes(
+                       [owned_store_name(j) for j in range(nb)]))
+        return self._step("gen_relabel_map",
+                          lambda: self._map("gen_relabel_recompute",
+                                            [(i,) for i in range(nb)]))
+
     def _redistribute(self):
         nb = self.pcfg.nb
         self._step("redistribute_clean",
@@ -1817,12 +2286,18 @@ class PartitionedGenerator:
             # Communication-free path: no shuffle (the permutation is a
             # hash family, not a store), and relabel+redistribute collapse
             # into one scan+exchange.
-            self.orchestrator.run_phase(
-                "generate",
-                lambda: self._map("generate", [(i,) for i in range(nb)]),
-                save=_MARK, load=_SKIP)
-            self._outer("relabel_recompute", self._relabel_recompute,
-                        frees=[edges_store_name(i) for i in range(nb)])
+            if self._fuse_gen_relabel:
+                # Further fusion: generate never materializes either — the
+                # relabel scan regenerates its input (bit-identical inboxes,
+                # zero local state, stealable tasks).
+                self._outer("gen_relabel", self._gen_relabel_fused)
+            else:
+                self.orchestrator.run_phase(
+                    "generate",
+                    lambda: self._map("generate", [(i,) for i in range(nb)]),
+                    save=_MARK, load=_SKIP)
+                self._outer("relabel_recompute", self._relabel_recompute,
+                            frees=[edges_store_name(i) for i in range(nb)])
         else:
             self._outer("shuffle", self._shuffle)
             self.orchestrator.run_phase(
@@ -1898,3 +2373,26 @@ class PartitionedGenerator:
                            shard_host_of=self._shard_host_of,
                            fine_phases=self._fine_phases)
         return ShardedWalks(path)
+
+    def walk_corpus_fused(self, specs: Sequence[Tuple[int, int, int, str]],
+                          checkpoint: bool = False) -> List[ShardedWalks]:
+        """Several corpora in one pass: `specs` is a list of
+        (num_walkers, length, seed, out_name) tuples — all lengths equal —
+        and every hop advances ALL of them through one CSR scan per bucket
+        (drive_walks_fused / walk_hop_fused_bucket).  Each returned corpus
+        is bit-identical to the corresponding walk_corpus() call; the k
+        configs share the offv/adjv read instead of each paying it."""
+        wcfgs = [WalkCfg(num_walkers=w, length=l, seed=s, out_name=o,
+                         ns=f"w{k}_")
+                 for k, (w, l, s, o) in enumerate(specs)]
+        orch = PhaseOrchestrator(
+            self.workdir, self.ledger, checkpoint=checkpoint,
+            state_name="walk_fused_phases.json",
+            config_key=repr((result_config_key(self.pcfg), tuple(wcfgs))),
+            keep_all=self.keep_all, stats=self.exchange_stats)
+        paths = drive_walks_fused(self.pcfg, self.workdir, wcfgs, self._map,
+                                  orch, transport=self.transport,
+                                  shard_dir_of=self._shard_dir_of,
+                                  shard_host_of=self._shard_host_of,
+                                  fine_phases=self._fine_phases)
+        return [ShardedWalks(p) for p in paths]

@@ -108,27 +108,34 @@ def sweep_partial_frames(workdir: str) -> None:
 
     Shared resume sweep: PhaseOrchestrator calls this next to
     clean_cascade_stores so a resumed run starts from complete runs only —
-    the socket twin of sweeping stale `{sender}_{seq}` files.  Store
-    directories are flat children of the workdir; attach() already ignores
-    non-`.npy` names, so this is hygiene plus disk reclamation, never
-    correctness-by-luck.
+    the socket twin of sweeping stale `{sender}_{seq}` files.  The walk is
+    fully recursive because namespaced exchanges (one `job...` subdir per
+    queued job) nest store directories one level deeper than the flat
+    layout; attach() already ignores non-`.npy` names, so this is hygiene
+    plus disk reclamation, never correctness-by-luck.
     """
     if not os.path.isdir(workdir):
         return
-    for entry in os.listdir(workdir):
-        p = os.path.join(workdir, entry)
-        if entry.endswith(PART_SUFFIX) and os.path.isfile(p):
-            os.unlink(p)
-        elif os.path.isdir(p):
-            for f in os.listdir(p):
-                if f.endswith(PART_SUFFIX):
-                    os.unlink(os.path.join(p, f))
+    for root, _dirs, files in os.walk(workdir):
+        for f in files:
+            if f.endswith(PART_SUFFIX):
+                os.unlink(os.path.join(root, f))
 
 
 def _check_store_name(name: str) -> str:
     if not name or os.sep in name or (os.altsep and os.altsep in name) \
             or name in (".", "..") or name.startswith("."):
         raise TransportError(f"illegal store name in frame: {name!r}")
+    return name
+
+
+def _check_subdir(name: str) -> str:
+    """Validate a frame's exchange-namespace component: one path segment,
+    same character discipline as store names (a namespaced inbox lives at
+    `<workdir>/<subdir>/<store>`, never deeper, never outside)."""
+    if not name or os.sep in name or (os.altsep and os.altsep in name) \
+            or name in (".", "..") or name.startswith("."):
+        raise TransportError(f"illegal exchange namespace in frame: {name!r}")
     return name
 
 
@@ -317,6 +324,8 @@ class _SocketChannel:
             "rows": int(arr.shape[0]),
             "ncols": int(arr.shape[1]),
         }
+        if self._tr.namespace is not None:
+            meta["subdir"] = self._tr.namespace
         # Flat byte view (len() of a 2-D memoryview counts ROWS, not bytes);
         # zero-copy when contiguous, which np.stack output always is.
         payload = (memoryview(arr).cast("B") if arr.flags.c_contiguous
@@ -339,19 +348,28 @@ class SocketTransport(Transport):
     `peers[d]` is the "host:port" of the ExchangeServer owning bucket d.
     Inbox drains read the local filesystem (this process must be colocated
     with the server that owns its buckets — on one host, every process is).
+
+    `namespace` scopes every frame to a per-job inbox subdirectory at the
+    receiver (`<server workdir>/<namespace>/<store>`): concurrent jobs from
+    the queue share one ExchangeServer per host without their same-named
+    inboxes (edges, owned, walk frontiers) ever colliding.  The sender's
+    own `workdir` is already the namespaced job directory, so drains stay
+    symmetric with receives.
     """
 
     kind = "socket"
 
     def __init__(self, workdir: str, ledger: IOLedger,
                  gauge: Optional[MemoryGauge] = None,
-                 peers: Sequence[str] = ()):
+                 peers: Sequence[str] = (),
+                 namespace: Optional[str] = None):
         if not peers:
             raise ValueError("SocketTransport needs one peer address per bucket")
         self.workdir = workdir
         self.ledger = ledger
         self.gauge = gauge if gauge is not None else MemoryGauge()
         self.peers = tuple(str(p) for p in peers)
+        self.namespace = _check_subdir(namespace) if namespace else None
         self.stats = TransportStats()
         self._conns: Dict[str, List] = {}   # addr -> [socket, next_seq]
 
@@ -407,8 +425,23 @@ class SocketTransport(Transport):
             return
         for addr in dict.fromkeys(self.peers):   # distinct, stable order
             for lo in range(0, len(names), self._CLEAN_BATCH):
-                self._rpc(addr, _KIND_CLEAN,
-                          {"stores": names[lo : lo + self._CLEAN_BATCH]})
+                meta = {"stores": names[lo : lo + self._CLEAN_BATCH]}
+                if self.namespace is not None:
+                    meta["subdir"] = self.namespace
+                self._rpc(addr, _KIND_CLEAN, meta)
+
+    def purge_namespace(self) -> None:
+        """Remove THIS transport's entire namespace subdirectory on every
+        peer server (and locally): the dead-letter GC — a job parked after
+        exhausting its lease budget must not leave partial stores behind.
+        Only meaningful on a namespaced transport; the wire op is refused by
+        the server otherwise (an un-namespaced purge would be `rm -rf` of
+        the host workdir)."""
+        if self.namespace is None:
+            raise TransportError("purge_namespace needs a namespaced transport")
+        for addr in dict.fromkeys(self.peers):
+            self._rpc(addr, _KIND_CLEAN,
+                      {"stores": [], "subdir": self.namespace, "purge": True})
 
     def close(self) -> None:
         for ent in self._conns.values():
@@ -554,8 +587,18 @@ class ExchangeServer:
         if kind == _KIND_DATA:
             self._handle_data(meta, payload)
         elif kind == _KIND_CLEAN:
+            root = self.workdir
+            if meta.get("subdir") is not None:
+                root = os.path.join(root, _check_subdir(str(meta["subdir"])))
+            if meta.get("purge"):
+                # Whole-namespace removal (dead-letter GC).  Refused without
+                # a subdir: an un-scoped purge would be the host workdir.
+                if meta.get("subdir") is None:
+                    raise TransportError("purge frame without a namespace")
+                shutil.rmtree(root, ignore_errors=True)
+                return
             for name in meta["stores"]:
-                clean_store(self.workdir, _check_store_name(name))
+                clean_store(root, _check_store_name(name))
         else:
             raise TransportError(f"unknown frame kind {kind}")
 
@@ -571,7 +614,10 @@ class ExchangeServer:
                 f"payload length {len(payload)} != rows*ncols*itemsize "
                 f"({rows}x{ncols}x{dtype.itemsize}) — truncated frame")
         arr = np.frombuffer(payload, dtype=dtype).reshape(rows, ncols)
-        store_dir = os.path.join(self.workdir, name)
+        root = self.workdir
+        if meta.get("subdir") is not None:
+            root = os.path.join(root, _check_subdir(str(meta["subdir"])))
+        store_dir = os.path.join(root, name)
         os.makedirs(store_dir, exist_ok=True)
         final = os.path.join(store_dir, f"run_{tag}.npy")
         part = final + PART_SUFFIX
@@ -657,5 +703,7 @@ def make_transport(pcfg, workdir: str, ledger: IOLedger,
                 "transport='socket' needs peer_addrs (one ExchangeServer "
                 "address per bucket) — use PartitionedGenerator, which "
                 "starts loopback servers and plumbs their addresses through")
-        return SocketTransport(workdir, ledger, gauge, peers=peers)
+        return SocketTransport(workdir, ledger, gauge, peers=peers,
+                               namespace=getattr(pcfg, "exchange_namespace",
+                                                 None))
     raise ValueError(f"unknown transport {kind!r} (expected 'fs' or 'socket')")

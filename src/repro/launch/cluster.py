@@ -47,9 +47,52 @@ Training then streams straight from the sharded corpus manifest:
        PYTHONPATH=src python -m repro.launch.train --data external \
            --corpus-manifest /tmp/cluster/ctrl/walks_manifest.json --seq 16
 
+4. Many graphs through one fleet — the multi-tenant job queue.  `submit`
+   appends jobs to <workdir>/ctrl/jobqueue.json (no cluster needed);
+   `drain` launches the hosts once and runs every queued job
+   concurrently, work-stealing style:
+
+       PYTHONPATH=src python -m repro.launch.cluster submit \
+           --workdir /tmp/cluster --scale 12 --nb 4 --recompute \
+           --walks 1024:16:0:walks.npy
+       PYTHONPATH=src python -m repro.launch.cluster submit \
+           --workdir /tmp/cluster --scale 13 --nb 4 --recompute --seed 7
+       PYTHONPATH=src python -m repro.launch.cluster queue \
+           --workdir /tmp/cluster
+       PYTHONPATH=src python -m repro.launch.cluster drain \
+           --workdir /tmp/cluster --hosts 2 --max-concurrent 2
+
+   Scheduling vocabulary (measured per drain in the summary JSON and in
+   benchmarks/bench_jobqueue.py):
+
+   - LEASE: hosts PULL tasks — a poll hands out at most `--lease-size`
+     tasks from the host's own queue (0 = the whole queue).  Control
+     cost is one ~hundreds-of-bytes header frame per poll/report, never
+     per-byte-of-data; leases only bound BATCHING, placement of
+     data-bearing tasks stays with the bucket owner.
+   - STEAL: an idle host with an empty queue takes stealable tasks
+     (communication-free recompute kernels — no local inputs) from the
+     tail of the longest peer queue, so one job's straggler never idles
+     the fleet.  `steals` in the drain summary counts migrations.
+   - OVERLAP FACTOR: serial_makespan / queued_makespan for the same job
+     set — >1 means independent jobs' I/O and exchange phases really
+     did interleave; `utilization` (busy-seconds / fleet-seconds) is
+     the same effect as a ratio.
+   - DEAD-LETTER: a task failing deterministically past `--lease-budget`
+     dispatches parks its JOB (queue keeps draining, partial stores
+     GC'd) — bulkhead semantics, one poisoned job can't wedge the rest.
+   - Walk specs W:L:seed:out submitted together with `--fuse-walks`
+     advance through ONE CSR scan per hop (walk_hop_fused), k corpora
+     for one read pass.
+
+   Every job's artifacts stay bit-identical to a serial single-job run;
+   each job's stores live under the job's namespace subdir of every host
+   workdir plus <ctrl>/<job tag>/ for manifests and checkpoints.
+
 Subcommands: `host` (the worker daemon an exec backend or an operator
 starts), `run` (controller + hosts end to end), `spec` (emit a ClusterSpec
-JSON for external orchestration).
+JSON for external orchestration), `submit`/`queue`/`drain` (the job
+queue).
 """
 
 from __future__ import annotations
@@ -67,6 +110,7 @@ from ..core.cluster import (
     HostSpec,
     LocalExecBackend,
 )
+from ..core.jobqueue import JobScheduler, load_state, submit_job
 from ..core.types import GraphConfig
 
 
@@ -134,6 +178,67 @@ def cmd_run(args) -> int:
         gen.close()
 
 
+def _parse_walk_spec(s: str):
+    parts = s.split(":")
+    if len(parts) != 4:
+        raise SystemExit(f"walk spec {s!r} is not W:L:seed:out_name")
+    return (int(parts[0]), int(parts[1]), int(parts[2]), parts[3])
+
+
+def _queue_root(args) -> str:
+    return os.path.join(os.path.abspath(args.workdir), "ctrl")
+
+
+def cmd_submit(args) -> int:
+    cfg = GraphConfig(scale=args.scale, nb=args.nb,
+                      edge_factor=args.edge_factor,
+                      chunk_edges=args.chunk_edges, seed=args.seed,
+                      shuffle_variant=("recompute" if args.recompute
+                                       else "external"),
+                      transport="socket", merge_fanin=args.merge_fanin)
+    job = submit_job(_queue_root(args), cfg, csr_variant=args.csr_variant,
+                     walks=[_parse_walk_spec(w) for w in args.walks],
+                     fuse_walks=args.fuse_walks,
+                     fuse_gen_relabel=args.fuse_gen_relabel,
+                     name=args.name)
+    print(json.dumps({"job": job.tag, "name": job.name,
+                      "tasks": job.num_tasks, "phases": len(job.plan)}))
+    return 0
+
+
+def cmd_queue(args) -> int:
+    state = load_state(_queue_root(args))
+    for d in state["jobs"]:
+        print(f"{d['job_id']:>6} {d.get('name', ''):<16} "
+              f"{d['status']:<8} "
+              f"{sum(len(p['keys']) for p in d.get('plan', [])):>5} tasks  "
+              f"{d.get('error', '')}")
+    for dl in state["dead_letters"]:
+        print(f"[dead-letter] {dl['job']}: {dl['task_key']} "
+              f"after {dl['attempts']} attempt(s)")
+    return 0
+
+
+def cmd_drain(args) -> int:
+    spec = _build_spec(args)
+    backend = (CommandTemplateBackend(args.template) if args.template
+               else LocalExecBackend(workers=args.workers))
+    sched = JobScheduler(spec, _queue_root(args), backend=backend,
+                         max_concurrent=args.max_concurrent,
+                         lease_size=args.lease_size,
+                         lease_budget=args.lease_budget,
+                         max_restarts=args.max_restarts,
+                         barrier_timeout=args.barrier_timeout,
+                         checkpoint=not args.no_checkpoint,
+                         advertise=args.advertise or None)
+    try:
+        summary = sched.drain()
+        print(json.dumps(summary, indent=1))
+        return 0 if not summary["dead_letters"] else 2
+    finally:
+        sched.close()
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser(prog="repro.launch.cluster")
     sub = ap.add_subparsers(dest="cmd", required=True)
@@ -194,6 +299,52 @@ def main(argv=None) -> int:
     r.add_argument("--barrier-timeout", type=float, default=600.0)
     r.add_argument("--no-checkpoint", action="store_true")
     r.set_defaults(fn=cmd_run)
+
+    sb = sub.add_parser("submit", help="append one job to the queue "
+                                       "(no cluster needed)")
+    sb.add_argument("--workdir", required=True)
+    sb.add_argument("--nb", type=int, default=4)
+    sb.add_argument("--scale", type=int, default=12)
+    sb.add_argument("--edge-factor", type=int, default=4)
+    sb.add_argument("--chunk-edges", type=int, default=1 << 14)
+    sb.add_argument("--seed", type=int, default=0x5EED_1234)
+    sb.add_argument("--merge-fanin", type=int, default=64)
+    sb.add_argument("--recompute", action="store_true",
+                    help="shuffle_variant='recompute' (makes generation "
+                         "tasks stealable)")
+    sb.add_argument("--fuse-gen-relabel", action="store_true",
+                    help="one fused regenerate+relabel barrier "
+                         "(recompute only)")
+    sb.add_argument("--csr-variant", choices=("sorted", "scatter"),
+                    default="sorted")
+    sb.add_argument("--walks", action="append", default=[],
+                    metavar="W:L:seed:out",
+                    help="walk corpus spec; repeatable")
+    sb.add_argument("--fuse-walks", action="store_true",
+                    help="advance all this job's corpora through one CSR "
+                         "scan per hop")
+    sb.add_argument("--name", default="")
+    sb.set_defaults(fn=cmd_submit)
+
+    q = sub.add_parser("queue", help="print queue + dead-letter state")
+    q.add_argument("--workdir", required=True)
+    q.set_defaults(fn=cmd_queue)
+
+    d = sub.add_parser("drain", parents=[common],
+                       help="launch hosts once, run every queued job "
+                            "(work-stealing, overlapped)")
+    d.add_argument("--max-concurrent", type=int, default=2)
+    d.add_argument("--lease-size", type=int, default=2,
+                   help="tasks handed out per host poll (0 = whole queue)")
+    d.add_argument("--lease-budget", type=int, default=2,
+                   help="dispatches a deterministically failing task gets "
+                        "before its job dead-letters")
+    d.add_argument("--workers", type=int, default=0)
+    d.add_argument("--template", default="")
+    d.add_argument("--max-restarts", type=int, default=1)
+    d.add_argument("--barrier-timeout", type=float, default=600.0)
+    d.add_argument("--no-checkpoint", action="store_true")
+    d.set_defaults(fn=cmd_drain)
 
     args = ap.parse_args(argv)
     return args.fn(args)

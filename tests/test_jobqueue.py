@@ -1,0 +1,433 @@
+"""Multi-tenant job queue: work-stealing scheduler, fused walk batches,
+dead-letter parking, lease re-dispatch after a host kill, and the
+cluster-runtime bugfix sweep (derived heartbeat period, condition-variable
+barriers with idle CPU, structured retry-exhaustion errors).
+
+The acceptance contract: a 2-host queue of >= 3 concurrent jobs produces
+bit-identical CSR + corpus artifacts to the same jobs run serially, a
+poisoned job dead-letters after its lease budget while the rest drain and
+its partial stores are GC'd, and a killed host's leased tasks re-dispatch
+without re-running any completed task.
+"""
+
+import hashlib
+import json
+import os
+import subprocess
+import sys
+import time
+
+import numpy as np
+import pytest
+
+import repro
+from repro.core.cluster import (
+    ClusterGenerator,
+    ClusterSpec,
+    LocalExecBackend,
+    TaskError,
+    heartbeat_period,
+)
+from repro.core.corpus import ShardedWalks, manifest_name
+from repro.core.jobqueue import (
+    JobScheduler,
+    JobSpec,
+    load_state,
+    submit_job,
+)
+from repro.core.phases import (
+    PartitionedGenerator,
+    phase_task_plan,
+    plain_config,
+)
+from repro.core.types import GraphConfig
+
+_SRC = os.path.dirname(os.path.dirname(os.path.abspath(repro.__file__)))
+_ENV = {"PYTHONPATH": _SRC}
+
+CFG = GraphConfig(scale=8, nb=4, chunk_edges=256, edge_factor=4,
+                  shuffle_variant="recompute", transport="socket")
+JOBS = [
+    dict(cfg=CFG.with_(seed=1), fuse_gen_relabel=True, fuse_walks=True,
+         walks=[(8, 3, 1, "a.npy"), (8, 3, 2, "b.npy")]),
+    dict(cfg=CFG.with_(seed=2), walks=[(8, 3, 7, "c.npy")]),
+    dict(cfg=CFG.with_(scale=9, seed=3), fuse_gen_relabel=True, walks=[]),
+]
+
+
+def _sha_file(path):
+    with open(path, "rb") as f:
+        return hashlib.sha256(f.read()).hexdigest()
+
+
+def _sha_csr(manifest_path):
+    with open(manifest_path) as f:
+        m = json.load(f)
+    h = hashlib.sha256()
+    for b in m["buckets"]:
+        for k in ("offv", "adjv"):
+            h.update(_sha_file(os.path.join(b["workdir"], b[k])).encode())
+    return h.hexdigest()
+
+
+def _sha_corpus(manifest_path):
+    arr = np.ascontiguousarray(np.array(ShardedWalks(manifest_path)))
+    return hashlib.sha256(arr.tobytes()).hexdigest()
+
+
+def _artifacts(ctrl_dir, jobdef, tag):
+    wd = os.path.join(ctrl_dir, tag)
+    out = {"csr": _sha_csr(os.path.join(wd, "graph_manifest.json"))}
+    for (_, _, _, o) in jobdef.get("walks", []):
+        out[o] = _sha_corpus(os.path.join(wd, manifest_name(o)))
+    return out
+
+
+def _scheduler(root, backend=None, **kw):
+    spec = ClusterSpec.local(2, os.path.join(root, "hosts"), nb=CFG.nb)
+    kw.setdefault("heartbeat_timeout", 20.0)
+    return JobScheduler(spec, os.path.join(root, "ctrl"),
+                        backend=backend if backend is not None
+                        else LocalExecBackend(env=_ENV), **kw)
+
+
+def _submit_all(sched, jobs=JOBS):
+    return [sched.submit(j["cfg"], walks=j.get("walks", ()),
+                         fuse_walks=j.get("fuse_walks", False),
+                         fuse_gen_relabel=j.get("fuse_gen_relabel", False))
+            for j in jobs]
+
+
+class _KillHost1First(LocalExecBackend):
+    """Crash injection: host 1's FIRST launch dies hard (os._exit) after
+    executing a handful of tasks — mid-lease, like kill -9."""
+
+    def __init__(self, max_tasks=6):
+        super().__init__(env=_ENV)
+        self.max_tasks = max_tasks
+
+    def host_args(self, host, attempt):
+        if host.host_id == 1 and attempt == 0:
+            return ["--max-tasks", str(self.max_tasks)]
+        return []
+
+
+# ---------------------------------------------------------------------------
+# bugfix sweep units
+# ---------------------------------------------------------------------------
+
+
+def test_heartbeat_period_derived_and_clamped():
+    """timeout/8, clamped to [0.2, 15]: short-timeout tests don't flap,
+    long-timeout deployments don't spam the control socket (the old code
+    hard-coded 2.0s for every timeout)."""
+    assert heartbeat_period(16.0) == 2.0
+    assert heartbeat_period(60.0) == 7.5
+    assert heartbeat_period(0.5) == 0.2      # floor
+    assert heartbeat_period(1e6) == 15.0     # ceiling
+    assert heartbeat_period(8 * 0.2) * 8 <= 8 * 0.2 + 1e-9
+
+
+def test_task_error_is_structured_and_job_scoped():
+    e = TaskError("task k failed", task_key="gen:generate:3", attempts=2,
+                  job="job0007")
+    assert e.task_key == "gen:generate:3"
+    assert e.attempts == 2
+    assert e.job == "job0007"
+    from repro.core.cluster import ClusterError
+    assert isinstance(e, ClusterError)   # schedulers catch the subclass
+
+
+def test_lease_steals_only_migratable_tail_tasks(tmp_path):
+    """The work-stealing discipline on a bare controller: an idle host's
+    lease first drains its own queue head; only then does it steal, taking
+    stealable tasks from the longest victim queue's TAIL while leaving the
+    owner-bound tasks in their original order."""
+    from repro.core.cluster import ClusterController
+    spec = ClusterSpec.local(2, str(tmp_path), nb=CFG.nb)
+    ctl = ClusterController(spec, backend=None, lease_size=2)
+    try:
+        def _task(tid, owner, stealable):
+            return {"id": tid, "key": f"k{tid}", "kernel": "x", "args": (),
+                    "attempt": 0, "job": "job0000", "stealable": stealable,
+                    "owner": owner}
+        with ctl._lock:
+            ctl._queues[1].extend(_task(t, 1, s) for t, s in
+                                  ((0, False), (1, True), (2, False),
+                                   (3, True), (4, True)))
+            # own work first: host 1 pops its head, nothing counts as stolen
+            lease = ctl._lease_locked(1)
+            assert [t["id"] for t in lease] == [0, 1] and ctl.steals == 0
+            # idle host 0 steals from the tail, skipping owner-bound task 2
+            lease = ctl._lease_locked(0)
+            assert [t["id"] for t in lease] == [4, 3]
+            assert ctl.steals == 2
+            assert set(ctl._inflight[0]) == {3, 4}
+            assert [t["id"] for t in ctl._queues[1]] == [2]
+            # nothing stealable left: host 0 comes up empty, no churn
+            assert ctl._lease_locked(0) == [] and ctl.steals == 2
+    finally:
+        ctl.stop()
+
+
+def test_phase_task_plan_shapes_and_rejections():
+    pcfg = plain_config(CFG)
+    plan = phase_task_plan(pcfg, walks=[(8, 3, 1, "a.npy")])
+    phases = [p["phase"] for p in plan]
+    assert phases[0] == "generate" and "csr_sorted" in phases
+    for p in plan:
+        for d in p["deps"]:
+            assert phases.index(d) < phases.index(p["phase"])
+    # fused: one walk_hop_fused barrier per hop regardless of corpus count
+    fused = phase_task_plan(pcfg, walks=[(8, 3, 1, "a.npy"),
+                                         (8, 3, 2, "b.npy")],
+                            fuse_walks=True, fuse_gen_relabel=True)
+    hop = [p for p in fused if p["phase"] == "walk_hop_0000"]
+    assert len(hop) == 1 and len(hop[0]["keys"]) == pcfg.nb
+    init = next(p for p in fused if p["phase"] == "walk_init")
+    assert len(init["keys"]) == 2 * pcfg.nb       # one per (config, bucket)
+    assert any(k.endswith(":w1_") for k in init["keys"])
+    with pytest.raises(ValueError, match="pooled_cascade"):
+        phase_task_plan(plain_config(CFG.with_(pooled_cascade=True)))
+    with pytest.raises(ValueError, match="equal lengths"):
+        phase_task_plan(pcfg, walks=[(8, 3, 1, "a.npy"), (8, 4, 2, "b.npy")],
+                        fuse_walks=True)
+    with pytest.raises(ValueError, match="recompute"):
+        phase_task_plan(plain_config(CFG.with_(shuffle_variant="external")),
+                        fuse_gen_relabel=True)
+
+
+def test_submit_persists_and_round_trips(tmp_path):
+    root = str(tmp_path)
+    j = submit_job(root, CFG, walks=[(8, 3, 1, "a.npy")], fuse_walks=False,
+                   name="first")
+    assert j.job_id == 0 and j.tag == "job0000"
+    j2 = submit_job(root, CFG.with_(seed=9))
+    assert j2.job_id == 1
+    state = load_state(root)
+    back = [JobSpec.from_json(d) for d in state["jobs"]]
+    assert [b.tag for b in back] == ["job0000", "job0001"]
+    assert back[0].name == "first" and back[0].status == "queued"
+    assert back[0].num_tasks == j.num_tasks > 0
+    assert back[0].plan == j.plan
+
+
+# ---------------------------------------------------------------------------
+# fused corpora parity (single host — the fusion itself, no cluster)
+# ---------------------------------------------------------------------------
+
+
+def test_fused_walks_and_gen_relabel_bit_identical(tmp_path):
+    """walk_corpus_fused: k corpora through one CSR scan per hop, each
+    bit-identical to its own walk_corpus run; fused gen_relabel matches the
+    two-phase recompute pipeline."""
+    specs = [(12, 4, 3, "s3.npy"), (12, 4, 5, "s5.npy"), (12, 4, 9, "s9.npy")]
+    ref = {}
+    with PartitionedGenerator(CFG.with_(transport="fs"), str(tmp_path / "r"),
+                              max_workers=0) as part:
+        csr, _ = part.run()
+        ref_sha = hashlib.sha256(
+            b"".join(np.asarray(x).tobytes() for o, a in csr
+                     for x in (o, a))).hexdigest()
+        for (w, l, s, o) in specs:
+            ref[o] = np.asarray(part.walk_corpus(w, l, seed=s,
+                                                 out_name=o)).copy()
+    gen = PartitionedGenerator(CFG.with_(transport="fs"), str(tmp_path / "f"),
+                               max_workers=0)
+    gen._fuse_gen_relabel = True
+    with gen:
+        csr2, _ = gen.run()
+        assert hashlib.sha256(
+            b"".join(np.asarray(x).tobytes() for o, a in csr2
+                     for x in (o, a))).hexdigest() == ref_sha
+        for w, (_, _, _, o) in zip(gen.walk_corpus_fused(specs), specs):
+            np.testing.assert_array_equal(np.array(w), ref[o])
+
+
+# ---------------------------------------------------------------------------
+# acceptance: 3-job concurrent queue == serial, on 2 hosts
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_three_job_queue_bit_identical_to_serial(tmp_path):
+    sched = _scheduler(str(tmp_path / "q"), max_concurrent=3, lease_size=2)
+    try:
+        jobs = _submit_all(sched)
+        summary = sched.drain()
+        assert [j["status"] for j in summary["jobs"]] == ["done"] * 3
+        assert summary["utilization"] > 0
+        queued = {j.tag: _artifacts(sched.root, d, j.tag)
+                  for j, d in zip(jobs, JOBS)}
+        # concurrent jobs really did overlap on the shared fleet
+        log_jobs = {e["job"] for e in sched.controller.task_log}
+        assert log_jobs == {j.tag for j in jobs}
+    finally:
+        sched.close()
+
+    # serial oracle: each job alone on its own fresh 2-host cluster
+    for k, d in enumerate(JOBS):
+        spec = ClusterSpec.local(2, str(tmp_path / f"s{k}" / "hosts"),
+                                 nb=CFG.nb)
+        gen = ClusterGenerator(d["cfg"], spec,
+                               str(tmp_path / f"s{k}" / "ctrl"),
+                               backend=LocalExecBackend(env=_ENV),
+                               heartbeat_timeout=20.0)
+        try:
+            mp, _ = gen.run()
+            serial = {"csr": _sha_csr(mp)}
+            for (W, L, s, o) in d.get("walks", []):
+                w = gen.walk_corpus(W, L, seed=s, out_name=o)
+                serial[o] = hashlib.sha256(np.ascontiguousarray(
+                    np.array(w)).tobytes()).hexdigest()
+        finally:
+            gen.close()
+        assert queued[f"job{k:04d}"] == serial, f"job{k:04d} diverged"
+
+
+# ---------------------------------------------------------------------------
+# dead-letter parking + GC (poisoned task)
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_poisoned_job_dead_letters_fleet_drains_and_gc(tmp_path):
+    """A job whose CSR kernel raises deterministically (csr 'scatter' under
+    the feistel family) burns its lease budget, lands in the dead-letter
+    queue with the task key + attempt count, the OTHER jobs drain to done,
+    and the dead job's partial stores are GC'd on every host and the
+    controller."""
+    sched = _scheduler(str(tmp_path), max_concurrent=3, lease_budget=2)
+    try:
+        good = _submit_all(sched, JOBS[:2])
+        bad = sched.submit(CFG.with_(seed=13), csr_variant="scatter")
+        summary = sched.drain()
+        by_tag = {j["job"]: j["status"] for j in summary["jobs"]}
+        assert by_tag[bad.tag] == "dead"
+        assert all(by_tag[j.tag] == "done" for j in good)
+        (dl,) = summary["dead_letters"]
+        assert dl["job"] == bad.tag
+        assert dl["attempts"] == 2                 # the lease budget, spent
+        assert "csr_scatter" in dl["task_key"]
+        # queue state persisted the park
+        state = load_state(sched.root)
+        assert state["dead_letters"] == summary["dead_letters"]
+        # GC: the poisoned job's namespace subdir is gone on every host
+        # (generation completed before the CSR phase poisoned it, so
+        # partials HAD been written) and on the controller.
+        for h in sched.spec.hosts:
+            assert not os.path.exists(os.path.join(h.workdir, bad.tag))
+        assert not os.path.exists(os.path.join(sched.root, bad.tag))
+        # the survivors' artifacts are intact
+        for j, d in zip(good, JOBS[:2]):
+            _artifacts(sched.root, d, j.tag)
+    finally:
+        sched.close()
+
+
+# ---------------------------------------------------------------------------
+# lease re-dispatch after a host kill — no completed task re-runs
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_killed_host_leases_redispatch_without_rerunning_done_work(tmp_path):
+    """Host 1 dies hard mid-lease; its inflight tasks requeue to their owner,
+    the relaunch resumes from checkpoints, all jobs finish bit-identical —
+    and no task key that completed fresh ever executes fresh again."""
+    sched = _scheduler(str(tmp_path / "q"), backend=_KillHost1First(),
+                       max_concurrent=3, max_restarts=1)
+    try:
+        jobs = _submit_all(sched)
+        summary = sched.drain()
+        assert [j["status"] for j in summary["jobs"]] == ["done"] * 3
+        assert sched.controller.restarts[1] == 1
+        fresh = {}
+        for e in sched.controller.task_log:
+            if e["ok"] and not e["resumed"]:
+                k = (e["job"], e["key"])   # keys repeat across jobs by design
+                fresh[k] = fresh.get(k, 0) + 1
+        rerun = {k: n for k, n in fresh.items() if n > 1}
+        assert not rerun, f"completed tasks re-ran fresh: {rerun}"
+        queued = {j.tag: _artifacts(sched.root, d, j.tag)
+                  for j, d in zip(jobs, JOBS)}
+    finally:
+        sched.close()
+    # parity against an unkilled queue run of the same jobs
+    ref = _scheduler(str(tmp_path / "r"), max_concurrent=3)
+    try:
+        rjobs = _submit_all(ref)
+        ref.drain()
+        for j, d in zip(rjobs, JOBS):
+            assert _artifacts(ref.root, d, j.tag) == queued[j.tag]
+    finally:
+        ref.close()
+
+
+# ---------------------------------------------------------------------------
+# idle CPU (the busy-poll bugfix, measured)
+# ---------------------------------------------------------------------------
+
+
+def _proc_cpu_seconds(pid):
+    with open(f"/proc/{pid}/stat") as f:
+        parts = f.read().rsplit(") ", 1)[1].split()
+    # utime + stime, fields 14/15 of /proc/pid/stat (0-indexed 11/12 after
+    # the comm field)
+    return (int(parts[11]) + int(parts[12])) / os.sysconf("SC_CLK_TCK")
+
+
+@pytest.mark.slow
+@pytest.mark.skipif(not os.path.exists("/proc/self/stat"),
+                    reason="needs /proc")
+def test_idle_cluster_burns_no_cpu(tmp_path):
+    """2 live hosts + controller, zero queued tasks, for 2 wall seconds:
+    the condition-variable barriers and long-poll leases must leave the
+    whole fleet asleep (the old 20ms busy-polls burned a core per
+    waiter)."""
+    sched = _scheduler(str(tmp_path), max_concurrent=2)
+    try:
+        pids = [h.pid for h in sched.controller._handles.values()]
+        t0_self = time.process_time()
+        t0_hosts = sum(_proc_cpu_seconds(p) for p in pids)
+        time.sleep(2.0)
+        d_self = time.process_time() - t0_self
+        d_hosts = sum(_proc_cpu_seconds(p) for p in pids) - t0_hosts
+        assert d_self < 0.4, f"controller burned {d_self:.2f}s CPU while idle"
+        assert d_hosts < 0.6, f"hosts burned {d_hosts:.2f}s CPU while idle"
+    finally:
+        sched.close()
+
+
+# ---------------------------------------------------------------------------
+# CLI: submit -> queue -> drain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_jobqueue_cli_end_to_end(tmp_path):
+    root = str(tmp_path / "cli")
+    env = dict(os.environ, **_ENV)
+
+    def cli(*args, timeout=300):
+        return subprocess.run(
+            [sys.executable, "-m", "repro.launch.cluster", *args],
+            env=env, capture_output=True, text=True, timeout=timeout)
+
+    s1 = cli("submit", "--workdir", root, "--scale", "8", "--nb", "4",
+             "--chunk-edges", "256", "--recompute", "--fuse-gen-relabel",
+             "--walks", "8:3:1:a.npy", "--walks", "8:3:2:b.npy",
+             "--fuse-walks")
+    s2 = cli("submit", "--workdir", root, "--scale", "9", "--nb", "4",
+             "--chunk-edges", "256", "--recompute")
+    assert s1.returncode == 0 and s2.returncode == 0, s1.stderr + s2.stderr
+    q = cli("queue", "--workdir", root)
+    assert "queued" in q.stdout and "scale9" in q.stdout
+    d = cli("drain", "--workdir", root, "--hosts", "2", "--nb", "4",
+            "--max-concurrent", "2")
+    assert d.returncode == 0, d.stderr[-2000:]
+    summary = json.loads(d.stdout[d.stdout.index("{"):])
+    assert [j["status"] for j in summary["jobs"]] == ["done", "done"]
+    walks = ShardedWalks(os.path.join(root, "ctrl", "job0000",
+                                      "a_manifest.json"))
+    assert np.asarray(walks).shape == (8, 4)
