@@ -19,6 +19,10 @@ One module per paper table/figure (DESIGN.md §6):
   bench_jobqueue        multi-tenant job queue: serial vs work-stealing
                         drain of the same job batch on a 2-host cluster —
                         makespan, utilization, overlap factor, parity
+  bench_skew            skew-aware shard map: static contiguous ownership
+                        vs barrier-time rebalancing of a skewed RMAT on a
+                        2-host cluster — hot-host byte share, migrations,
+                        per-bucket ledger bytes, parity
   bench_lm              substrate sanity: train/serve throughput
   bench_roofline        deliverable (g): render the dry-run roofline table
 """
@@ -56,8 +60,8 @@ def main():
     from . import (bench_csr_variants, bench_external_shuffle,
                    bench_external_walks, bench_hash_vs_sort, bench_jobqueue,
                    bench_lm, bench_merge_fanin, bench_roofline,
-                   bench_single_node, bench_strong_scaling, bench_transport,
-                   bench_weak_scaling)
+                   bench_single_node, bench_skew, bench_strong_scaling,
+                   bench_transport, bench_weak_scaling)
 
     benches = {
         "single_node": lambda: bench_single_node.run(
@@ -88,6 +92,11 @@ def main():
         # a fast point would benchmark the scheduler's floor, not its win.
         "jobqueue": lambda: bench_jobqueue.run(
             scale=9, walkers=32, length=6),
+        # one point, no fast variant: the byte-balance gate needs enough
+        # skewed bytes for a strict-improvement migration to exist, and
+        # scale 10 already runs in CI time.
+        "skew": lambda: bench_skew.run(
+            scale=10, walkers=64, length=6),
         "external_walks": lambda: bench_external_walks.run(
             scales=(9, 10) if args.fast else (10, 12, 14),
             walkers=64 if args.fast else 256,

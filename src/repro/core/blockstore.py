@@ -37,6 +37,7 @@ import dataclasses
 import heapq
 import json
 import os
+import re
 import shutil
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
@@ -67,6 +68,21 @@ def auto_run_tag(seq: int) -> str:
     return f"{seq:06d}"
 
 
+# Flattened-counter key format: dict-valued ledger fields serialize as
+# "field[index]" so every ledger ever becomes (and merges from) a flat
+# {str: int} — reports, checkpoints, and BENCH json stay schema-free.
+_COUNTER_KEY_RE = re.compile(r"^([a-z_]+)\[(\d+)\]$")
+
+
+def split_counter_key(key: str) -> Tuple[str, Optional[int]]:
+    """Parse a flattened ledger key: "bucket_bytes[3]" -> ("bucket_bytes", 3),
+    plain "bytes_read" -> ("bytes_read", None)."""
+    m = _COUNTER_KEY_RE.match(key)
+    if m:
+        return m.group(1), int(m.group(2))
+    return key, None
+
+
 @dataclasses.dataclass
 class IOLedger:
     """Counts block-granular I/O, the paper's unit of cost (C_e edges/block)."""
@@ -81,6 +97,16 @@ class IOLedger:
     # communication-free relabel pays INSTEAD of exchange bytes — Funke et
     # al.'s trade, made visible next to the byte counters it displaces).
     hash_evals: int = 0
+    # Rows appended to stores (writer-side: BlockStore.append_run;
+    # receiver-side: the exchange server's durable frame writes).  The row
+    # twin of bytes_written — the skew signal in row units.
+    rows_written: int = 0
+    # Per-bucket skew signal: bytes/rows attributable to a specific bucket,
+    # from kernel attribution (phases._run_kernel) and receive-side store
+    # naming (transport.ExchangeServer).  The rebalancer's load input and the
+    # BENCH_*.json skew surface share these counters.
+    bucket_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
+    bucket_rows: Dict[int, int] = dataclasses.field(default_factory=dict)
 
     def hashes(self, count: int):
         self.hash_evals += count
@@ -99,8 +125,41 @@ class IOLedger:
         else:
             self.rand_writes += 1
 
+    def bucket(self, bucket: int, nbytes: int, rows: int = 0) -> None:
+        """Attribute I/O to a bucket (the per-bucket skew counters)."""
+        b = int(bucket)
+        if nbytes:
+            self.bucket_bytes[b] = self.bucket_bytes.get(b, 0) + int(nbytes)
+        if rows:
+            self.bucket_rows[b] = self.bucket_rows.get(b, 0) + int(rows)
+
     def as_dict(self) -> Dict[str, int]:
-        return dataclasses.asdict(self)
+        """Flat {str: int}: dict-valued fields flatten to "field[index]"
+        keys (see split_counter_key), so snapshot/delta/merge/JSON all keep
+        working on one flat namespace."""
+        out: Dict[str, int] = {}
+        for f in dataclasses.fields(self):
+            v = getattr(self, f.name)
+            if isinstance(v, dict):
+                for idx in sorted(v):
+                    out[f"{f.name}[{int(idx)}]"] = int(v[idx])
+            else:
+                out[f.name] = v
+        return out
+
+    def merge(self, counters: Dict[str, int]) -> None:
+        """Add a flat counter dict (another ledger's as_dict / a report's
+        delta) into this ledger — the one sanctioned way to combine
+        ledgers, replacing ad-hoc per-field setattr loops.  Unknown keys
+        are ignored so old reports merge into newer ledgers."""
+        for k, v in counters.items():
+            name, idx = split_counter_key(k)
+            if idx is not None:
+                d = getattr(self, name, None)
+                if isinstance(d, dict):
+                    d[idx] = d.get(idx, 0) + int(v)
+            elif hasattr(self, name) and not isinstance(getattr(self, name), dict):
+                setattr(self, name, getattr(self, name) + v)
 
     def snapshot(self) -> Dict[str, int]:
         return self.as_dict()
@@ -175,6 +234,7 @@ class BlockStore:
         path = os.path.join(self.dir, f"run_{name}.npy")
         np.save(path, arr)
         self.ledger.write(arr.nbytes)
+        self.ledger.rows_written += int(arr.shape[0])
         self.gauge.track(arr.shape[0])
         self._runs.append(path)
         self._rows.append(int(arr.shape[0]))

@@ -52,6 +52,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import re
 import shlex
 import socket
 import subprocess
@@ -65,7 +66,13 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
-from .blockstore import IOLedger, MemoryGauge, clean_cascade_stores
+from .blockstore import (
+    IOLedger,
+    MemoryGauge,
+    clean_cascade_stores,
+    split_counter_key,
+)
+from .shardmap import ShardMap, ShardMapError, plan_rebalance
 from .phases import (
     PartitionedGenerator,
     PhaseOrchestrator,
@@ -86,6 +93,7 @@ from .transport import (
     SocketTransport,
     TransportError,
     TransportStats,
+    PART_SUFFIX,
     _ACK,
     _HDR,
     _MAGIC,
@@ -94,6 +102,7 @@ from .transport import (
     _check_subdir,
     _recv_exact,
     _send_frame,
+    store_bucket,
     sweep_partial_frames,
 )
 
@@ -467,6 +476,115 @@ def _jsonable(x):
 
 
 # ---------------------------------------------------------------------------
+# Shard migration (MIGRATE frames over the exchange transport)
+# ---------------------------------------------------------------------------
+
+# CSR bucket files carry their bucket as a bare index (`csr_offv_003.npy`),
+# not the `_b{ddd}` store suffix — the one naming family store_bucket
+# cannot see.
+_CSR_FILE_RE = re.compile(r"^csr_(?:offv|adjv)_(\d{3})\.npy$")
+
+
+def _bucket_of_entry(name: str) -> Optional[int]:
+    """Which bucket a workdir entry (store dir, shard file, CSR file)
+    belongs to, or None for unbucketed entries (checkpoint state, specs)."""
+    b = store_bucket(name)
+    if b is not None:
+        return b
+    m = _CSR_FILE_RE.match(name)
+    return int(m.group(1)) if m else None
+
+
+def bucket_file_relpaths(workdir: str, bucket: int) -> List[str]:
+    """Every FILE in `workdir` belonging to `bucket`, as slash-relative
+    paths, spanning the top level and one namespace (job subdir) level —
+    migration moves every job's data for a bucket, not one namespace's.
+    Store directories are flat, so a matched store contributes its run
+    files individually (file-granular resume).  `.part`/`.tmp` staging and
+    `.json` checkpoint state never migrate."""
+    out: List[str] = []
+
+    def scan(rel: str, full: str) -> None:
+        if os.path.isdir(full):
+            for f in sorted(os.listdir(full)):
+                if (not f.endswith((PART_SUFFIX, ".tmp"))
+                        and os.path.isfile(os.path.join(full, f))):
+                    out.append(f"{rel}/{f}")
+        else:
+            out.append(rel)
+
+    for e in sorted(os.listdir(workdir)):
+        if e.endswith((PART_SUFFIX, ".tmp", ".json")):
+            continue
+        full = os.path.join(workdir, e)
+        if _bucket_of_entry(e) == bucket:
+            scan(e, full)
+        elif os.path.isdir(full):
+            for s in sorted(os.listdir(full)):
+                if s.endswith((PART_SUFFIX, ".tmp", ".json")):
+                    continue
+                if _bucket_of_entry(s) == bucket:
+                    scan(f"{e}/{s}", os.path.join(full, s))
+    return out
+
+
+def _cleanup_bucket_dirs(workdir: str, bucket: int) -> None:
+    """Best-effort rmdir of emptied per-bucket store dirs after a
+    migration, so a later listing on the old owner can't see ghost stores
+    of a bucket it no longer serves."""
+    def _try(path: str) -> None:
+        try:
+            os.rmdir(path)
+        except OSError:
+            pass   # non-empty (a .part landed) or already gone — both fine
+
+    for e in os.listdir(workdir):
+        full = os.path.join(workdir, e)
+        if not os.path.isdir(full):
+            continue
+        if _bucket_of_entry(e) == bucket:
+            _try(full)
+        else:
+            for s in os.listdir(full):
+                sf = os.path.join(full, s)
+                if os.path.isdir(sf) and _bucket_of_entry(s) == bucket:
+                    _try(sf)
+
+
+def migrate_bucket_files(workdir: str, bucket: int, dest_addr: str,
+                         transport: SocketTransport,
+                         orch: Optional[PhaseOrchestrator] = None,
+                         key: str = "") -> Dict[str, int]:
+    """Move every file of `bucket` from this host's workdir to the
+    ExchangeServer at `dest_addr`.  Each file is one resumable micro-phase
+    (when `orch` is given) with a strict ordering that makes resume exact:
+
+      send (ack-after-durable) -> unlink local copy -> checkpoint
+
+    so on a mid-migration crash: a checkpointed file is skipped outright; a
+    missing-but-unchecked file was fully acked (the crash hit between
+    unlink and checkpoint) and completes as a no-op; a present file
+    re-sends from offset 0, which the receiver's `.part` staging truncates
+    and the deterministic bytes make an idempotent overwrite."""
+    sent = {"files": 0, "bytes": 0}
+    for rel in bucket_file_relpaths(workdir, bucket):
+        def _send(rel=rel):
+            src = os.path.join(workdir, *rel.split("/"))
+            if os.path.exists(src):
+                n = transport.send_file(dest_addr, src, rel)
+                os.unlink(src)   # strictly after the final durable ack
+                sent["files"] += 1
+                sent["bytes"] += n
+
+        if orch is not None:
+            orch.run_phase(f"{key}:shard:{rel}", _send, save=_MARK, load=_SKIP)
+        else:
+            _send()
+    _cleanup_bucket_dirs(workdir, bucket)
+    return sent
+
+
+# ---------------------------------------------------------------------------
 # HostRunner — the worker-host daemon
 # ---------------------------------------------------------------------------
 
@@ -551,6 +669,28 @@ class HostRunner:
             args.append([WalkCfg(**d) for d in task["wcfgs"]])
         return (task["kernel"], pcfg, self._task_workdir(task), tuple(args))
 
+    def _migrate_task(self, task: Dict, orch: PhaseOrchestrator) -> Tuple:
+        """Execute one MIGRATE task in-process (never in the spawn pool —
+        its checkpoint micro-phases live in this process's orchestrator):
+        ship every file of the bucket to the new owner's ExchangeServer,
+        one resumable micro-phase per file in host_phases.json.  The
+        destination may own no buckets yet (a just-admitted host), so its
+        address rides the task (`dest_addr`), not the peer map.  Returns
+        the same (out, ledger, peak, stats) shape kernels return."""
+        b = int(task["args"][0])
+        dest_addr = str(task["dest_addr"])
+        ledger = IOLedger()
+        tr = SocketTransport(
+            self.workdir, ledger, peers=(dest_addr,),
+            map_version=task["pcfg"].get("shard_map_version"))
+        try:
+            sent = migrate_bucket_files(self.workdir, b, dest_addr, tr,
+                                        orch=orch, key=task["key"])
+        finally:
+            stats = dataclasses.asdict(tr.stats)
+            tr.close()
+        return sent, ledger.as_dict(), 0, stats
+
     def _execute(self, tasks: List[Dict]):
         """Run a batch of tasks (resumed ones skip; fresh ones run in-process
         or through the local spawn pool), YIELDING one report per task as it
@@ -562,8 +702,9 @@ class HostRunner:
         futs: Dict[int, object] = {}
         if self.workers > 0:
             fresh = [t for t in tasks
-                     if not self._orchestrator(_pcfg_from_wire(t["pcfg"]),
-                                               t).completed(t["key"])]
+                     if t["kernel"] != "migrate"
+                     and not self._orchestrator(_pcfg_from_wire(t["pcfg"]),
+                                                t).completed(t["key"])]
             if len(fresh) > 1:
                 if self._pool is None:
                     self._pool = ProcessPoolExecutor(
@@ -585,8 +726,11 @@ class HostRunner:
                                peak=0, stats={})
                 else:
                     fut = futs.get(t["id"])
-                    fn = (fut.result if fut is not None
-                          else lambda t=t: _run_kernel(self._kernel_task(t)))
+                    if t["kernel"] == "migrate":
+                        fn = lambda t=t, orch=orch: self._migrate_task(t, orch)
+                    else:
+                        fn = (fut.result if fut is not None
+                              else lambda t=t: _run_kernel(self._kernel_task(t)))
                     res = orch.run_phase(
                         t["key"], fn,
                         save=lambda r: {"out": _jsonable(r[0])},
@@ -656,6 +800,12 @@ class HostRunner:
                 r = _ctrl_request(sock, {"op": "poll",
                                          "host_id": self.host_id,
                                          "wait": 2.0})
+                if "mapv" in r:
+                    # Rebalance fence: the controller's map moved past what
+                    # some in-flight sender routed under — ratchet the local
+                    # server so stale-routed DATA/MIGRATE frames are refused
+                    # (their senders retry against the fresh map).
+                    self.server.set_min_map_version(int(r["mapv"]))
                 if r["cmd"] == "stop":
                     return
                 if r["cmd"] == "idle":
@@ -739,6 +889,16 @@ class ClusterController:
         self.busy_seconds: Dict[int, float] = {h.host_id: 0.0
                                                for h in spec.hosts}
         self.steals = 0
+        # Live routing directory, seeded with the historical contiguous
+        # split — a cluster that never rebalances is bit-identical to the
+        # static map.  Rewritten ONLY at phase barriers (apply_shard_moves)
+        # or by restore_shard_state on a resumed run.
+        self.shard_map = ShardMap.contiguous(spec.nb, spec.num_hosts)
+        # Per-bucket observed I/O (bytes), folded in from every task
+        # report's kernel- and receiver-side bucket counters: the
+        # rebalancer's skew signal.
+        self.bucket_loads: Dict[int, int] = {}
+        self.rebalance_requested = False
         self.server = ControlServer(self._handle, host=spec.controller_host,
                                     port=spec.controller_port)
         self.addr = self.server.addr
@@ -782,6 +942,11 @@ class ClusterController:
 
     def _handle(self, req: Dict) -> Dict:
         op = req.get("op")
+        if op == "admin":
+            # Operator plane (`rebalance`/`admit`/`status` CLI verbs): not
+            # bound to a registered host, so it dispatches before the
+            # host-id check below.
+            return self._admin(req)
         h = int(req.get("host_id", -1))
         if h not in self._queues:
             raise ClusterError(f"unknown host_id {h}")
@@ -818,17 +983,40 @@ class ClusterController:
                     peers = self._peer_addrs_locked()
                     if peers is not None:
                         out = self._lease_locked(h)
-                        if out:
+                        # A MIGRATE task's destination may own no buckets
+                        # yet (a just-admitted host), so its address is not
+                        # in the peer map — resolve it here, and requeue the
+                        # task if the destination has not registered yet.
+                        ready = []
+                        for task in out:
+                            dest = None
+                            if task["kernel"] == "migrate":
+                                dest = self._exchange_addrs.get(
+                                    int(task["args"][2]))
+                                if dest is None:
+                                    self._inflight[h].pop(task["id"], None)
+                                    self._queues[task.get("owner", h)].append(
+                                        task)
+                                    continue
+                            ready.append((task, dest))
+                        if ready:
                             tasks = []
-                            for task in out:
-                                pcfg = dict(self._job_pcfg[task["job"]],
-                                            transport="socket",
-                                            peer_addrs=list(peers))
-                                tasks.append(dict(task, pcfg=pcfg))
-                            return {"cmd": "tasks", "tasks": tasks}
+                            for task, dest in ready:
+                                pcfg = dict(
+                                    self._job_pcfg[task["job"]],
+                                    transport="socket",
+                                    peer_addrs=list(peers),
+                                    shard_map_version=self.shard_map.version)
+                                t = dict(task, pcfg=pcfg)
+                                if dest is not None:
+                                    t["dest_addr"] = dest
+                                tasks.append(t)
+                            return {"cmd": "tasks", "tasks": tasks,
+                                    "mapv": self.shard_map.version}
                     remaining = deadline - time.monotonic()
                     if remaining <= 0:
-                        return {"cmd": "idle"}
+                        return {"cmd": "idle",
+                                "mapv": self.shard_map.version}
                     self._cond.wait(timeout=remaining)
                     self._last_seen[h] = time.monotonic()
         if op == "report":
@@ -843,6 +1031,15 @@ class ClusterController:
                     return {}
                 self._reports[tid] = req
                 self.busy_seconds[h] += float(req.get("seconds", 0.0))
+                # Fold per-bucket byte counters (kernel side AND receiver
+                # side) into the rebalancer's skew signal.
+                for ld in (req.get("ledger") or {},
+                           req.get("server_ledger") or {}):
+                    for ck, v in ld.items():
+                        cname, idx = split_counter_key(ck)
+                        if cname == "bucket_bytes" and idx is not None:
+                            self.bucket_loads[idx] = (
+                                self.bucket_loads.get(idx, 0) + int(v))
                 self.task_log.append({
                     "host": h, "key": task["key"], "job": task.get("job", ""),
                     "ok": bool(req.get("ok")),
@@ -852,9 +1049,13 @@ class ClusterController:
         raise ClusterError(f"unknown control op {op!r}")
 
     def _peer_addrs_locked(self) -> Optional[Tuple[str, ...]]:
+        # Routing goes through the live shard map, not the spec's static
+        # split — after a rebalance, bucket b's slot points at its NEW
+        # owner's exchange server.  (A bucket-less admitted host is absent
+        # here by construction and so never blocks peer completeness.)
         addrs = []
         for b in range(self.spec.nb):
-            a = self._exchange_addrs[self.spec.owner_of(b)]
+            a = self._exchange_addrs[self.shard_map.owner_of(b)]
             if a is None:
                 return None
             addrs.append(a)
@@ -883,6 +1084,142 @@ class ClusterController:
                 if remaining <= 0:
                     raise ClusterError("not all hosts have registered")
                 self._cond.wait(timeout=min(0.5, remaining))
+
+    # -- shard map: rebalancing + elastic hosts ------------------------------
+    def owner_of(self, bucket: int) -> int:
+        """Live owner of `bucket` — the directory lookup every placement
+        decision (task dispatch, shard manifests) goes through."""
+        with self._lock:
+            return self.shard_map.owner_of(bucket)
+
+    def workdir_of(self, bucket: int) -> str:
+        with self._lock:
+            return self.spec.hosts[self.shard_map.owner_of(bucket)].workdir
+
+    def map_version(self) -> int:
+        with self._lock:
+            return self.shard_map.version
+
+    def bucket_loads_snapshot(self) -> Dict[int, int]:
+        with self._lock:
+            return dict(self.bucket_loads)
+
+    def rebalance_pending(self) -> bool:
+        with self._lock:
+            return self.rebalance_requested
+
+    def plan_moves(self, max_moves: int = 0) -> List[Tuple[int, int, int]]:
+        """Deterministic rebalance plan against the CURRENT map + observed
+        loads (pure planning — nothing moves until apply_shard_moves)."""
+        with self._lock:
+            return plan_rebalance(self.shard_map, dict(self.bucket_loads),
+                                  max_moves=max_moves)
+
+    def quiesce(self, timeout: float = 30.0) -> bool:
+        """Soft barrier for rebalancing: wait until no task is queued or in
+        flight anywhere.  The generator calls this at its phase barrier
+        (where its own tasks are already drained); the wait covers
+        concurrent jobs sharing the fleet."""
+        deadline = time.monotonic() + timeout
+        with self._lock:
+            while True:
+                if not any(self._queues[h] or self._inflight[h]
+                           for h in self._queues):
+                    return True
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    return False
+                self._cond.wait(timeout=min(0.25, remaining))
+
+    def apply_shard_moves(
+            self, moves: Sequence[Tuple[int, int, int]]) -> int:
+        """Commit a migration at a barrier: rewrite the directory, bump the
+        map version (stale-route fence) and the peers version (transports
+        rebuild their routes lazily).  Returns the new map version."""
+        with self._lock:
+            for (b, src, dst) in moves:
+                if self.shard_map.owner_of(int(b)) != int(src):
+                    raise ShardMapError(
+                        f"stale plan: bucket {b} owned by "
+                        f"{self.shard_map.owner_of(int(b))}, plan expected "
+                        f"{src}")
+                self.shard_map.assign(int(b), int(dst))
+            self.peers_version += 1
+            self._cond.notify_all()
+            return self.shard_map.version
+
+    def restore_shard_state(self, map_json: Dict,
+                            hosts_json: Sequence[Dict] = ()) -> int:
+        """Resume path: a relaunched controller starts from the contiguous
+        map, but a previously committed rebalance may have moved buckets
+        (and admitted hosts).  Re-admit any hosts beyond the spec, then
+        adopt the checkpointed map if it is newer than the live one."""
+        for hj in sorted(hosts_json, key=lambda d: int(d["host_id"])):
+            if int(hj["host_id"]) >= self.spec.num_hosts:
+                self.admit_host(str(hj["workdir"]),
+                                host=str(hj.get("host", "127.0.0.1")))
+        with self._lock:
+            smap = ShardMap.from_json(map_json)
+            if smap.nb != self.spec.nb or smap.num_hosts != self.spec.num_hosts:
+                raise ClusterError(
+                    f"checkpointed shard map shape ({smap.nb} buckets, "
+                    f"{smap.num_hosts} hosts) does not fit the cluster "
+                    f"({self.spec.nb} buckets, {self.spec.num_hosts} hosts)")
+            if smap.version > self.shard_map.version:
+                self.shard_map = smap
+                self.peers_version += 1
+                self._cond.notify_all()
+            return self.shard_map.version
+
+    def admit_host(self, workdir: str, host: str = "127.0.0.1",
+                   launch: bool = True) -> int:
+        """Admit a late-joining host mid-run.  It owns no buckets (and so
+        blocks no barrier) until a rebalance assigns it some; `launch=False`
+        registers the slot for an externally-started HostRunner.  Returns
+        the new host id."""
+        with self._lock:
+            hid = self.spec.num_hosts
+            hspec = HostSpec(hid, workdir, host)
+            # replace() re-runs ClusterSpec validation: distinct workdirs,
+            # and nb >= H (you cannot admit more hosts than buckets).
+            self.spec = dataclasses.replace(
+                self.spec, hosts=self.spec.hosts + (hspec,))
+            if self.shard_map.admit_host() != hid:
+                raise ClusterError("shard map and spec disagree on host ids")
+            self._exchange_addrs[hid] = None
+            self._queues[hid] = deque()
+            self._inflight[hid] = {}
+            self.restarts[hid] = 0
+            self.busy_seconds[hid] = 0.0
+            self.peers_version += 1
+            self._cond.notify_all()
+        if launch and self.backend is not None:
+            self._handles[hid] = self.backend.launch(
+                self.spec, hspec, self.public_addr, attempt=0)
+        return hid
+
+    def _admin(self, req: Dict) -> Dict:
+        cmd = req.get("cmd")
+        if cmd == "status":
+            with self._lock:
+                return {"ok": True, "map": self.shard_map.to_json(),
+                        "hosts": [dataclasses.asdict(h)
+                                  for h in self.spec.hosts],
+                        "bucket_loads": {str(k): v for k, v in
+                                         sorted(self.bucket_loads.items())},
+                        "rebalance_requested": self.rebalance_requested}
+        if cmd == "rebalance":
+            # Arm the flag; the actual plan/migrate/commit runs at the
+            # driving generator's next phase barrier (never mid-phase).
+            with self._lock:
+                self.rebalance_requested = True
+            return {"ok": True}
+        if cmd == "admit":
+            hid = self.admit_host(str(req["workdir"]),
+                                  host=str(req.get("host", "127.0.0.1")),
+                                  launch=bool(req.get("launch", True)))
+            return {"ok": True, "host_id": hid}
+        raise ClusterError(f"unknown admin cmd {cmd!r}")
 
     # -- lifecycle -----------------------------------------------------------
     def launch_hosts(self) -> None:
@@ -1042,7 +1379,7 @@ class ClusterController:
                 self._task_seq += 1
                 key = task_key(namespace, kernel, wire_args,
                                ns=(wcfg or {}).get("ns", ""))
-                owner = self.spec.owner_of(int(wire_args[0]))
+                owner = self.shard_map.owner_of(int(wire_args[0]))
                 task = {"id": tid, "key": key, "kernel": kernel,
                         "args": wire_args, "wcfg": wcfg, "wcfgs": wcfgs,
                         "attempt": 0, "job": job, "subdir": subdir,
@@ -1154,7 +1491,8 @@ class _ControllerTransport:
             self._tr = SocketTransport(
                 self._gen.workdir, self._gen.ledger, self._gen.gauge,
                 peers=ctl.wait_peer_addrs(timeout=ctl.heartbeat_timeout),
-                namespace=getattr(self._gen.pcfg, "exchange_namespace", None))
+                namespace=getattr(self._gen.pcfg, "exchange_namespace", None),
+                map_version=ctl.map_version())
             self._ver = ctl.peers_version
         return self._tr
 
@@ -1231,7 +1569,8 @@ class ClusterGenerator(PartitionedGenerator):
                  barrier_timeout: float = 600.0,
                  advertise: Optional[str] = None,
                  controller: Optional[ClusterController] = None,
-                 job: str = "", lease_budget: int = 1):
+                 job: str = "", lease_budget: int = 1,
+                 rebalance: bool = False):
         pcfg = validate_external_shape(
             cfg if isinstance(cfg, PlainCfg) else plain_config(cfg))
         if pcfg.transport != "socket":
@@ -1255,6 +1594,11 @@ class ClusterGenerator(PartitionedGenerator):
         self.lease_budget = lease_budget
         self._namespace = "gen"
         self._job = job
+        # Skew-aware rebalancing at every phase barrier; a one-shot
+        # rebalance can instead be armed at runtime through the controller's
+        # `rebalance` admin op.  Committed rebalances replay on resume even
+        # when the flag is off (the checkpointed map must be restored).
+        self.rebalance = bool(rebalance)
         if job:
             # Multi-tenant: every exchange frame and every host-side store of
             # this generator lives under the job's namespace subdir, so
@@ -1277,7 +1621,8 @@ class ClusterGenerator(PartitionedGenerator):
                 raise
         self.controller = controller
         self.pcfg = dataclasses.replace(
-            pcfg, peer_addrs=self.controller.peer_addrs())
+            pcfg, peer_addrs=self.controller.peer_addrs(),
+            shard_map_version=self.controller.map_version())
         self.transport = _ControllerTransport(self)
         self.orchestrator = PhaseOrchestrator(
             workdir, self.ledger, checkpoint=checkpoint,
@@ -1297,8 +1642,7 @@ class ClusterGenerator(PartitionedGenerator):
             lease_budget=self.lease_budget)
         results = []
         for rep in reports:
-            for k, v in rep.get("server_ledger", {}).items():
-                setattr(self.ledger, k, getattr(self.ledger, k) + v)
+            self.ledger.merge(rep.get("server_ledger", {}))
             self.gauge.track(int(rep.get("server_peak", 0)))
             self.exchange_stats.add(
                 TransportStats(**rep.get("server_stats", {})))
@@ -1313,8 +1657,7 @@ class ClusterGenerator(PartitionedGenerator):
         results = self._submit(kernel, tasks)
         outs = []
         for out, ldict, peak, sdict in results:
-            for k, v in ldict.items():
-                setattr(self.ledger, k, getattr(self.ledger, k) + v)
+            self.ledger.merge(ldict)
             self.gauge.track(peak)
             if sdict:
                 self.exchange_stats.add(TransportStats(**sdict))
@@ -1322,8 +1665,11 @@ class ClusterGenerator(PartitionedGenerator):
         return outs
 
     # -- placement hooks ------------------------------------------------------
+    # All placement goes through the controller's LIVE shard map, not the
+    # spec's static split — after a rebalance (or an elastic admission) the
+    # spec no longer describes where buckets live.
     def _host_dir(self, b: int) -> str:
-        base = self.spec.workdir_of(b)
+        base = self.controller.workdir_of(b)
         ns = getattr(self.pcfg, "exchange_namespace", None)
         return os.path.join(base, ns) if ns else base
 
@@ -1334,7 +1680,91 @@ class ClusterGenerator(PartitionedGenerator):
         return self._host_dir(j)
 
     def _shard_host_of(self, j: int) -> int:
-        return self.spec.owner_of(j)
+        return self.controller.owner_of(j)
+
+    # -- rebalancing (phase barriers only) ------------------------------------
+    def _maybe_rebalance(self, tag: str) -> None:
+        """Skew-aware shard rebalance, run at a phase barrier as three
+        checkpointed phases so a crash anywhere in the sequence resumes
+        exactly:
+
+          rebalance_plan[tag]     quiesce, snapshot per-bucket loads, and
+                                  compute the deterministic greedy plan —
+                                  saved verbatim, so a resumed run replays
+                                  the identical plan
+          rebalance_migrate[tag]  one MIGRATE task per move to the source
+                                  host (file-granular resumable micro-phases
+                                  in its host_phases.json)
+          rebalance_commit[tag]   rewrite the directory + bump the map
+                                  version — saved with the full map and host
+                                  manifest, so a RELAUNCHED controller
+                                  restores ownership (and re-admits elastic
+                                  hosts) before any later phase routes
+        """
+        ctl = self.controller
+        plan_phase = f"rebalance_plan[{tag}]"
+        if not (self.rebalance or ctl.rebalance_pending()
+                or self.orchestrator.completed(plan_phase)):
+            return
+        moves = self.orchestrator.run_phase(
+            plan_phase, self._plan_moves,
+            save=lambda mv: {"moves": mv},
+            load=lambda m: [list(x) for x in m["moves"]])
+        if not moves:
+            return
+        self.orchestrator.run_phase(
+            f"rebalance_migrate[{tag}]",
+            lambda: self._migrate_moves(moves, tag),
+            save=_MARK, load=_SKIP)
+
+        def _commit():
+            ver = ctl.apply_shard_moves([(int(b), int(s), int(d))
+                                         for b, s, d in moves])
+            with ctl._lock:
+                ctl.rebalance_requested = False
+                return {"version": ver, "map": ctl.shard_map.to_json(),
+                        "hosts": [dataclasses.asdict(hs)
+                                  for hs in ctl.spec.hosts]}
+
+        def _load_commit(m):
+            ctl.restore_shard_state(m["map"], m.get("hosts", ()))
+            return m
+
+        self.orchestrator.run_phase(f"rebalance_commit[{tag}]", _commit,
+                                    save=lambda m: m, load=_load_commit)
+        self._refresh_routes()
+
+    def _plan_moves(self) -> List[List[int]]:
+        ctl = self.controller
+        # Our own barrier just drained, so this only waits on OTHER jobs
+        # sharing the fleet — rebalancing never happens under live traffic.
+        if not ctl.quiesce(timeout=min(30.0, self.barrier_timeout)):
+            raise ClusterError("rebalance needs a quiet fleet: tasks still "
+                               "queued or in flight at the barrier")
+        return [[int(b), int(s), int(d)] for b, s, d in ctl.plan_moves()]
+
+    def _migrate_moves(self, moves: Sequence[Sequence[int]],
+                       tag: str) -> None:
+        ctl = self.controller
+        # (bucket, gen, dest): args[0] places the task at the CURRENT owner
+        # (the source), the split generation keys this migration apart from
+        # any later move of the same bucket, args[2] routes the bytes.
+        argss = [(int(b), int(ctl.shard_map.gen_of(int(b))), int(d))
+                 for b, _, d in moves]
+        ctl.run_tasks("migrate", argss, self.pcfg, f"rebalance[{tag}]",
+                      timeout=self.barrier_timeout, job=self._job,
+                      lease_budget=self.lease_budget)
+
+    def _refresh_routes(self) -> None:
+        """Post-commit: subsequent dispatches must ride the new map —
+        fresh peer_addrs (bucket -> new owner's server) and the bumped map
+        version (the stale-route fence's stamp).  The controller-side clean
+        transport rebuilds itself lazily off peers_version."""
+        ctl = self.controller
+        self.pcfg = dataclasses.replace(
+            self.pcfg,
+            peer_addrs=ctl.wait_peer_addrs(timeout=ctl.heartbeat_timeout),
+            shard_map_version=ctl.map_version())
 
     # -- driver ---------------------------------------------------------------
     def run(self, csr_variant: str = "sorted"):
@@ -1351,7 +1781,7 @@ class ClusterGenerator(PartitionedGenerator):
                 "scale": self.pcfg.scale, "edge_factor": self.pcfg.edge_factor,
                 "csr_variant": csr_variant,
                 "buckets": [
-                    {"bucket": i, "host": self.spec.owner_of(i),
+                    {"bucket": i, "host": self.controller.owner_of(i),
                      "workdir": self._host_dir(i),
                      "offv": os.path.basename(o), "adjv": os.path.basename(a)}
                     for i, (o, a) in enumerate(paths)],

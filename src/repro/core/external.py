@@ -92,6 +92,20 @@ per-phase I/O terms above — and k same-length corpora submitted as one
 fused walk job (walk_hop_fused) share each hop's O(B / C_e) CSR scan,
 dividing that read term by k.
 
+Shard-migration term (core/shardmap.py + core/cluster.py): a skew
+rebalance at a phase barrier moves the migrated buckets' shard files —
+stores, CSR arrays, corpus shards — from straggler to cold host over the
+exchange transport, one O(bytes(b) / C_e) sequential read + framed send +
+sequential durable write per migrated bucket b.  The planner is fed by the
+IOLedger's per-bucket byte counters (`bucket_bytes[b]`, surfaced in every
+BENCH_*.json), moves each bucket at most once per barrier, and only when
+the move strictly shrinks the host-load spread, so migration bytes are
+bounded by the skew actually observed — a uniform graph pays ZERO.  Every
+later phase term above is unchanged in total but re-balanced per host:
+the 1/H shares stop being nominal and track bytes, which is the whole
+point.  Migration is resumable per file (ack-after-durable + per-file
+micro-phases), so a crash never re-pays completed shard transfers.
+
 Every external merge above pays an extra O(log_merge_fanin(nruns))-deep
 cascade of sequential read+write passes whenever a store's run count exceeds
 cfg.merge_fanin (blockstore.merge_runs): the bounded-fan-in multiway merge

@@ -132,8 +132,12 @@ def submit_job(root: str, cfg, csr_variant: str = "sorted",
     recompute) are rejected at submit time, not at dispatch."""
     pcfg = validate_external_shape(
         cfg if isinstance(cfg, PlainCfg) else plain_config(cfg))
+    # Routing fields are dispatch-time state, never job identity: the
+    # scheduler injects live peer_addrs and the current shard-map version
+    # at every lease, so the stored cfg (and the task-key plan derived from
+    # it) stays stable across rebalances.
     pcfg = dataclasses.replace(pcfg, transport="socket", peer_addrs=None,
-                               exchange_namespace=None)
+                               exchange_namespace=None, shard_map_version=0)
     walks = [list(w) for w in walks]
     plan = phase_task_plan(pcfg, csr_variant=csr_variant,
                            walks=[tuple(w) for w in walks],

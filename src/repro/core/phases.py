@@ -145,6 +145,13 @@ class PlainCfg:
     # never affects result bytes — so result_config_key normalizes it out
     # exactly like transport/peer_addrs.
     exchange_namespace: Optional[str] = None
+    # Shard-map version the routes in peer_addrs were computed under (the
+    # controller's directory ShardMap; core/shardmap.py).  Stamped into
+    # every socket frame as `mapv` so receivers can refuse stale routes
+    # after a rebalance barrier.  Like peer_addrs this is pure routing —
+    # the map changes where bytes live, never what they are — so
+    # result_config_key normalizes it out.
+    shard_map_version: int = 0
 
     @property
     def n(self) -> int:
@@ -191,6 +198,7 @@ def plain_config(cfg) -> PlainCfg:
         exchange_namespace=(None
                             if getattr(cfg, "exchange_namespace", None) is None
                             else str(cfg.exchange_namespace)),
+        shard_map_version=int(getattr(cfg, "shard_map_version", 0)),
     )
     if p.n % p.nb != 0:
         raise ValueError(f"nb={p.nb} must divide n={p.n}")
@@ -245,7 +253,7 @@ def result_config_key(pcfg: PlainCfg) -> PlainCfg:
     but its phase schedule is not, and a cross-mode resume could replay a
     phase whose inputs the other mode's checkpoint GC already freed."""
     return dataclasses.replace(pcfg, transport="fs", peer_addrs=None,
-                               exchange_namespace=None)
+                               exchange_namespace=None, shard_map_version=0)
 
 
 def validate_external_shape(p: PlainCfg) -> PlainCfg:
@@ -1809,7 +1817,8 @@ def _run_kernel(task):
     # exchange_namespace is part of the identity: two jobs sharing one host
     # workdir must not reuse each other's (differently-namespaced) channels.
     key = (workdir, pcfg.transport, pcfg.peer_addrs,
-           getattr(pcfg, "exchange_namespace", None))
+           getattr(pcfg, "exchange_namespace", None),
+           getattr(pcfg, "shard_map_version", 0))
     tr = _TRANSPORT_CACHE.get(key)
     if tr is None:
         tr = _TRANSPORT_CACHE[key] = make_transport(pcfg, workdir, ledger, gauge)
@@ -1822,6 +1831,13 @@ def _run_kernel(task):
         _TRANSPORT_CACHE.pop(key, None)
         tr.close()
         raise
+    if args and isinstance(args[0], int):
+        # Kernel-side skew attribution: bucket kernels take their bucket
+        # index as the first positional arg (the store-naming convention's
+        # dispatch twin), so the task's whole I/O bill lands in that
+        # bucket's per-bucket counters — the rebalancer's load signal.
+        ledger.bucket(args[0], ledger.bytes_read + ledger.bytes_written,
+                      ledger.rows_written)
     return out, ledger.as_dict(), gauge.peak_rows, dataclasses.asdict(tr.stats)
 
 
@@ -2088,8 +2104,7 @@ class PartitionedGenerator:
         results = self._submit(kernel, tasks)
         outs = []
         for out, ldict, peak, sdict in results:
-            for k, v in ldict.items():
-                setattr(self.ledger, k, getattr(self.ledger, k) + v)
+            self.ledger.merge(ldict)
             self.gauge.track(peak)
             self.exchange_stats.add(TransportStats(**sdict))
             outs.append(out)
@@ -2116,6 +2131,12 @@ class PartitionedGenerator:
         if self._fine_phases:
             return self.orchestrator.run_phase(name, fn, save=_MARK, load=_SKIP)
         return fn()
+
+    def _maybe_rebalance(self, tag: str) -> None:
+        """Shard-map rebalance hook, called at phase barriers (before the
+        CSR phase and before each walk drive).  A single-host partitioned
+        run has one workdir and nothing to move — the cluster generator
+        overrides this with the plan/migrate/commit micro-phases."""
 
     # -- phases ----------------------------------------------------------------
     def _shuffle(self):
@@ -2315,6 +2336,10 @@ class PartitionedGenerator:
                                   + [edges_store_name(i, 0) for i in range(nb)])
             self._outer("redistribute", self._redistribute,
                         frees=[edges_store_name(i, 1) for i in range(nb)])
+        # Phase barrier: bucket loads are now known (per-bucket ledger
+        # counters) and no exchange is in flight — the one legal point to
+        # rewrite the shard map before the CSR phase reads the buckets.
+        self._maybe_rebalance("csr")
         if csr_variant == "scatter":
             paths = self._run_csr_scatter(nb)
         elif self.pcfg.pooled_cascade:
@@ -2362,6 +2387,7 @@ class PartitionedGenerator:
         assembled CSR, whichever transport carried the frontiers."""
         wcfg = WalkCfg(num_walkers=num_walkers, length=length, seed=seed,
                        out_name=out_name)
+        self._maybe_rebalance(f"walk_{out_name}")
         orch = PhaseOrchestrator(self.workdir, self.ledger, checkpoint=checkpoint,
                                  state_name="walk_phases.json",
                                  config_key=repr((result_config_key(self.pcfg), wcfg)),
@@ -2385,6 +2411,8 @@ class PartitionedGenerator:
         wcfgs = [WalkCfg(num_walkers=w, length=l, seed=s, out_name=o,
                          ns=f"w{k}_")
                  for k, (w, l, s, o) in enumerate(specs)]
+        self._maybe_rebalance(
+            "walkf_" + "_".join(w.out_name for w in wcfgs))
         orch = PhaseOrchestrator(
             self.workdir, self.ledger, checkpoint=checkpoint,
             state_name="walk_fused_phases.json",

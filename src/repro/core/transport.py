@@ -51,6 +51,7 @@ from __future__ import annotations
 import dataclasses
 import json
 import os
+import re
 import shutil
 import socket
 import struct
@@ -62,10 +63,14 @@ import numpy as np
 from .blockstore import (
     BlockStore, IOLedger, MemoryGauge, auto_run_tag, clean_store,
     stack_columns)
+from .shardmap import frame_version_ok
 
 _MAGIC = b"EXG1"
 _KIND_DATA = 0
 _KIND_CLEAN = 1
+# Raw-file shard migration (rebalancer traffic): chunked byte-exact copies
+# of bucket files, riding the same framing/ack/.part discipline as DATA.
+_KIND_MIGRATE = 3
 _HDR = struct.Struct("!4sBI")     # magic, kind, header_len
 _PLEN = struct.Struct("!Q")       # payload_len
 _ACK = struct.Struct("!BI")       # status (0 ok), message_len
@@ -95,12 +100,19 @@ class TransportStats:
     bytes_sent: int = 0
     frames_recv: int = 0
     bytes_recv: int = 0
+    # Rebalancer traffic (MIGRATE frames), kept apart from exchange bytes:
+    # migration is a placement cost the rebalancer must amortize, not part
+    # of the pipeline's single-traversal exchange term.
+    migrate_frames: int = 0
+    migrate_bytes: int = 0
 
     def add(self, other: "TransportStats") -> None:
         self.frames_sent += other.frames_sent
         self.bytes_sent += other.bytes_sent
         self.frames_recv += other.frames_recv
         self.bytes_recv += other.bytes_recv
+        self.migrate_frames += other.migrate_frames
+        self.migrate_bytes += other.migrate_bytes
 
 
 def sweep_partial_frames(workdir: str) -> None:
@@ -137,6 +149,31 @@ def _check_subdir(name: str) -> str:
             or name in (".", "..") or name.startswith("."):
         raise TransportError(f"illegal exchange namespace in frame: {name!r}")
     return name
+
+
+def _check_rel_path(path: str) -> str:
+    """Validate a MIGRATE frame's destination path: slash-separated, every
+    segment store-name-disciplined, bounded depth (the deepest legal layout
+    is `<namespace>/<store>/<run file>`)."""
+    parts = str(path).split("/")
+    if not 1 <= len(parts) <= 4:
+        raise TransportError(f"illegal migration path depth: {path!r}")
+    for seg in parts:
+        _check_store_name(seg)
+    return "/".join(parts)
+
+
+# Store/file naming encodes the destination bucket (`..._b003`,
+# `..._b003_sorted`, `walks_b003.npy`); this is the ONE parser of that
+# convention, shared by the receive-side skew attribution below and the
+# rebalancer's bucket-file discovery in core/cluster.py.
+_STORE_BUCKET_RE = re.compile(r"_b(\d{3})(?=$|[._])")
+
+
+def store_bucket(name: str) -> Optional[int]:
+    """Bucket id encoded in a store/file name, or None."""
+    m = _STORE_BUCKET_RE.search(name)
+    return int(m.group(1)) if m else None
 
 
 class Transport:
@@ -362,7 +399,8 @@ class SocketTransport(Transport):
     def __init__(self, workdir: str, ledger: IOLedger,
                  gauge: Optional[MemoryGauge] = None,
                  peers: Sequence[str] = (),
-                 namespace: Optional[str] = None):
+                 namespace: Optional[str] = None,
+                 map_version: Optional[int] = None):
         if not peers:
             raise ValueError("SocketTransport needs one peer address per bucket")
         self.workdir = workdir
@@ -370,6 +408,11 @@ class SocketTransport(Transport):
         self.gauge = gauge if gauge is not None else MemoryGauge()
         self.peers = tuple(str(p) for p in peers)
         self.namespace = _check_subdir(namespace) if namespace else None
+        # Shard-map version this transport's routes were computed under.
+        # Stamped into every frame as `mapv`; receivers ratchet a minimum at
+        # rebalance barriers and refuse anything older (stale-route fence).
+        # None = unversioned sender (standalone transports), never refused.
+        self.map_version = None if map_version is None else int(map_version)
         self.stats = TransportStats()
         self._conns: Dict[str, List] = {}   # addr -> [socket, next_seq]
 
@@ -388,6 +431,8 @@ class SocketTransport(Transport):
         ent = self._conn(addr)
         meta = dict(meta)
         meta["seq"] = ent[1]
+        if self.map_version is not None:
+            meta["mapv"] = self.map_version
         try:
             _send_frame(ent[0], kind, meta, payload)
             _recv_ack(ent[0])
@@ -429,6 +474,38 @@ class SocketTransport(Transport):
                 if self.namespace is not None:
                     meta["subdir"] = self.namespace
                 self._rpc(addr, _KIND_CLEAN, meta)
+
+    def send_file(self, addr: str, src_path: str, rel_path: str,
+                  chunk_bytes: int = 4 << 20) -> int:
+        """MIGRATE a raw local file to the server at `addr`, chunked.
+
+        The receiver stages bytes in `<rel_path>.part` and atomically
+        renames + acks on the final chunk (ack-after-durable, the DATA
+        discipline) — once this returns, the caller may unlink its local
+        copy.  Bytes are copied verbatim, so a migrated bucket file is
+        bit-identical by construction.  `rel_path` is relative to the
+        receiver's workdir (slash separated; spans namespace subdirs, so
+        migration moves every job's data for a bucket, which is why it does
+        NOT take this transport's own `namespace`).  Returns bytes sent.
+        """
+        rel = _check_rel_path(rel_path)
+        total = os.path.getsize(src_path)
+        sent = 0
+        with open(src_path, "rb") as f:
+            while True:
+                data = f.read(chunk_bytes)
+                if not data and sent < total:
+                    raise TransportError(
+                        f"{src_path} shrank mid-migration ({sent}/{total})")
+                self._rpc(addr, _KIND_MIGRATE,
+                          {"path": rel, "offset": sent, "total": total}, data)
+                if data:
+                    self.ledger.read(len(data))
+                self.stats.migrate_frames += 1
+                self.stats.migrate_bytes += len(data)
+                sent += len(data)
+                if sent >= total:
+                    return total
 
     def purge_namespace(self) -> None:
         """Remove THIS transport's entire namespace subdirectory on every
@@ -483,6 +560,11 @@ class ExchangeServer:
         self.ledger = IOLedger()
         self.gauge = MemoryGauge()
         self.stats = TransportStats()
+        # Stale-route fence: data-bearing frames stamped with a shard-map
+        # version below this minimum are refused (a sender that missed a
+        # rebalance barrier must not deliver bytes to the old owner).
+        # Monotone ratchet — see set_min_map_version.
+        self.min_map_version = 0
         self._lock = threading.Lock()
         self._sock = socket.create_server((host, port))
         bound = self._sock.getsockname()
@@ -552,6 +634,12 @@ class ExchangeServer:
                                     f"payload length {plen} != header's "
                                     f"rows*ncols*itemsize ({expect}) — "
                                     "corrupt or truncated frame")
+                        elif kind == _KIND_MIGRATE:
+                            if int(meta["offset"]) + plen > int(meta["total"]):
+                                raise TransportError(
+                                    f"migration chunk overruns declared "
+                                    f"total ({meta['offset']}+{plen} > "
+                                    f"{meta['total']})")
                         elif plen:
                             raise TransportError(
                                 f"unexpected {plen}-byte payload on "
@@ -583,9 +671,22 @@ class ExchangeServer:
             with self._lock:
                 self._live_conns.discard(conn)
 
+    def set_min_map_version(self, version: int) -> None:
+        """Ratchet the stale-route fence (monotone: never lowers)."""
+        with self._lock:
+            if int(version) > self.min_map_version:
+                self.min_map_version = int(version)
+
     def _handle(self, kind: int, meta: Dict, payload: bytes) -> None:
+        if kind in (_KIND_DATA, _KIND_MIGRATE) and not frame_version_ok(
+                meta.get("mapv"), self.min_map_version):
+            raise TransportError(
+                f"stale shard-map route: frame mapv={meta.get('mapv')} < "
+                f"server minimum {self.min_map_version}")
         if kind == _KIND_DATA:
             self._handle_data(meta, payload)
+        elif kind == _KIND_MIGRATE:
+            self._handle_migrate(meta, payload)
         elif kind == _KIND_CLEAN:
             root = self.workdir
             if meta.get("subdir") is not None:
@@ -641,8 +742,58 @@ class ExchangeServer:
         with self._lock:
             self.gauge.track(rows)
             self.ledger.write(arr.nbytes)
+            self.ledger.rows_written += rows
+            b = store_bucket(name)
+            if b is not None:
+                # Receive-side skew attribution: the inbox name encodes the
+                # destination bucket, so every exchanged byte lands in the
+                # per-bucket counters the rebalancer reads.
+                self.ledger.bucket(b, arr.nbytes, rows)
             self.stats.frames_recv += 1
             self.stats.bytes_recv += arr.nbytes
+
+    def _handle_migrate(self, meta: Dict, payload: bytes) -> None:
+        rel = _check_rel_path(str(meta["path"]))
+        offset, total = int(meta["offset"]), int(meta["total"])
+        if offset < 0 or total < 0 or offset + len(payload) > total:
+            raise TransportError(
+                f"bad migration chunk bounds: offset={offset} "
+                f"len={len(payload)} total={total}")
+        if not payload and total > 0:
+            raise TransportError(f"empty migration chunk for {rel!r}")
+        final = os.path.join(self.workdir, *rel.split("/"))
+        part = final + PART_SUFFIX
+        os.makedirs(os.path.dirname(final), exist_ok=True)
+        if offset == 0:
+            f = open(part, "wb")      # (re)start: truncate any stale staging
+        elif os.path.exists(part):
+            f = open(part, "r+b")
+        else:
+            raise TransportError(
+                f"migration chunk at offset {offset} without staged prefix "
+                f"for {rel!r} — sender must restart the file")
+        with f:
+            f.seek(offset)
+            if payload:
+                f.write(payload)
+            if self.fsync and offset + len(payload) >= total:
+                f.flush()
+                os.fsync(f.fileno())
+        if offset + len(payload) >= total:
+            os.replace(part, final)   # atomic: never a torn shard file
+            if self.fsync:
+                dirfd = os.open(os.path.dirname(final), os.O_RDONLY)
+                try:
+                    os.fsync(dirfd)
+                finally:
+                    os.close(dirfd)
+        with self._lock:
+            # Deliberately NOT bucket-attributed: migration bytes are
+            # rebalancing overhead, and folding them into bucket_bytes would
+            # make a just-moved bucket look hot at its new owner.
+            self.ledger.write(len(payload))
+            self.stats.migrate_frames += 1
+            self.stats.migrate_bytes += len(payload)
 
     # -- accounting / lifecycle ----------------------------------------------
     def drain_accounting(self, ledger: IOLedger,
@@ -652,9 +803,8 @@ class ExchangeServer:
         and hand over (then reset) the wire stats accumulated since the last
         drain."""
         with self._lock:
-            for k, v in self.ledger.as_dict().items():
-                setattr(ledger, k, getattr(ledger, k) + v)
-                setattr(self.ledger, k, 0)
+            ledger.merge(self.ledger.as_dict())
+            self.ledger = IOLedger()
             if gauge is not None:
                 gauge.track(self.gauge.peak_rows)
             out = self.stats
@@ -705,5 +855,7 @@ def make_transport(pcfg, workdir: str, ledger: IOLedger,
                 "starts loopback servers and plumbs their addresses through")
         return SocketTransport(workdir, ledger, gauge, peers=peers,
                                namespace=getattr(pcfg, "exchange_namespace",
-                                                 None))
+                                                 None),
+                               map_version=getattr(pcfg, "shard_map_version",
+                                                   None))
     raise ValueError(f"unknown transport {kind!r} (expected 'fs' or 'socket')")

@@ -86,13 +86,47 @@ Training then streams straight from the sharded corpus manifest:
      for one read pass.
 
    Every job's artifacts stay bit-identical to a serial single-job run;
-   each job's stores live under the job's namespace subdir of every host
+   each job's stores live under the job's namespace subdir of every job's host
    workdir plus <ctrl>/<job tag>/ for manifests and checkpoints.
+
+5. Skew rebalancing + elastic hosts.  RMAT degree skew concentrates hot
+   buckets on a few hosts; the controller's versioned shard map can move
+   those bucket shards to colder (or freshly admitted) hosts between
+   phases.  Start a run with rebalancing armed — the controller snapshots
+   per-bucket I/O from the ledgers at every phase barrier, plans a greedy
+   migration off the hottest host, and ships the shards over the exchange
+   transport (MIGRATE frames, ack-after-durable, resumable):
+
+       PYTHONPATH=src python -m repro.launch.cluster run \
+           --hosts 2 --workdir /tmp/cluster --scale 14 --nb 8 --rebalance
+
+   Or drive it by hand from a second terminal while a run is live (the
+   run drops its control address in <workdir>/ctrl/controller_addr):
+
+       # one-shot: arm a rebalance at the next phase barrier
+       PYTHONPATH=src python -m repro.launch.cluster rebalance \
+           --workdir /tmp/cluster
+       # elastic admission: a new empty host joins mid-run; the next
+       # rebalance assigns it shards, later phases run on it
+       PYTHONPATH=src python -m repro.launch.cluster admit \
+           --workdir /tmp/cluster --host-workdir /tmp/cluster/host2
+       # inspect the live map, per-bucket byte loads, and host roster
+       PYTHONPATH=src python -m repro.launch.cluster status \
+           --workdir /tmp/cluster
+
+   Invariants the rebalancer keeps (tests/test_shardmap.py asserts all
+   of them): artifacts stay BIT-IDENTICAL to the never-rebalanced run —
+   the map changes where bytes live, never what they are; migrations are
+   checkpointed per file, so a killed host resumes without re-sending
+   completed shards; frames routed under a stale map version are refused
+   by the receiving host.  benchmarks/bench_skew.py measures the payoff
+   (makespan + per-host byte spread, static vs rebalanced).
 
 Subcommands: `host` (the worker daemon an exec backend or an operator
 starts), `run` (controller + hosts end to end), `spec` (emit a ClusterSpec
 JSON for external orchestration), `submit`/`queue`/`drain` (the job
-queue).
+queue), `status`/`rebalance`/`admit` (admin RPCs against a live
+controller).
 """
 
 from __future__ import annotations
@@ -100,6 +134,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import socket
 import sys
 
 from ..core.cluster import (
@@ -109,6 +144,7 @@ from ..core.cluster import (
     HostRunner,
     HostSpec,
     LocalExecBackend,
+    _ctrl_request,
 )
 from ..core.jobqueue import JobScheduler, load_state, submit_job
 from ..core.types import GraphConfig
@@ -160,7 +196,9 @@ def cmd_run(args) -> int:
                            checkpoint=not args.no_checkpoint,
                            max_restarts=args.max_restarts,
                            barrier_timeout=args.barrier_timeout,
-                           advertise=args.advertise or None)
+                           advertise=args.advertise or None,
+                           rebalance=args.rebalance)
+    _write_ctrl_addr(ctrl_dir, gen.controller.public_addr)
     try:
         manifest, ledger = gen.run(csr_variant=args.csr_variant)
         print(f"[graph] manifest {manifest}")
@@ -176,6 +214,58 @@ def cmd_run(args) -> int:
         return 0
     finally:
         gen.close()
+
+
+def _write_ctrl_addr(ctrl_dir: str, addr: str) -> None:
+    """Drop the live controller's admin address where the `status` /
+    `rebalance` / `admit` subcommands expect it (best effort — an
+    operator can always pass --controller explicitly)."""
+    os.makedirs(ctrl_dir, exist_ok=True)
+    with open(os.path.join(ctrl_dir, "controller_addr"), "w") as f:
+        f.write(addr)
+
+
+def _ctrl_addr(args) -> str:
+    if getattr(args, "controller", ""):
+        return args.controller
+    path = os.path.join(os.path.abspath(args.workdir), "ctrl",
+                        "controller_addr")
+    try:
+        with open(path) as f:
+            return f.read().strip()
+    except OSError:
+        raise SystemExit(f"no --controller given and {path} not found "
+                         "(is a run live in this workdir?)")
+
+
+def _admin_request(addr: str, req: dict) -> dict:
+    host, _, port = addr.rpartition(":")
+    with socket.create_connection((host, int(port)), timeout=30.0) as sock:
+        return _ctrl_request(sock, {"op": "admin", **req})
+
+
+def cmd_status(args) -> int:
+    print(json.dumps(_admin_request(_ctrl_addr(args), {"cmd": "status"}),
+                     indent=1, sort_keys=True))
+    return 0
+
+
+def cmd_rebalance(args) -> int:
+    _admin_request(_ctrl_addr(args), {"cmd": "rebalance"})
+    print("rebalance armed: plan/migrate/commit runs at the next "
+          "phase barrier")
+    return 0
+
+
+def cmd_admit(args) -> int:
+    out = _admin_request(_ctrl_addr(args), {
+        "cmd": "admit",
+        "workdir": os.path.abspath(args.host_workdir),
+        "host": args.host_name,
+        "launch": not args.no_launch,
+    })
+    print(json.dumps(out))
+    return 0
 
 
 def _parse_walk_spec(s: str):
@@ -231,6 +321,7 @@ def cmd_drain(args) -> int:
                          barrier_timeout=args.barrier_timeout,
                          checkpoint=not args.no_checkpoint,
                          advertise=args.advertise or None)
+    _write_ctrl_addr(_queue_root(args), sched.controller.public_addr)
     try:
         summary = sched.drain()
         print(json.dumps(summary, indent=1))
@@ -298,7 +389,37 @@ def main(argv=None) -> int:
     r.add_argument("--max-restarts", type=int, default=1)
     r.add_argument("--barrier-timeout", type=float, default=600.0)
     r.add_argument("--no-checkpoint", action="store_true")
+    r.add_argument("--rebalance", action="store_true",
+                   help="rebalance hot bucket shards off straggler hosts "
+                        "at every phase barrier (skew-aware shard map)")
     r.set_defaults(fn=cmd_run)
+
+    admin = argparse.ArgumentParser(add_help=False)
+    admin.add_argument("--workdir", default="",
+                       help="run root; reads <workdir>/ctrl/controller_addr")
+    admin.add_argument("--controller", default="",
+                       help="controller host:port (overrides --workdir)")
+
+    st = sub.add_parser("status", parents=[admin],
+                        help="live shard map, bucket loads, host roster")
+    st.set_defaults(fn=cmd_status)
+
+    rb = sub.add_parser("rebalance", parents=[admin],
+                        help="arm a shard rebalance at the next phase "
+                             "barrier of the live run")
+    rb.set_defaults(fn=cmd_rebalance)
+
+    ad = sub.add_parser("admit", parents=[admin],
+                        help="admit a new host into the live cluster "
+                             "(owns nothing until the next rebalance)")
+    ad.add_argument("--host-workdir", required=True,
+                    help="the new host's LOCAL workdir")
+    ad.add_argument("--host-name", default="127.0.0.1",
+                    help="launch target for the backend template")
+    ad.add_argument("--no-launch", action="store_true",
+                    help="register only; the operator starts the `host` "
+                         "daemon out of band")
+    ad.set_defaults(fn=cmd_admit)
 
     sb = sub.add_parser("submit", help="append one job to the queue "
                                        "(no cluster needed)")

@@ -1,7 +1,10 @@
 """Hypothesis property tests for the cluster config-shape invariants:
 ClusterSpec / peer_addrs parsing round-trips, bucket-ownership partition
-laws, and result_config_key normalizing cluster/transport fields out of
-checkpoint keys (resume across cluster shapes must hit the same key).
+laws, result_config_key normalizing cluster/transport fields out of
+checkpoint keys (resume across cluster shapes must hit the same key), and
+the shard-map laws (core/shardmap.py): partition preserved under arbitrary
+assign/admit histories, strict version bumps, JSON round-trips,
+stale-frame fencing, and plan_rebalance determinism/conservation.
 
 Module-level importorskip, same policy as tests/test_property.py: the
 non-hypothesis twins of the critical cases live in tests/test_cluster.py so
@@ -22,6 +25,12 @@ from repro.core.cluster import (  # noqa: E402
     parse_peer_addrs,
 )
 from repro.core.phases import PlainCfg, result_config_key  # noqa: E402
+from repro.core.shardmap import (  # noqa: E402
+    ShardMap,
+    apply_moves,
+    frame_version_ok,
+    plan_rebalance,
+)
 
 _SETTINGS = dict(max_examples=80, deadline=None)
 
@@ -105,3 +114,140 @@ def test_result_config_key_erases_transport_and_peers(pcfg, peers, transport):
     assert result_config_key(
         dataclasses.replace(pcfg, pooled_cascade=True)) \
         != result_config_key(dataclasses.replace(pcfg, pooled_cascade=False))
+    # ... and the live shard-map version is pure routing state: a resumed
+    # run must hit the same checkpoint keys after any number of rebalances
+    assert result_config_key(
+        dataclasses.replace(pcfg, shard_map_version=7)) \
+        == result_config_key(pcfg)
+
+
+# ---------------------------------------------------------------------------
+# ShardMap laws (core/shardmap.py)
+# ---------------------------------------------------------------------------
+
+
+def _apply_history(nb, num_hosts, ops):
+    """Replay a drawn (admit | assign) op list as VALID mutations, mapping
+    raw drawn ints onto the map's current shape; returns the map plus the
+    count of applied mutations and of applied assigns."""
+    smap = ShardMap.contiguous(nb, num_hosts)
+    mutations = assigns = 0
+    for op in ops:
+        if op[0] == "admit":
+            hid = smap.admit_host()
+            assert hid == smap.num_hosts - 1
+            mutations += 1
+        else:
+            if smap.num_hosts < 2:
+                continue   # every assign would be a rejected no-op
+            b = op[1] % smap.nb
+            h = op[2] % smap.num_hosts
+            if h == smap.owner_of(b):
+                h = (h + 1) % smap.num_hosts
+            smap.assign(b, h)
+            mutations += 1
+            assigns += 1
+    return smap, mutations, assigns
+
+
+_ops = st.lists(
+    st.one_of(
+        st.just(("admit",)),
+        st.tuples(st.just("assign"), st.integers(0, 2**32),
+                  st.integers(0, 2**32))),
+    max_size=24)
+
+
+@given(num_hosts=st.integers(1, 8), nb=st.integers(0, 64))
+@settings(**_SETTINGS)
+def test_contiguous_map_reproduces_static_split(num_hosts, nb):
+    nb += num_hosts   # nb >= num_hosts
+    smap = ShardMap.contiguous(nb, num_hosts)
+    spec = ClusterSpec(nb=nb, hosts=tuple(
+        HostSpec(h, f"/data/w{h}") for h in range(num_hosts)))
+    assert smap.version == 0 and smap.gens == [0] * nb
+    for b in range(nb):
+        assert smap.owner_of(b) == spec.owner_of(b)
+    for h in range(num_hosts):
+        assert smap.buckets_of(h) == list(spec.buckets_of(h))
+
+
+@given(num_hosts=st.integers(1, 6), nb=st.integers(0, 26), ops=_ops)
+@settings(**_SETTINGS)
+def test_mutation_history_preserves_partition_and_bumps_version(
+        num_hosts, nb, ops):
+    nb += num_hosts
+    smap, mutations, assigns = _apply_history(nb, num_hosts, ops)
+    smap.validate()   # partition invariant after ANY valid history
+    # every mutation bumps the version exactly once; every assign bumps
+    # exactly one bucket's gen exactly once
+    assert smap.version == mutations
+    assert sum(smap.gens) == assigns
+    # buckets_of inverts owner_of and partitions range(nb)
+    seen = [b for h in range(smap.num_hosts) for b in smap.buckets_of(h)]
+    assert sorted(seen) == list(range(nb))
+    # JSON round-trip is exact
+    assert ShardMap.from_json(smap.to_json()) == smap
+
+
+@given(frame=st.none() | st.integers(0, 2**31), minv=st.integers(0, 2**31))
+@settings(**_SETTINGS)
+def test_frame_version_fencing_laws(frame, minv):
+    # unversioned senders always pass (compat); versioned frames pass
+    # iff at-or-past the ratchet, so passing is monotone in the frame
+    # version and anti-monotone in the ratchet
+    ok = frame_version_ok(frame, minv)
+    if frame is None:
+        assert ok
+    else:
+        assert ok == (frame >= minv)
+        if ok:
+            assert frame_version_ok(frame + 1, minv)
+        if minv:
+            assert frame_version_ok(frame, minv - 1) or not ok
+
+
+@st.composite
+def rebalance_cases(draw):
+    num_hosts = draw(st.integers(1, 6))
+    nb = num_hosts + draw(st.integers(0, 12))
+    smap, _, _ = _apply_history(nb, num_hosts, draw(_ops))
+    loads = dict(enumerate(draw(st.lists(st.integers(0, 1 << 30),
+                                         min_size=nb, max_size=nb))))
+    return smap, loads, draw(st.integers(0, 4))
+
+
+@given(case=rebalance_cases())
+@settings(**_SETTINGS)
+def test_plan_rebalance_laws(case):
+    smap, loads, max_moves = case
+    moves = plan_rebalance(smap, loads, max_moves=max_moves)
+    # pure function of (map, loads): replanning from the same snapshot
+    # (e.g. a resumed rebalance) yields the identical plan
+    assert plan_rebalance(smap, loads, max_moves=max_moves) == moves
+    # each bucket moves at most once per plan (one barrier dispatch)
+    assert len({b for b, _, _ in moves}) == len(moves)
+    if max_moves:
+        assert len(moves) <= max_moves
+    if smap.num_hosts < 2:
+        assert moves == []
+
+    def host_loads(owners):
+        hl = [0] * smap.num_hosts
+        for b, v in loads.items():
+            hl[owners[b]] += v
+        return hl
+
+    before = host_loads(smap.owners)
+    vbefore = smap.version
+    # the plan applies cleanly (src fields match live owners, in order)
+    apply_moves(smap, moves)
+    smap.validate()
+    assert smap.version == vbefore + len(moves)
+    after = host_loads(smap.owners)
+    # conservation: rebalancing moves bytes, never creates or drops them
+    assert sum(after) == sum(before)
+    # a non-empty plan strictly improves balance (sum of squared host
+    # loads — the potential function that proves the planner terminates)
+    if moves:
+        assert sum(v * v for v in after) < sum(v * v for v in before)

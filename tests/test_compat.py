@@ -1,0 +1,76 @@
+"""The jax version floor and the compat shims must agree.
+
+distributed/compat.py carries three fallbacks that exist ONLY because the
+container pins jax at the floor (0.4.37) while the public names
+(`jax.shard_map`, `lax.axis_size`, `lax.pvary`) graduated in 0.4.38.
+These tests pin that story to reality: the floor constant matches the
+shims' rationale, the installed jax satisfies the floor, and — when the
+installed jax IS the floor — every fallback branch is live (none of the
+shims is dead code).  If the container's jax ever moves past the floor,
+test_all_shims_live_at_the_floor starts vacuously passing and
+test_floor_tracks_installed_jax fails loudly instead: the signal to bump
+JAX_VERSION_FLOOR and delete the then-dead fallbacks (ROADMAP item).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax import lax
+from jax.sharding import Mesh
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import compat
+
+# (module, public name) pairs whose post-floor graduation is each shim's
+# reason to exist — one entry per shim in compat.py, kept in sync by eye.
+POST_FLOOR_NAMES = [(jax, "shard_map"), (lax, "axis_size"), (lax, "pvary")]
+
+
+def _vtuple(s: str):
+    return tuple(int(p) for p in s.split(".")[:3])
+
+
+def test_floor_constant_matches_shim_story():
+    assert compat.JAX_VERSION_FLOOR == (0, 4, 37)
+    assert len(POST_FLOOR_NAMES) == 3   # three shims, three reasons
+
+
+def test_floor_tracks_installed_jax():
+    v = _vtuple(jax.__version__)
+    assert v >= compat.JAX_VERSION_FLOOR, (
+        f"installed jax {jax.__version__} is below the documented floor")
+    # The floor exists to mark where the fallbacks stop being needed.  If
+    # the container's jax has every public name, the floor is stale and
+    # the fallbacks are dead branches — bump JAX_VERSION_FLOOR and delete
+    # them (see compat.py's module doc + ROADMAP "jax version floor").
+    if all(hasattr(m, n) for m, n in POST_FLOOR_NAMES):
+        assert v == compat.JAX_VERSION_FLOOR, (
+            f"jax {jax.__version__} has shard_map/axis_size/pvary natively;"
+            " the compat fallbacks are dead — raise the floor and prune")
+
+
+def test_all_shims_live_at_the_floor():
+    if _vtuple(jax.__version__) != compat.JAX_VERSION_FLOOR:
+        pytest.skip("only meaningful on a floor-pinned container")
+    # At the floor NONE of the public names exist yet, so every fallback
+    # branch in compat.py is the live one — no shim is dead weight.
+    for mod, name in POST_FLOOR_NAMES:
+        assert not hasattr(mod, name), (
+            f"{mod.__name__}.{name} exists at the floor; the compat shim "
+            "for it is dead code")
+    from jax.experimental.shard_map import shard_map as experimental
+    assert compat.shard_map is experimental
+
+
+def test_shims_execute_inside_shard_map():
+    # Whichever branch is live, the three names must compose: axis_size
+    # constant-folds to the mesh axis length, pvary is (at worst) identity.
+    mesh = Mesh(np.array(jax.devices()[:1]), ("i",))
+
+    def body(x):
+        return compat.pvary(x, ("i",)) + compat.axis_size("i")
+
+    y = compat.shard_map(body, mesh=mesh, in_specs=P("i"),
+                         out_specs=P("i"))(jnp.zeros(4, jnp.int32))
+    np.testing.assert_array_equal(np.asarray(y), np.ones(4, np.int32))
