@@ -13,6 +13,9 @@ One module per paper table/figure (DESIGN.md §6):
                         sequential fraction, peak resident rows
   bench_merge_fanin     cascaded external merge fan-in sweep: pass-count x
                         bytes trade-off, bit-identity asserted per point
+  bench_overlap         overlapped (prefetch + write-behind) vs serial I/O
+                        on a throttled I/O-bound merge cascade — strict
+                        wall-time win gated, sha parity, overlap fraction
   bench_transport       bucket-exchange transport: filesystem {sender}_{seq}
                         runs vs framed TCP (loopback), wall time + wire
                         bytes, bit-identity asserted per point
@@ -59,9 +62,10 @@ def main():
 
     from . import (bench_csr_variants, bench_external_shuffle,
                    bench_external_walks, bench_hash_vs_sort, bench_jobqueue,
-                   bench_lm, bench_merge_fanin, bench_roofline,
-                   bench_single_node, bench_skew, bench_strong_scaling,
-                   bench_transport, bench_weak_scaling)
+                   bench_lm, bench_merge_fanin, bench_overlap,
+                   bench_roofline, bench_single_node, bench_skew,
+                   bench_strong_scaling, bench_transport,
+                   bench_weak_scaling)
 
     benches = {
         "single_node": lambda: bench_single_node.run(
@@ -82,6 +86,11 @@ def main():
             nruns=128 if args.fast else 512,
             run_rows=512 if args.fast else 2048,
             fanins=(0, 4, 16) if args.fast else (0, 4, 8, 16, 64, 256)),
+        # no reduced fast variant: the throttled I/O toll already keeps the
+        # point to a few seconds, and shrinking it further would let thread
+        # handoff noise into the strict serial-vs-overlap wall-time gate.
+        "overlap": lambda: bench_overlap.run(
+            nruns=8, run_rows=16384, max_fanin=4),
         "transport": lambda: bench_transport.run(
             scales=(9, 10) if args.fast else (10, 12),
             walkers=32 if args.fast else 64,

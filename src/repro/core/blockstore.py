@@ -25,20 +25,41 @@ reduce to, each with *bounded* main memory and ledger-accounted I/O:
                        ship when full" — the bucket exchange used by both the
                        external shuffle and redistribute).
 
+  PrefetchReader /     the asynchronous I/O layer (GraphConfig.io_overlap):
+  WriteBehindWriter    the paper's dedicated-I/O-thread model.  All four
+                       primitives above accept `overlap=True`, which
+                       double-buffers reads (next block fetched on an I/O
+                       thread while the current one is consumed) and
+                       completes appends/Transport sends off-thread with at
+                       most one chunk in flight — a pass then costs
+                       ~max(read, compute, write) instead of their sum.
+                       Timing-only by construction: merges are stable and
+                       the single FIFO writer preserves append order, so
+                       output bytes are identical with overlap on or off;
+                       I/O-thread errors rethrow at the consuming call
+                       site; residency at most DOUBLES (gauge-tracked).
+
 IOLedger counts block-granular sequential vs random transfers (the paper's
-cost unit, C_e edges per block); MemoryGauge records the largest buffer the
-disk tier ever materializes, so tests can *assert* the bounded-memory claim
+cost unit, C_e edges per block) plus the overlap stall counters
+read_wait_s / write_wait_s / overlap_s; MemoryGauge records the largest
+buffer the disk tier ever materializes — including in-flight prefetch and
+write-behind buffers — so tests can *assert* the bounded-memory claim
 instead of trusting it.
 """
 
 from __future__ import annotations
 
+import contextlib
 import dataclasses
 import heapq
 import json
 import os
+import queue
 import re
 import shutil
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -107,59 +128,108 @@ class IOLedger:
     # BENCH_*.json skew surface share these counters.
     bucket_bytes: Dict[int, int] = dataclasses.field(default_factory=dict)
     bucket_rows: Dict[int, int] = dataclasses.field(default_factory=dict)
+    # Overlap stall counters (seconds), fed by the async I/O layer
+    # (PrefetchReader / WriteBehindWriter): read_wait_s is consumer time
+    # blocked on a prefetched block (the read side failed to hide behind
+    # compute), write_wait_s is producer time blocked on the in-flight
+    # write slot, and overlap_s is I/O-thread time that DID hide behind
+    # compute — the measured win.  Serial paths leave all three at 0.
+    read_wait_s: float = 0.0
+    write_wait_s: float = 0.0
+    overlap_s: float = 0.0
+
+    # Counter updates arrive from the consuming thread AND the async I/O
+    # threads concurrently (`+=` is not atomic), so every mutator below
+    # takes a lock.  The lock is deliberately NOT a dataclass field:
+    # as_dict()/fields() never see it, and pickling drops/rebuilds it.
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state.pop("_lock", None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
 
     def hashes(self, count: int):
-        self.hash_evals += count
+        with self._lock:
+            self.hash_evals += count
 
     def read(self, nbytes: int, sequential: bool = True):
-        self.bytes_read += nbytes
-        if sequential:
-            self.seq_reads += 1
-        else:
-            self.rand_reads += 1
+        with self._lock:
+            self.bytes_read += nbytes
+            if sequential:
+                self.seq_reads += 1
+            else:
+                self.rand_reads += 1
 
     def write(self, nbytes: int, sequential: bool = True):
-        self.bytes_written += nbytes
-        if sequential:
-            self.seq_writes += 1
-        else:
-            self.rand_writes += 1
+        with self._lock:
+            self.bytes_written += nbytes
+            if sequential:
+                self.seq_writes += 1
+            else:
+                self.rand_writes += 1
+
+    def wrote_rows(self, rows: int) -> None:
+        """Writer-side row accounting (append_run + the exchange server's
+        durable frame writes) — locked because write-behind appends land on
+        the I/O thread while the consumer charges reads."""
+        with self._lock:
+            self.rows_written += int(rows)
+
+    def stall(self, read_wait_s: float = 0.0, write_wait_s: float = 0.0,
+              overlap_s: float = 0.0) -> None:
+        """Charge overlap stall/win time (seconds; see the field comments)."""
+        with self._lock:
+            self.read_wait_s += read_wait_s
+            self.write_wait_s += write_wait_s
+            self.overlap_s += overlap_s
 
     def bucket(self, bucket: int, nbytes: int, rows: int = 0) -> None:
         """Attribute I/O to a bucket (the per-bucket skew counters)."""
         b = int(bucket)
-        if nbytes:
-            self.bucket_bytes[b] = self.bucket_bytes.get(b, 0) + int(nbytes)
-        if rows:
-            self.bucket_rows[b] = self.bucket_rows.get(b, 0) + int(rows)
+        with self._lock:
+            if nbytes:
+                self.bucket_bytes[b] = self.bucket_bytes.get(b, 0) + int(nbytes)
+            if rows:
+                self.bucket_rows[b] = self.bucket_rows.get(b, 0) + int(rows)
 
-    def as_dict(self) -> Dict[str, int]:
-        """Flat {str: int}: dict-valued fields flatten to "field[index]"
+    def as_dict(self) -> Dict[str, float]:
+        """Flat {str: number}: dict-valued fields flatten to "field[index]"
         keys (see split_counter_key), so snapshot/delta/merge/JSON all keep
-        working on one flat namespace."""
-        out: Dict[str, int] = {}
-        for f in dataclasses.fields(self):
-            v = getattr(self, f.name)
-            if isinstance(v, dict):
-                for idx in sorted(v):
-                    out[f"{f.name}[{int(idx)}]"] = int(v[idx])
-            else:
-                out[f.name] = v
+        working on one flat namespace.  Integer counters stay ints; the
+        stall counters are float seconds.  Taken under the lock so a
+        snapshot read concurrently with I/O-thread charges is consistent."""
+        out: Dict[str, float] = {}
+        with self._lock:
+            for f in dataclasses.fields(self):
+                v = getattr(self, f.name)
+                if isinstance(v, dict):
+                    for idx in sorted(v):
+                        out[f"{f.name}[{int(idx)}]"] = int(v[idx])
+                else:
+                    out[f.name] = v
         return out
 
     def merge(self, counters: Dict[str, int]) -> None:
         """Add a flat counter dict (another ledger's as_dict / a report's
         delta) into this ledger — the one sanctioned way to combine
         ledgers, replacing ad-hoc per-field setattr loops.  Unknown keys
-        are ignored so old reports merge into newer ledgers."""
-        for k, v in counters.items():
-            name, idx = split_counter_key(k)
-            if idx is not None:
-                d = getattr(self, name, None)
-                if isinstance(d, dict):
-                    d[idx] = d.get(idx, 0) + int(v)
-            elif hasattr(self, name) and not isinstance(getattr(self, name), dict):
-                setattr(self, name, getattr(self, name) + v)
+        are ignored so old reports merge into newer ledgers.  Float-valued
+        counters (the stall seconds) add exactly like the int ones."""
+        with self._lock:
+            for k, v in counters.items():
+                name, idx = split_counter_key(k)
+                if idx is not None:
+                    d = getattr(self, name, None)
+                    if isinstance(d, dict):
+                        d[idx] = d.get(idx, 0) + int(v)
+                elif hasattr(self, name) and not isinstance(getattr(self, name), dict):
+                    setattr(self, name, getattr(self, name) + v)
 
     def snapshot(self) -> Dict[str, int]:
         return self.as_dict()
@@ -178,13 +248,52 @@ class MemoryGauge:
     observed.  Tests cap `chunk_edges` far below n and assert
     peak_rows = O(chunk_edges) — the measurable form of the paper's "main
     memory usage is independent of graph size".
+
+    `budget_rows` is the disk tier's row budget (the writer chunk bound,
+    cfg.chunk_edges) where the driver knows it; 0 = unknown.  Merge cursors
+    derive their refill block size from budget / fan-in (`cursor_rows`), so
+    deep cascades cannot exceed the budget even when prefetch doubles
+    residency — overlapped working sets stay <= 2x the serial chunk bound,
+    never more.
     """
 
     peak_rows: int = 0
+    budget_rows: int = 0
+
+    # Overlap means the I/O thread and the consumer report buffers
+    # concurrently; the max update is read-modify-write, so it is locked.
+    # Like IOLedger's, the lock is not a field and never pickles.
+    def __post_init__(self):
+        self._lock = threading.Lock()
+
+    def __getstate__(self):
+        state = dict(self.__dict__)
+        state.pop("_lock", None)
+        return state
+
+    def __setstate__(self, state):
+        self.__dict__.update(state)
+        self._lock = threading.Lock()
 
     def track(self, rows: int) -> None:
-        if rows > self.peak_rows:
-            self.peak_rows = int(rows)
+        with self._lock:
+            if rows > self.peak_rows:
+                self.peak_rows = int(rows)
+
+    def cursor_rows(self, fan: int, max_run: int, overlap: bool = False) -> int:
+        """Refill block size for a fan-in-`fan` merge cursor: an even split
+        of the largest run across the cursors, capped by budget_rows / fan
+        so the TOTAL cursor residency never exceeds the budget — halved
+        again under overlap, where each cursor holds its current block plus
+        one prefetched block in flight.  Block size is timing-only: merges
+        are stable, so any positive value yields identical output bytes."""
+        brows = max(1, int(max_run) // max(1, int(fan)))
+        if self.budget_rows > 0:
+            cap = self.budget_rows // max(1, int(fan))
+            if overlap:
+                cap //= 2
+            brows = min(brows, max(1, cap))
+        return brows
 
 
 class BlockStore:
@@ -234,7 +343,7 @@ class BlockStore:
         path = os.path.join(self.dir, f"run_{name}.npy")
         np.save(path, arr)
         self.ledger.write(arr.nbytes)
-        self.ledger.rows_written += int(arr.shape[0])
+        self.ledger.wrote_rows(arr.shape[0])
         self.gauge.track(arr.shape[0])
         self._runs.append(path)
         self._rows.append(int(arr.shape[0]))
@@ -276,6 +385,11 @@ class BlockStore:
         return sum(self._rows)
 
     def read_run(self, i: int, sequential: bool = True) -> Tuple[np.ndarray, ...]:
+        """Load one WHOLE run resident (mmap_mode=None) — ledger-charged and
+        gauge-tracked like any other materialization.  Only for consumers
+        that genuinely need the full run at once (per-run stable sorts:
+        sort_runs, partition_runs); block-sized consumers must stream
+        through iter_blocks instead of paying a whole-run buffer."""
         arr = np.load(self._runs[i], mmap_mode=None)
         self.ledger.read(arr.nbytes, sequential)
         self.gauge.track(arr.shape[0])
@@ -363,41 +477,362 @@ def _keys_of(key: KeySpec, cols: Tuple[np.ndarray, ...]) -> np.ndarray:
     return np.asarray(cols[key])
 
 
-def sort_runs(store: BlockStore, out: BlockStore, key: KeySpec = 0) -> BlockStore:
+def sort_runs(store: BlockStore, out: BlockStore, key: KeySpec = 0,
+              overlap: bool = False) -> BlockStore:
     """External-sort pass 1: each run sorted in RAM by `key`, rewritten.
 
-    Runs are writer-bounded (<= chunk rows), so resident memory is one run.
-    """
-    for i in range(store.num_runs):
-        cols = store.read_run(i)
-        order = np.argsort(_keys_of(key, cols), kind="stable")
-        out.append_run(*(c[order] for c in cols))
+    Runs are writer-bounded (<= chunk rows), so resident memory is one run
+    — with `overlap`, run i+1 is prefetched and run i-1's sorted output
+    written behind while run i sorts, so resident memory is <= 2 runs and
+    wall time tends to max(read, sort, write) instead of their sum.  Output
+    is byte-identical either way: the single FIFO writer preserves append
+    order, and sorting is per-run."""
+    row_bytes = store.ncols * store.dtype.itemsize
+    prefetch = overlap and store.num_runs > 0 and (
+        max(store.run_rows(i) for i in range(store.num_runs)) * row_bytes
+        >= _ASYNC_IO_MIN_BYTES)
+    runs: Iterator[Tuple[np.ndarray, ...]] = store.iter_runs()
+    if prefetch:
+        runs = PrefetchReader(runs, ledger=store.ledger)
+    try:
+        with write_behind([out], store.ledger, store.gauge,
+                          enabled=overlap) as sinks:
+            for cols in runs:
+                if prefetch:
+                    store.gauge.track(2 * cols[0].shape[0])
+                order = np.argsort(_keys_of(key, cols), kind="stable")
+                sinks[0].append_run(*(c[order] for c in cols))
+    finally:
+        if isinstance(runs, PrefetchReader):
+            runs.close()
     return out
+
+
+# ---------------------------------------------------------------------------
+# Asynchronous I/O layer (io_overlap): double-buffered prefetch + write-behind
+# ---------------------------------------------------------------------------
+
+_DONE = object()  # PrefetchReader's end-of-stream sentinel
+
+
+class PrefetchReader:
+    """Double-buffered background reader — the paper's dedicated I/O thread
+    (read half): disk transfers overlap compute instead of alternating with
+    it, so a pass costs max(read, compute) instead of read + compute.
+
+    Wraps any block iterator so the NEXT item is produced on an I/O thread
+    while the consumer works on the current one.  Exactly ONE item is ever
+    in flight (the consumer's current block + one prefetched block = the
+    depth-2 double buffer), so resident memory is at most 2x the serial
+    bound, never more — callers report the doubled aggregate to their gauge.
+
+    Stall accounting (`ledger`): consumer time blocked on the pending item
+    is charged to `read_wait_s`; producer time hidden behind compute to
+    `overlap_s`.  Exceptions raised by the wrapped iterator ON THE I/O
+    THREAD are captured by the future and rethrown HERE, at the consuming
+    call site (`__next__`), so error propagation, checkpoint/resume and
+    mid-phase-kill semantics are identical to the serial path.
+
+    `executor` shares one single-worker executor across several readers —
+    a k-way merge's cursors all refill through ONE I/O thread (the paper's
+    one-I/O-thread-per-node model), each keeping one outstanding refill.
+    Without it the reader owns a private single-worker executor.  Exhaust
+    the iterator or call close(); abandoning a reader mid-stream without
+    close() leaks its in-flight future until the executor drains it.
+    """
+
+    def __init__(self, it: Iterator, ledger: Optional[IOLedger] = None,
+                 executor: Optional[ThreadPoolExecutor] = None):
+        self._it = iter(it)
+        self._ledger = ledger
+        self._own = executor is None
+        self._ex = executor if executor is not None else ThreadPoolExecutor(
+            max_workers=1, thread_name_prefix="io_prefetch")
+        self._fut = self._ex.submit(self._pull)
+
+    def _pull(self):
+        t0 = time.perf_counter()
+        item = next(self._it, _DONE)
+        return item, time.perf_counter() - t0
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        if self._fut is None:
+            raise StopIteration
+        t0 = time.perf_counter()
+        item, produce_s = self._fut.result()  # I/O-thread errors rethrow here
+        wait_s = time.perf_counter() - t0
+        if self._ledger is not None:
+            self._ledger.stall(read_wait_s=wait_s,
+                               overlap_s=max(0.0, produce_s - wait_s))
+        if item is _DONE:
+            self._fut = None
+            if self._own:
+                self._ex.shutdown(wait=False)
+            raise StopIteration
+        self._fut = self._ex.submit(self._pull)
+        return item
+
+    def close(self) -> None:
+        """Stop prefetching (early-exit consumers): cancel or drain the
+        in-flight pull, swallowing its result/error — the stream is being
+        abandoned, there is no consuming call site left to rethrow at."""
+        fut, self._fut = self._fut, None
+        if fut is not None and not fut.cancel():
+            try:
+                fut.result()
+            except BaseException:
+                pass
+        if self._own:
+            self._ex.shutdown(wait=True)
+
+
+class WriteBehindWriter:
+    """Write-behind sink multiplexer — the paper's dedicated I/O thread
+    (write half): `append_run` emission and Transport channel sends complete
+    off-thread with AT MOST ONE chunk in flight, so emitters pay
+    max(compute, write) per chunk instead of compute + write.
+
+    Wraps an ordered list of run sinks (BlockStores, or Transport channels —
+    anything with BlockStore's `append_run(*cols, tag=)` signature); `sink(d)`
+    returns a proxy whose `append_run` enqueues (d, cols, tag) on a bounded
+    queue (maxsize=1) drained by ONE writer thread.  A single FIFO queue and
+    a single thread preserve the exact serial append order across ALL sinks
+    — and therefore run tags and receivers' lexicographic recovery order —
+    which is why write-behind can never change result bytes.  In-flight
+    residency is <= 1 queued + 1 being-written chunk; the doubled aggregate
+    is reported to `gauge` per enqueue.  Enqueued column arrays must not be
+    mutated afterwards (every call site emits fresh arrays).
+
+    Producer time blocked on the full queue is charged to `write_wait_s`;
+    writer-thread time hidden behind compute to `overlap_s` (on close).
+    Errors raised by a sink ON THE WRITER THREAD are captured and rethrown
+    at the producer's next append_run/flush/close — the consuming call
+    site — and once one append fails no later chunk is written (fail-stop,
+    so a checkpointed phase can never be marked complete past a lost write).
+    Call flush()/close() (or use the context manager / `write_behind`)
+    before relying on the sinks' contents.
+    """
+
+    def __init__(self, sinks: Sequence, ledger: Optional[IOLedger] = None,
+                 gauge: Optional[MemoryGauge] = None):
+        self._sinks = list(sinks)
+        self._ledger = ledger
+        self._gauge = gauge
+        self._q: "queue.Queue" = queue.Queue(maxsize=1)
+        self._err: Optional[BaseException] = None
+        self._write_s = 0.0   # writer-thread time (accumulated there)
+        self._wait_s = 0.0    # producer time blocked on the queue
+        self._thread: Optional[threading.Thread] = threading.Thread(
+            target=self._drain, name="io_writebehind", daemon=True)
+        self._thread.start()
+
+    def _drain(self):
+        while True:
+            item = self._q.get()
+            try:
+                if item is None:
+                    return
+                d, cols, tag = item
+                if self._err is None:
+                    t0 = time.perf_counter()
+                    try:
+                        self._sinks[d].append_run(*cols, tag=tag)
+                    except BaseException as e:  # rethrown at the producer
+                        self._err = e
+                    self._write_s += time.perf_counter() - t0
+            finally:
+                self._q.task_done()
+
+    def sink(self, d: int) -> "_WriteBehindSink":
+        """The async proxy for `sinks[d]` (same append_run signature)."""
+        return _WriteBehindSink(self, d)
+
+    def _put(self, d: int, cols: Tuple[np.ndarray, ...],
+             tag: Optional[str]) -> None:
+        if self._err is not None:
+            self.abort()
+            raise self._err
+        if sum(int(np.asarray(c).nbytes) for c in cols) < _ASYNC_IO_MIN_BYTES:
+            # Tiny chunk: the queue wake + GIL ping-pong costs more than
+            # the write itself.  Drain anything in flight first (FIFO
+            # order, hence bit-identity, is preserved), then append inline
+            # on the producer — errors surface here, the consuming site.
+            self._q.join()
+            if self._err is not None:
+                self.abort()
+                raise self._err
+            self._sinks[d].append_run(*cols, tag=tag)
+            return
+        if self._gauge is not None and cols:
+            # current chunk + one in flight: the <= 2x residency bound.
+            self._gauge.track(2 * int(np.asarray(cols[0]).shape[0]))
+        t0 = time.perf_counter()
+        self._q.put((d, cols, tag))
+        self._wait_s += time.perf_counter() - t0
+
+    def flush(self) -> None:
+        """Barrier: every enqueued chunk is durably appended on return;
+        rethrows any writer-thread error at this (consuming) call site."""
+        self._q.join()
+        if self._err is not None:
+            self.abort()
+            raise self._err
+
+    def close(self) -> None:
+        """flush() + stop the writer thread + charge the stall counters."""
+        if self._thread is None:
+            return
+        self._q.put(None)
+        self._thread.join()
+        self._thread = None
+        if self._ledger is not None:
+            self._ledger.stall(write_wait_s=self._wait_s,
+                               overlap_s=max(0.0, self._write_s - self._wait_s))
+        if self._err is not None:
+            raise self._err
+
+    def abort(self) -> None:
+        """Stop the writer WITHOUT rethrowing (error-path teardown: the
+        producer is already unwinding and must not be masked)."""
+        if self._thread is None:
+            return
+        self._q.put(None)
+        self._thread.join()
+        self._thread = None
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.close()
+        else:
+            self.abort()
+
+
+class _WriteBehindSink:
+    """Per-destination proxy view: the same `append_run(*cols, tag=)` shape
+    call sites already use, so partition/merge emit loops are overlap-
+    agnostic.  Returns None (run indices are writer-thread state; no current
+    emitter consumes append_run's return value)."""
+
+    __slots__ = ("_w", "_d")
+
+    def __init__(self, w: WriteBehindWriter, d: int):
+        self._w, self._d = w, d
+
+    def append_run(self, *cols: np.ndarray, tag: Optional[str] = None) -> None:
+        self._w._put(self._d, cols, tag)
+
+
+@contextlib.contextmanager
+def write_behind(sinks: Sequence, ledger: Optional[IOLedger],
+                 gauge: Optional[MemoryGauge], enabled: bool = True):
+    """Scoped write-behind over `sinks`: yields proxy sinks (or the
+    originals when disabled — one code path for overlap on/off), and on
+    clean exit flushes the writer, rethrowing any I/O-thread error inside
+    the caller's scope.  On an exception the writer is torn down without
+    masking the original error."""
+    if not enabled:
+        yield list(sinks)
+        return
+    wb = WriteBehindWriter(sinks, ledger=ledger, gauge=gauge)
+    try:
+        yield [wb.sink(d) for d in range(len(sinks))]
+    except BaseException:
+        wb.abort()
+        raise
+    else:
+        wb.close()
+
+
+# Routing one buffer through an I/O thread costs tens of µs of
+# queue/future handoff plus GIL ping-pong with the consumer.  Async I/O
+# only pays once a buffer's transfer time dwarfs that, so transfers below
+# this byte floor (fine-grained budgets, huge fan-ins, toy scales) run
+# synchronously even under io_overlap: merge cursors refill inline
+# (_cursor_plan), sort_runs skips run prefetch, and WriteBehindWriter
+# appends tiny chunks on the producer (after draining anything in flight,
+# so FIFO order — and therefore bit-identity — is preserved).  Timing-only
+# either way; output bytes never depend on the floor, and the
+# halved-budget block size only applies when a second block is actually
+# in flight.
+_ASYNC_IO_MIN_BYTES = 1 << 16
+
+
+def _cursor_plan(gauge: MemoryGauge, fan: int, max_run: int, row_bytes: int,
+                 block_rows: int, overlap: bool) -> Tuple[int, bool]:
+    """(refill block rows, prefetch on?) for one merge's cursors.  Explicit
+    block_rows is respected unchanged; otherwise the gauge budget splits
+    across the fan-in (MemoryGauge.cursor_rows), halved only when prefetch
+    actually engages — which it does only above _PREFETCH_MIN_BYTES."""
+    brows = (block_rows if block_rows > 0
+             else gauge.cursor_rows(fan, max_run, overlap=False))
+    prefetch = overlap and brows * row_bytes >= _ASYNC_IO_MIN_BYTES
+    if prefetch and block_rows <= 0:
+        brows = gauge.cursor_rows(fan, max_run, overlap=True)
+    return brows, prefetch
+
+
+@contextlib.contextmanager
+def _merge_io(overlap: bool):
+    """The shared I/O thread of ONE merge (None when overlap is off): a
+    single-worker executor serves every cursor's refills — the paper's
+    dedicated-I/O-thread-per-node model — with one outstanding prefetch per
+    cursor, so in-flight blocks never exceed one extra block per cursor
+    (the <= 2x residency bound the gauge records)."""
+    if not overlap:
+        yield None
+        return
+    ex = ThreadPoolExecutor(max_workers=1, thread_name_prefix="io_merge")
+    try:
+        yield ex
+    finally:
+        ex.shutdown(wait=True, cancel_futures=True)
+
+
+def _segment_blocks(store: BlockStore, runs: Sequence[int],
+                    block_rows: int) -> Iterator[np.ndarray]:
+    """Raw block producer of one sorted segment: run files streamed back to
+    back in <= block_rows slices.  At most ONE memmap is held open at a time
+    (the previous run's reference is dropped as soon as it drains — the
+    open-file bound of the bounded-fan-in merge).  Ledger charges happen
+    here, i.e. on the I/O thread when prefetched (IOLedger is locked)."""
+    for ri in runs:
+        mm = store.open_run(ri)
+        for off in range(0, mm.shape[0], block_rows):
+            blk = np.asarray(mm[off : off + block_rows])
+            store.ledger.read(blk.nbytes)
+            yield blk
+        mm = None
 
 
 class _MergeCursor:
     """Block-buffered read cursor over one sorted *segment*: an ordered list
     of run files of a single store that together form one globally sorted
     sequence — a plain run, or a cascade intermediate store's runs back to
-    back (merge_runs helper).
-
-    At most ONE memmap is held open at a time (run files are streamed back to
-    back and released as they drain), so a k-way merge keeps exactly k run
-    files open no matter how many runs each segment spans.
+    back (merge_runs helper).  Refills come from _segment_blocks, optionally
+    prefetched on the merge's shared I/O thread (`prefetch`, io_overlap):
+    the NEXT block reads from disk while the heap drains the current one.
     """
 
-    __slots__ = ("store", "key", "block_rows", "runs", "_ri", "_mm", "_off",
+    __slots__ = ("store", "key", "block_rows", "runs", "_blocks",
                  "block_keys", "block_cols", "_rel", "_done")
 
     def __init__(self, store: BlockStore, runs: Sequence[int], key: KeySpec,
-                 block_rows: int):
+                 block_rows: int,
+                 prefetch: Optional[ThreadPoolExecutor] = None):
         self.store = store
         self.key = key
         self.block_rows = max(1, int(block_rows))
         self.runs = [r for r in runs if store.run_rows(r) > 0]
-        self._ri = 0
-        self._mm: Optional[np.ndarray] = None
-        self._off = 0
+        blocks = _segment_blocks(store, self.runs, self.block_rows)
+        self._blocks: Iterator[np.ndarray] = (
+            blocks if prefetch is None
+            else PrefetchReader(blocks, ledger=store.ledger, executor=prefetch))
         self.block_keys: Optional[np.ndarray] = None
         self.block_cols: Optional[Tuple[np.ndarray, ...]] = None
         self._rel = 0
@@ -405,28 +840,18 @@ class _MergeCursor:
         self._advance()
 
     def _advance(self):
-        """Load the next block, crossing run-file boundaries; the previous
-        run's memmap reference is dropped as soon as it drains (closes the
-        file — the open-file bound of the bounded-fan-in merge)."""
-        while True:
-            if self._mm is None:
-                if self._ri >= len(self.runs):
-                    self._done = True
-                    self.block_keys = self.block_cols = None
-                    return
-                self._mm = self.store.open_run(self.runs[self._ri])
-                self._off = 0
-            if self._off >= self._mm.shape[0]:
-                self._mm = None
-                self._ri += 1
-                continue
-            blk = np.asarray(self._mm[self._off : self._off + self.block_rows])
-            self.store.ledger.read(blk.nbytes)
-            self._off += blk.shape[0]
-            self.block_cols = tuple(blk[:, c] for c in range(blk.shape[1]))
-            self.block_keys = _keys_of(self.key, self.block_cols)
-            self._rel = 0
+        """Consume the next block (keys are computed HERE, on the consumer
+        thread — the I/O thread only moves bytes).  A prefetch-thread read
+        error rethrows out of next(), i.e. at this consuming call site."""
+        blk = next(self._blocks, None)
+        if blk is None:
+            self._done = True
+            self.block_keys = self.block_cols = None
             return
+        self.block_cols = tuple(blk[:, c] for c in range(blk.shape[1]))
+        self.block_keys = _keys_of(self.key, self.block_cols)
+        self._rel = 0
+        return
 
     def head_key(self) -> int:
         if self._rel >= self.block_keys.shape[0]:
@@ -514,7 +939,7 @@ def _merge_cursors(cursors: List[_MergeCursor], ncols: int,
 
 def merge_segments(
     segments: Sequence[Tuple[BlockStore, Sequence[int]]], key: KeySpec = 0,
-    block_rows: int = 0,
+    block_rows: int = 0, overlap: bool = False,
 ) -> Iterator[Tuple[np.ndarray, ...]]:
     """STABLE streaming merge over pre-built sorted segments.
 
@@ -528,6 +953,12 @@ def merge_segments(
     drain in segment order (see _merge_cursors), so any consecutive grouping
     of segments is bit-identical to the flat merge — the same stability
     contract merge_runs' inline cascade relies on.
+
+    `overlap` refills every cursor through ONE shared I/O thread
+    (_merge_io + PrefetchReader) while the heap drains current blocks —
+    timing-only, bit-identical output, <= 2x cursor-buffer residency
+    (recorded in the gauge; block sizes shrink under a gauge budget so the
+    doubled set still fits — MemoryGauge.cursor_rows).
     """
     segs = [(s, [r for r in runs if s.run_rows(r) > 0]) for s, runs in segments]
     segs = [(s, runs) for s, runs in segs if runs]
@@ -536,11 +967,15 @@ def merge_segments(
     max_run = max(s.run_rows(r) for s, runs in segs for r in runs)
     flush_rows = max(block_rows, max_run)
     fan = len(segs)
-    brows = block_rows if block_rows > 0 else max(1, max_run // max(1, fan))
     lead = segs[0][0]
-    lead.gauge.track(brows * fan)
-    cursors = [_MergeCursor(s, runs, key, brows) for s, runs in segs]
-    yield from _merge_cursors(cursors, lead.ncols, flush_rows)
+    brows, prefetch = _cursor_plan(
+        lead.gauge, fan, max_run, lead.ncols * lead.dtype.itemsize,
+        block_rows, overlap)
+    lead.gauge.track(brows * fan * (2 if prefetch else 1))
+    with _merge_io(prefetch) as ex:
+        cursors = [_MergeCursor(s, runs, key, brows, prefetch=ex)
+                   for s, runs in segs]
+        yield from _merge_cursors(cursors, lead.ncols, flush_rows)
 
 
 CASCADE_MARKER = "__cas_l"  # substring naming cascade intermediate store dirs
@@ -560,7 +995,7 @@ def clean_cascade_stores(workdir: str) -> None:
 
 def merge_runs(
     store: BlockStore, key: KeySpec = 0, block_rows: int = 0,
-    max_fanin: int = 0,
+    max_fanin: int = 0, overlap: bool = False,
 ) -> Iterator[Tuple[np.ndarray, ...]]:
     """External-sort pass 2: streaming k-way merge of sorted runs, with a
     bounded-fan-in cascade (the STXXL-style log-depth multiway merge).
@@ -584,6 +1019,13 @@ def merge_runs(
     merge is STABLE (equal keys emit in run order — see _merge_cursors) and
     groups are consecutive runs, so cascading never reorders anything.
 
+    `overlap` runs every level's cursor refills on a shared I/O thread and
+    the intermediate stores' appends through a write-behind thread (see
+    merge_segments / WriteBehindWriter): each cascade pass costs
+    ~max(read, merge, write) instead of their sum.  Timing-only — the
+    single FIFO writer preserves run order and the merge is stable, so
+    output is bit-identical to the serial path at every fan-in.
+
     Yields tuples of column arrays in globally sorted order; merge_runs over
     sort_runs output is therefore a stable external sort of the store.
     """
@@ -600,11 +1042,15 @@ def merge_runs(
         (store, [i]) for i in range(nruns)]
     scratch: List[BlockStore] = []
 
-    def cursors_of(segs):
+    row_bytes = store.ncols * store.dtype.itemsize
+
+    def cursors_of(segs, ex):
         fan = len(segs)
-        brows = block_rows if block_rows > 0 else max(1, max_run // max(1, fan))
-        store.gauge.track(brows * fan)
-        return [_MergeCursor(s, runs, key, brows) for s, runs in segs]
+        brows, pf = _cursor_plan(store.gauge, fan, max_run, row_bytes,
+                                 block_rows, overlap)
+        store.gauge.track(brows * fan * (2 if pf else 1))
+        return [_MergeCursor(s, runs, key, brows, prefetch=ex if pf else None)
+                for s, runs in segs]
 
     try:
         level = 0
@@ -617,8 +1063,12 @@ def merge_runs(
                     store.ledger, columns=store.columns, dtype=store.dtype,
                     gauge=store.gauge, fresh=True)
                 scratch.append(out)
-                for cols in _merge_cursors(cursors_of(grp), store.ncols, flush_rows):
-                    out.append_run(*cols)
+                with _merge_io(overlap) as ex, \
+                        write_behind([out], store.ledger, store.gauge,
+                                     enabled=overlap) as sinks:
+                    for cols in _merge_cursors(cursors_of(grp, ex),
+                                               store.ncols, flush_rows):
+                        sinks[0].append_run(*cols)
                 # This group's input segments are consumed; reclaim the ones
                 # that are cascade intermediates (never the caller's store).
                 for s, _ in grp:
@@ -627,7 +1077,9 @@ def merge_runs(
                 nxt.append((out, list(range(out.num_runs))))
             segments = nxt
             level += 1
-        yield from _merge_cursors(cursors_of(segments), store.ncols, flush_rows)
+        with _merge_io(overlap) as ex:
+            yield from _merge_cursors(cursors_of(segments, ex), store.ncols,
+                                      flush_rows)
     finally:
         for s in scratch:
             s.destroy()
@@ -639,6 +1091,7 @@ def partition_runs(
     part_of: Callable[..., np.ndarray],
     tag_prefix: Optional[str] = None,
     transform: Optional[Callable[..., Tuple[np.ndarray, ...]]] = None,
+    overlap: bool = False,
 ) -> Sequence:
     """Bounded-memory bucket partition (paper Alg. 8's bucket exchange).
 
@@ -656,30 +1109,51 @@ def partition_runs(
     column count; `part_of` sees the TRANSFORMED values) — the inline-map
     hook of the recompute relabel: u -> perm(u) applied during the very
     scan that ships each edge to owner(perm(src)).
+
+    `overlap` prefetches the next input run on an I/O thread while the
+    current one is transformed/sorted/sliced, and completes every
+    append_run — including Transport channel SENDS — through one
+    write-behind thread with at most one chunk in flight.  The single FIFO
+    writer preserves the exact serial append order across all destinations
+    (and therefore the `{tag_prefix}_{seq}` tags), so the exchange bytes
+    are bit-identical to the serial path; residency is <= 2 runs in flight
+    (tracked in the gauge).
     """
     nparts = len(outs)
     seq = [0] * nparts
-    for cols in store.iter_runs():
-        if transform is not None:
-            cols = tuple(transform(*cols))
-        dest = np.asarray(part_of(*cols))
-        if dest.size and (int(dest.min()) < 0 or int(dest.max()) >= nparts):
-            bad = dest[(dest < 0) | (dest >= nparts)]
-            raise ValueError(
-                f"partition_runs: part_of produced bucket {int(bad[0])} outside "
-                f"[0, {nparts}) for {bad.size} record(s) of store "
-                f"'{store.name}' — a bad owner function would silently "
-                "shrink the record stream")
-        order = np.argsort(dest, kind="stable")
-        cols = tuple(c[order] for c in cols)
-        dest = dest[order]
-        starts = np.searchsorted(dest, np.arange(nparts))
-        ends = np.searchsorted(dest, np.arange(nparts), side="right")
-        for d in range(nparts):
-            if ends[d] > starts[d]:
-                tag = None if tag_prefix is None else f"{tag_prefix}_{seq[d]:05d}"
-                outs[d].append_run(*(c[starts[d] : ends[d]] for c in cols), tag=tag)
-                seq[d] += 1
+    runs: Iterator[Tuple[np.ndarray, ...]] = store.iter_runs()
+    if overlap:
+        runs = PrefetchReader(runs, ledger=store.ledger)
+    try:
+        with write_behind(outs, store.ledger, store.gauge,
+                          enabled=overlap) as sinks:
+            for cols in runs:
+                if overlap:
+                    store.gauge.track(2 * cols[0].shape[0])
+                if transform is not None:
+                    cols = tuple(transform(*cols))
+                dest = np.asarray(part_of(*cols))
+                if dest.size and (int(dest.min()) < 0 or int(dest.max()) >= nparts):
+                    bad = dest[(dest < 0) | (dest >= nparts)]
+                    raise ValueError(
+                        f"partition_runs: part_of produced bucket {int(bad[0])} outside "
+                        f"[0, {nparts}) for {bad.size} record(s) of store "
+                        f"'{store.name}' — a bad owner function would silently "
+                        "shrink the record stream")
+                order = np.argsort(dest, kind="stable")
+                cols = tuple(c[order] for c in cols)
+                dest = dest[order]
+                starts = np.searchsorted(dest, np.arange(nparts))
+                ends = np.searchsorted(dest, np.arange(nparts), side="right")
+                for d in range(nparts):
+                    if ends[d] > starts[d]:
+                        tag = None if tag_prefix is None else f"{tag_prefix}_{seq[d]:05d}"
+                        sinks[d].append_run(*(c[starts[d] : ends[d]] for c in cols),
+                                            tag=tag)
+                        seq[d] += 1
+    finally:
+        if isinstance(runs, PrefetchReader):
+            runs.close()
     return outs
 
 

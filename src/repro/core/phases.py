@@ -68,6 +68,7 @@ from .blockstore import (
     merge_segments,
     partition_runs,
     sort_runs,
+    write_behind,
 )
 from .corpus import (
     ShardedWalks,
@@ -112,6 +113,12 @@ class PlainCfg:
     rounds: int
     merge_block_rows: int = 0
     merge_fanin: int = 64
+    # Overlap disk I/O with compute (blockstore PrefetchReader /
+    # WriteBehindWriter) in every external kernel.  Timing-only — outputs
+    # are bit-identical on vs. off — so result_config_key normalizes it
+    # out; REPRO_IO_OVERLAP=0/false/off forces it off regardless of the
+    # GraphConfig (the CI serial shard).
+    io_overlap: bool = True
     # Exchange transport: "fs" (shared-filesystem {sender}_{seq} runs) or
     # "socket" (framed TCP to the ExchangeServer at peer_addrs[bucket]).
     transport: str = "fs"
@@ -170,6 +177,16 @@ class PlainCfg:
         return self.m // self.nb
 
 
+def _resolve_io_overlap(cfg) -> bool:
+    """cfg.io_overlap, unless REPRO_IO_OVERLAP is set in the environment —
+    the override keeps one CI tier-1 shard on the strictly serial path
+    without threading a config change through every fixture."""
+    env = os.environ.get("REPRO_IO_OVERLAP")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "off", "no", "")
+    return bool(getattr(cfg, "io_overlap", True))
+
+
 def plain_config(cfg) -> PlainCfg:
     """Accepts GraphConfig (or anything duck-typed like it)."""
     shuffle_variant = str(getattr(cfg, "shuffle_variant", "external"))
@@ -184,6 +201,7 @@ def plain_config(cfg) -> PlainCfg:
         nb=int(cfg.nb), chunk_edges=int(cfg.chunk_edges), rounds=int(cfg.rounds),
         merge_block_rows=int(getattr(cfg, "merge_block_rows", 0)),
         merge_fanin=int(getattr(cfg, "merge_fanin", 64)),
+        io_overlap=_resolve_io_overlap(cfg),
         # "filesystem" is accepted as an alias and canonicalized, so every
         # downstream comparison can test == "fs" alone.
         transport={"filesystem": "fs"}.get(
@@ -253,7 +271,8 @@ def result_config_key(pcfg: PlainCfg) -> PlainCfg:
     but its phase schedule is not, and a cross-mode resume could replay a
     phase whose inputs the other mode's checkpoint GC already freed."""
     return dataclasses.replace(pcfg, transport="fs", peer_addrs=None,
-                               exchange_namespace=None, shard_map_version=0)
+                               exchange_namespace=None, shard_map_version=0,
+                               io_overlap=True)
 
 
 def validate_external_shape(p: PlainCfg) -> PlainCfg:
@@ -460,20 +479,25 @@ def shuffle_bucket_round(pcfg: PlainCfg, workdir: str, i: int, r: int, *,
         src = tr.drain_inbox(pv_store_name(r, i), columns=("v",))
         tmp = BlockStore(workdir, pv_store_name(r, i) + "_sorted", ledger, columns=("v",),
                          gauge=gauge, fresh=True)
-        sort_runs(src, tmp, key=key)
+        sort_runs(src, tmp, key=key, overlap=pcfg.io_overlap)
         outs = tr.channels(lambda j: pv_store_name(r + 1, j), nb, columns=("v",))
         seq = [0] * nb
         pos = 0
-        for (v,) in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
-                               max_fanin=pcfg.merge_fanin):
-            o = 0
-            while o < v.size:
-                j = pos // blk
-                take = min(v.size - o, (j + 1) * blk - pos)
-                outs[j].append_run(v[o : o + take], tag=f"{i:03d}_{seq[j]:05d}")
-                seq[j] += 1
-                o += take
-                pos += take
+        with write_behind(outs, ledger, gauge,
+                          enabled=pcfg.io_overlap) as sinks:
+            for (v,) in merge_runs(tmp, key=key,
+                                   block_rows=pcfg.merge_block_rows,
+                                   max_fanin=pcfg.merge_fanin,
+                                   overlap=pcfg.io_overlap):
+                o = 0
+                while o < v.size:
+                    j = pos // blk
+                    take = min(v.size - o, (j + 1) * blk - pos)
+                    sinks[j].append_run(v[o : o + take],
+                                        tag=f"{i:03d}_{seq[j]:05d}")
+                    seq[j] += 1
+                    o += take
+                    pos += take
         tmp.destroy()
         src.destroy()
 
@@ -536,7 +560,8 @@ def relabel_recompute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         outs = tr.channels(owned_store_name, pcfg.nb)
         partition_runs(store, outs, lambda a, b: a // B,
-                       tag_prefix=f"{i:03d}", transform=relabel)
+                       tag_prefix=f"{i:03d}", transform=relabel,
+                       overlap=pcfg.io_overlap)
 
 
 class _RegenRuns:
@@ -594,7 +619,8 @@ def gen_relabel_recompute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         outs = tr.channels(owned_store_name, pcfg.nb)
         partition_runs(src, outs, lambda a, b: a // B,
-                       tag_prefix=f"{i:03d}", transform=relabel)
+                       tag_prefix=f"{i:03d}", transform=relabel,
+                       overlap=pcfg.io_overlap)
 
 
 def relabel_scatter_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
@@ -609,7 +635,8 @@ def relabel_scatter_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *
     store = BlockStore.attach(workdir, in_name, ledger, gauge=gauge)
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         outs = tr.channels(lambda j: relabel_inbox_name(pass_ix, j), pcfg.nb)
-        partition_runs(store, outs, lambda a, b: b // B, tag_prefix=f"{i:03d}")
+        partition_runs(store, outs, lambda a, b: b // B, tag_prefix=f"{i:03d}",
+                       overlap=pcfg.io_overlap)
 
 
 def relabel_apply_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
@@ -624,14 +651,16 @@ def relabel_apply_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
         inbox = tr.drain_inbox(relabel_inbox_name(pass_ix, i))   # post-barrier
     tmp = BlockStore(workdir, relabel_inbox_name(pass_ix, i) + "_sorted", ledger,
                      gauge=gauge, fresh=True)
-    sort_runs(inbox, tmp, key=1)
+    sort_runs(inbox, tmp, key=1, overlap=pcfg.io_overlap)
     pv = BlockStore.attach(workdir, pv_store_name(pcfg.rounds, i), ledger,
                            columns=("v",), gauge=gauge)
     lookup = MonotoneLookup([pv], block_rows=chunk, base=i * B, gauge=gauge)
     out = BlockStore(workdir, edges_store_name(i, pass_ix), ledger, gauge=gauge, fresh=True)
-    for a, b in merge_runs(tmp, key=1, block_rows=pcfg.merge_block_rows,
-                           max_fanin=pcfg.merge_fanin):
-        out.append_run(lookup.lookup(b), a)
+    with write_behind([out], ledger, gauge, enabled=pcfg.io_overlap) as sinks:
+        for a, b in merge_runs(tmp, key=1, block_rows=pcfg.merge_block_rows,
+                               max_fanin=pcfg.merge_fanin,
+                               overlap=pcfg.io_overlap):
+            sinks[0].append_run(lookup.lookup(b), a)
     tmp.destroy()
     inbox.destroy()
 
@@ -647,7 +676,7 @@ def relabel_sort_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int, *,
         inbox = tr.drain_inbox(relabel_inbox_name(pass_ix, i))
     out = BlockStore(workdir, relabel_inbox_name(pass_ix, i) + "_sorted",
                      ledger, gauge=gauge, fresh=True)
-    sort_runs(inbox, out, key=1)
+    sort_runs(inbox, out, key=1, overlap=pcfg.io_overlap)
     return out.num_runs
 
 
@@ -662,17 +691,20 @@ def relabel_join_bucket(pcfg: PlainCfg, workdir: str, i: int, pass_ix: int,
     src = BlockStore.attach(workdir, src_name, ledger, gauge=gauge)
     if presorted:
         stream = merge_segments([(src, list(range(src.num_runs)))], key=1,
-                                block_rows=pcfg.merge_block_rows)
+                                block_rows=pcfg.merge_block_rows,
+                                overlap=pcfg.io_overlap)
     else:
         stream = merge_runs(src, key=1, block_rows=pcfg.merge_block_rows,
-                            max_fanin=pcfg.merge_fanin)
+                            max_fanin=pcfg.merge_fanin,
+                            overlap=pcfg.io_overlap)
     pv = BlockStore.attach(workdir, pv_store_name(pcfg.rounds, i), ledger,
                            columns=("v",), gauge=gauge)
     lookup = MonotoneLookup([pv], block_rows=chunk, base=i * B, gauge=gauge)
     out = BlockStore(workdir, edges_store_name(i, pass_ix), ledger, gauge=gauge,
                      fresh=True)
-    for a, b in stream:
-        out.append_run(lookup.lookup(b), a)
+    with write_behind([out], ledger, gauge, enabled=pcfg.io_overlap) as sinks:
+        for a, b in stream:
+            sinks[0].append_run(lookup.lookup(b), a)
 
 
 def redistribute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
@@ -684,7 +716,8 @@ def redistribute_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
     store = BlockStore.attach(workdir, edges_store_name(i, 1), ledger, gauge=gauge)
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         outs = tr.channels(owned_store_name, pcfg.nb)
-        partition_runs(store, outs, lambda a, b: a // B, tag_prefix=f"{i:03d}")
+        partition_runs(store, outs, lambda a, b: a // B, tag_prefix=f"{i:03d}",
+                       overlap=pcfg.io_overlap)
 
 
 def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
@@ -702,7 +735,7 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         owned = tr.drain_inbox(in_name)   # redistribute's multi-writer inbox
     tmp = BlockStore(workdir, in_name + "_sorted", ledger, gauge=gauge, fresh=True)
-    sort_runs(owned, tmp, key=key)
+    sort_runs(owned, tmp, key=key, overlap=pcfg.io_overlap)
     degv = np.zeros(B, np.int64)
     if gauge is not None:
         gauge.track(B)
@@ -711,7 +744,8 @@ def csr_bucket_sorted(pcfg: PlainCfg, workdir: str, i: int, *,
     adjv = np.lib.format.open_memmap(adjv_path, mode="w+", dtype=np.int64, shape=(total,))
     pos = 0
     for s, d in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
-                           max_fanin=pcfg.merge_fanin):
+                           max_fanin=pcfg.merge_fanin,
+                           overlap=pcfg.io_overlap):
         np.add.at(degv, s - base, 1)
         adjv[pos : pos + d.size] = d
         ledger.write(d.nbytes)
@@ -763,7 +797,7 @@ def csr_sort_bucket(pcfg: PlainCfg, workdir: str, i: int, *,
         owned = tr.drain_inbox(owned_store_name(i))
     out = BlockStore(workdir, sorted_owned_store_name(i), ledger, gauge=gauge,
                      fresh=True)
-    sort_runs(owned, out, key=csr_merge_key(pcfg))
+    sort_runs(owned, out, key=csr_merge_key(pcfg), overlap=pcfg.io_overlap)
     return out.num_runs
 
 
@@ -793,9 +827,11 @@ def cascade_merge_bucket(pcfg: PlainCfg, workdir: str, i: int, base: str,
             segments.append((s, list(range(s.num_runs))))
     out = BlockStore(workdir, pooled_cascade_store_name(base, level, g),
                      ledger, gauge=gauge, fresh=True)
-    for cols in merge_segments(segments, key=key,
-                               block_rows=pcfg.merge_block_rows):
-        out.append_run(*cols)
+    with write_behind([out], ledger, gauge, enabled=pcfg.io_overlap) as sinks:
+        for cols in merge_segments(segments, key=key,
+                                   block_rows=pcfg.merge_block_rows,
+                                   overlap=pcfg.io_overlap):
+            sinks[0].append_run(*cols)
 
 
 def csr_emit_bucket(pcfg: PlainCfg, workdir: str, i: int, src_name: str,
@@ -809,10 +845,12 @@ def csr_emit_bucket(pcfg: PlainCfg, workdir: str, i: int, src_name: str,
     src = BlockStore.attach(workdir, src_name, ledger, gauge=gauge)
     if presorted:
         stream = merge_segments([(src, list(range(src.num_runs)))], key=key,
-                                block_rows=pcfg.merge_block_rows)
+                                block_rows=pcfg.merge_block_rows,
+                                overlap=pcfg.io_overlap)
     else:
         stream = merge_runs(src, key=key, block_rows=pcfg.merge_block_rows,
-                            max_fanin=pcfg.merge_fanin)
+                            max_fanin=pcfg.merge_fanin,
+                            overlap=pcfg.io_overlap)
     return _emit_csr(pcfg, workdir, i, stream, src.total_rows(),
                      ledger=ledger, gauge=gauge)
 
@@ -845,7 +883,10 @@ def csr_bucket_scatter(pcfg: PlainCfg, workdir: str, i: int, *,
     degv = np.zeros(B, np.int64)
     if gauge is not None:
         gauge.track(B)
-    for s, _ in owned.iter_runs():
+    # Degree pass streams block-sized buffers, not whole runs: iter_runs
+    # would load each run file entirely (read_run's documented whole-run
+    # contract), spiking residency to the largest run instead of one chunk.
+    for s, _ in owned.iter_blocks(pcfg.chunk_edges):
         np.add.at(degv, s - base, 1)
     offv = np.concatenate([[0], np.cumsum(degv)]).astype(np.int64)
     adjv_path = csr_adjv_path(workdir, i)
@@ -862,7 +903,7 @@ def csr_bucket_scatter(pcfg: PlainCfg, workdir: str, i: int, *,
             cursor[v] += len(lst)
             ledger.write(8 * len(lst), sequential=False)
 
-    for s, d in owned.iter_runs():
+    for s, d in owned.iter_blocks(pcfg.chunk_edges):
         for sv, dv in zip((s - base).tolist(), d.tolist()):
             held_map.setdefault(sv, []).append(dv)
             held += 1
@@ -1062,7 +1103,8 @@ def walk_init_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
     with _exchange(pcfg, workdir, ledger, gauge, transport) as tr:
         outs = tr.channels(lambda d: wfront_store_name(0, d, wcfg.ns), pcfg.nb,
                            columns=("pos", "wid"))
-        partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}")
+        partition_runs(adv, outs, lambda p, w: p // B, tag_prefix=f"{j:03d}",
+                       overlap=pcfg.io_overlap)
     adv.destroy()
 
 
@@ -1085,9 +1127,10 @@ def walk_hop_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int, wcfg: WalkCfg,
                                columns=("pos", "wid"))
         tmp = BlockStore(workdir, wfront_store_name(t, j, wcfg.ns) + "_sorted",
                          ledger, columns=("pos", "wid"), gauge=gauge, fresh=True)
-        sort_runs(front, tmp, key=0)
+        sort_runs(front, tmp, key=0, overlap=pcfg.io_overlap)
         stream = merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
-                            max_fanin=pcfg.merge_fanin)
+                            max_fanin=pcfg.merge_fanin,
+                            overlap=pcfg.io_overlap)
         _walk_advance(pcfg, workdir, j, t, wcfg, stream, tr,
                       ledger=ledger, gauge=gauge)
         tmp.destroy()
@@ -1145,7 +1188,8 @@ class _HopEmitter:
                            pcfg.nb, columns=("pos", "wid"))
         partition_runs(self.adv, outs,
                        lambda p, w: p // pcfg.bucket_size,
-                       tag_prefix=f"{self.j:03d}")
+                       tag_prefix=f"{self.j:03d}",
+                       overlap=pcfg.io_overlap)
         self.adv.destroy()
 
 
@@ -1210,10 +1254,11 @@ def walk_hop_fused_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int,
                              wfront_store_name(t, j, w.ns) + "_sorted",
                              ledger, columns=("pos", "wid"), gauge=gauge,
                              fresh=True)
-            sort_runs(front, tmp, key=0)
+            sort_runs(front, tmp, key=0, overlap=pcfg.io_overlap)
             tmps.append(tmp)
             stream = merge_runs(tmp, key=0, block_rows=pcfg.merge_block_rows,
-                                max_fanin=pcfg.merge_fanin)
+                                max_fanin=pcfg.merge_fanin,
+                                overlap=pcfg.io_overlap)
             # head = [stream, pos_chunk, wid_chunk, offset] or None (drained)
             try:
                 pos, wid = next(stream)
@@ -1272,7 +1317,7 @@ def walk_hop_sort_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int,
                                columns=("pos", "wid"))
     out = BlockStore(workdir, wfront_store_name(t, j, wcfg.ns) + "_sorted",
                      ledger, columns=("pos", "wid"), gauge=gauge, fresh=True)
-    sort_runs(front, out, key=0)
+    sort_runs(front, out, key=0, overlap=pcfg.io_overlap)
     return out.num_runs
 
 
@@ -1290,10 +1335,12 @@ def walk_hop_join_bucket(pcfg: PlainCfg, workdir: str, j: int, t: int,
                                 columns=("pos", "wid"), gauge=gauge)
         if presorted:
             stream = merge_segments([(src, list(range(src.num_runs)))], key=0,
-                                    block_rows=pcfg.merge_block_rows)
+                                    block_rows=pcfg.merge_block_rows,
+                                    overlap=pcfg.io_overlap)
         else:
             stream = merge_runs(src, key=0, block_rows=pcfg.merge_block_rows,
-                                max_fanin=pcfg.merge_fanin)
+                                max_fanin=pcfg.merge_fanin,
+                                overlap=pcfg.io_overlap)
         _walk_advance(pcfg, workdir, j, t, wcfg, stream, tr,
                       ledger=ledger, gauge=gauge)
 
@@ -1313,7 +1360,8 @@ def walk_hist_scatter_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg
                                     ledger, columns=("wid", "step", "v"),
                                     gauge=gauge)
             partition_runs(src, outs, lambda w, st, v: w // wpb,
-                           tag_prefix=f"{j:03d}_{s:04d}")
+                           tag_prefix=f"{j:03d}_{s:04d}",
+                           overlap=pcfg.io_overlap)
 
 
 def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg, *,
@@ -1343,13 +1391,14 @@ def walk_hist_gather_bucket(pcfg: PlainCfg, workdir: str, j: int, wcfg: WalkCfg,
         return shard_path
     tmp = BlockStore(workdir, whist_inbox_name(j, wcfg.ns) + "_sorted", ledger,
                      columns=("wid", "step", "v"), gauge=gauge, fresh=True)
-    sort_runs(inbox, tmp, key=key)
+    sort_runs(inbox, tmp, key=key, overlap=pcfg.io_overlap)
     out = np.lib.format.open_memmap(shard_path, mode="w+", dtype=np.int64,
                                     shape=(w1 - w0, L + 1))
     flat = out.reshape(-1)
     base = w0 * (L + 1)
     for w, s, v in merge_runs(tmp, key=key, block_rows=pcfg.merge_block_rows,
-                              max_fanin=pcfg.merge_fanin):
+                              max_fanin=pcfg.merge_fanin,
+                              overlap=pcfg.io_overlap):
         flat[w * (L + 1) + s - base] = v
         ledger.write(v.nbytes)
     out.flush()
@@ -1813,7 +1862,10 @@ def _run_kernel(task):
     the process boundary themselves) back to the parent."""
     kernel, pcfg, workdir, args = task
     ledger = IOLedger()
-    gauge = MemoryGauge()
+    # budget_rows lets merge cursors derive refill blocks from the chunk
+    # budget (MemoryGauge.cursor_rows) so deep cascades stay under one
+    # chunk even when prefetch doubles residency.
+    gauge = MemoryGauge(budget_rows=pcfg.chunk_edges)
     # exchange_namespace is part of the identity: two jobs sharing one host
     # workdir must not reuse each other's (differently-namespaced) channels.
     key = (workdir, pcfg.transport, pcfg.peer_addrs,
@@ -2014,7 +2066,7 @@ class PartitionedGenerator:
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
         self.ledger = IOLedger()
-        self.gauge = MemoryGauge()
+        self.gauge = MemoryGauge(budget_rows=pcfg.chunk_edges)
         self._servers: List[ExchangeServer] = []
         self.exchange_stats = TransportStats()
         if pcfg.transport == "socket" and pcfg.peer_addrs is None:

@@ -20,6 +20,13 @@ Two variants, mirroring the paper:
                           CSR build degenerates to the trivial Alg. 1.
                           (The paper proposes but does NOT implement this
                           variant; we implement both and benchmark the gap.)
+
+Disk-tier twin's I/O overlap (cfg.io_overlap): the external redistribute
+(phases.redistribute_bucket, external.StreamingGenerator.redistribute)
+streams its partition scan through a prefetch thread and ships owner runs
+write-behind through the Transport (blockstore.PrefetchReader /
+WriteBehindWriter); this module's all_to_all is device-side and has no
+disk I/O to overlap.
 """
 
 from __future__ import annotations

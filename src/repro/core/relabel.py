@@ -25,6 +25,13 @@ bytes of both ring and all_to_all variants become per-element hash
 evaluations; this is the device twin of the disk tier's
 shuffle_variant="recompute" fast path.
 
+Disk-tier twin's I/O overlap (cfg.io_overlap): the external relabel kernels
+(phases.relabel_*_bucket, external.StreamingGenerator.relabel) prefetch
+their merge-cursor refills and complete their emitted runs write-behind
+(blockstore.PrefetchReader / WriteBehindWriter), hiding the sort-merge-join
+pass's disk time behind the lookup compute — this module is pure device
+compute with no disk I/O, so the flag has nothing to overlap here.
+
 Optimized variant (`relabel_alltoall`): ship each endpoint to its owner
 (capacity_all_to_all), gather, ship back.  One round trip instead of nb
 rounds — but the destinations are *raw R-MAT ids*, whose ownership is

@@ -89,6 +89,16 @@ class GraphConfig:
     # the scale-safe default.  0 = flat (unbounded fan-in); must be >= 2
     # otherwise.
     merge_fanin: int = 64
+    # Overlap disk I/O with compute in the external kernels: merge cursors
+    # double-buffer their refills on a background prefetch thread
+    # (blockstore.PrefetchReader) and run/partition emission completes
+    # write-behind with one chunk in flight (blockstore.WriteBehindWriter).
+    # Timing-only — outputs are bit-identical on vs. off, so the flag is
+    # normalized out of result_config_key; at most doubles the resident
+    # chunk bound (MemoryGauge-tracked).  Stall time lands in the IOLedger
+    # read_wait_s/write_wait_s/overlap_s counters.  Env override:
+    # REPRO_IO_OVERLAP=0 forces it off (CI serial shard).
+    io_overlap: bool = True
     # Dispatch the partitioned CSR sort's cascade merge LEVELS through the
     # worker pool / cluster as (bucket, group) tasks instead of cascading
     # inline within each bucket's kernel (phases._run_csr_sorted_pooled).

@@ -301,7 +301,7 @@ def external_walks(cfg, workdir: str, *, num_walkers: int, length: int,
     """
     pcfg = cfg if isinstance(cfg, PlainCfg) else plain_config(cfg)
     ledger = IOLedger() if ledger is None else ledger
-    gauge = MemoryGauge() if gauge is None else gauge
+    gauge = MemoryGauge(budget_rows=pcfg.chunk_edges) if gauge is None else gauge
     wcfg = WalkCfg(num_walkers=num_walkers, length=length, seed=seed,
                    out_name=out_name)
     orch = PhaseOrchestrator(workdir, ledger, checkpoint=checkpoint,

@@ -122,6 +122,23 @@ Training then streams straight from the sharded corpus manifest:
    by the receiving host.  benchmarks/bench_skew.py measures the payoff
    (makespan + per-host byte spread, static vs rebalanced).
 
+6. Overlapped I/O.  Every host's external kernels overlap disk reads and
+   writes with compute by default (GraphConfig.io_overlap — merge-cursor
+   prefetch + write-behind emission, core/blockstore.py); outputs are
+   bit-identical with the flag off, so flipping it never invalidates a
+   checkpoint.  Force the strictly serial path for a run or a single
+   host with the environment override:
+
+       REPRO_IO_OVERLAP=0 PYTHONPATH=src python -m repro.launch.cluster \
+           run --hosts 2 --workdir /tmp/cluster --scale 14 --nb 8
+
+   The time the pipeline could NOT hide shows up in every ledger
+   surfaced by `status` and the per-phase orchestrator deltas:
+   `read_wait_s` (consumer stalled on an unfinished prefetch),
+   `write_wait_s` (producer stalled on the in-flight chunk), and
+   `overlap_s` (I/O seconds that ran hidden behind compute).
+   benchmarks/bench_overlap.py gates the wall-time win.
+
 Subcommands: `host` (the worker daemon an exec backend or an operator
 starts), `run` (controller + hosts end to end), `spec` (emit a ClusterSpec
 JSON for external orchestration), `submit`/`queue`/`drain` (the job

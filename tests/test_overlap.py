@@ -1,0 +1,468 @@
+"""Overlapped I/O layer (ISSUE 9): PrefetchReader / WriteBehindWriter
+parity + error rethrow, stall-counter accounting, gauge bounds under
+doubled residency, io_overlap config plumbing, and on-vs-off bit-identity
+on the streaming, partitioned, and cluster shapes (incl. kill + resume)."""
+
+import hashlib
+import os
+import pickle
+
+import numpy as np
+import pytest
+
+from repro.core.blockstore import (
+    BlockStore,
+    IOLedger,
+    MemoryGauge,
+    PrefetchReader,
+    WriteBehindWriter,
+    merge_runs,
+    partition_runs,
+    sort_runs,
+    write_behind,
+)
+from repro.core.external import StreamingGenerator
+from repro.core.phases import (
+    _KERNELS,
+    PartitionedGenerator,
+    plain_config,
+    result_config_key,
+)
+from repro.core.types import GraphConfig
+
+
+def _digest(stream):
+    h = hashlib.sha256()
+    for cols in stream:
+        for c in cols:
+            h.update(np.ascontiguousarray(c).tobytes())
+    return h.hexdigest()
+
+
+def _store_digest(store):
+    h = hashlib.sha256()
+    for i in range(store.num_runs):
+        for c in store.read_run(i):
+            h.update(np.ascontiguousarray(c).tobytes())
+    return h.hexdigest()
+
+
+def _csr_sha(csr):
+    h = hashlib.sha256()
+    for o, a in csr:
+        h.update(np.asarray(o).tobytes())
+        h.update(np.asarray(a).tobytes())
+    return h.hexdigest()
+
+
+def _build(workdir, name, nruns=12, rows=128, seed=0):
+    store = BlockStore(workdir, name, IOLedger(), columns=("k", "p"))
+    rng = np.random.default_rng(seed)
+    for i in range(nruns):
+        k = np.sort(rng.integers(0, 1 << 30, rows))
+        store.append_run(k, i * rows + np.arange(rows))
+    return store
+
+
+# ---------------------------------------------------------------------------
+# PrefetchReader / WriteBehindWriter primitives
+# ---------------------------------------------------------------------------
+
+
+def test_prefetch_reader_yields_identical_stream():
+    items = [np.arange(i, i + 5) for i in range(7)]
+    led = IOLedger()
+    got = list(PrefetchReader(iter(items), ledger=led))
+    assert len(got) == len(items)
+    for a, b in zip(got, items):
+        np.testing.assert_array_equal(a, b)
+    # stall accounting landed somewhere (wait or hidden, both legal)
+    d = led.as_dict()
+    assert d["read_wait_s"] >= 0.0 and d["overlap_s"] >= 0.0
+
+
+def test_prefetch_reader_rethrows_at_consumer():
+    def gen():
+        yield 1
+        yield 2
+        raise OSError("disk gone")
+
+    r = PrefetchReader(gen())
+    assert next(r) == 1
+    assert next(r) == 2
+    with pytest.raises(OSError, match="disk gone"):
+        next(r)
+    r.close()  # close after error must not raise again
+
+
+def test_prefetch_reader_close_mid_stream():
+    def gen():
+        for i in range(100):
+            yield i
+
+    r = PrefetchReader(gen())
+    assert next(r) == 0
+    r.close()  # abandoning the stream must not hang or leak the thread
+
+
+@pytest.mark.parametrize("rows", [64, 8192])
+def test_write_behind_writer_parity_and_order(tmp_path, rows):
+    """Both sides of the async byte floor: 64-row chunks append inline
+    (handoff would cost more than the write), 8192-row int64 chunks ride
+    the writer thread — bit-identical stores and tag order either way."""
+    led, gauge = IOLedger(), MemoryGauge()
+    direct = BlockStore(str(tmp_path), "direct", led, columns=("a", "b"))
+    behind = BlockStore(str(tmp_path), "behind", led, columns=("a", "b"),
+                        gauge=gauge)
+    rng = np.random.default_rng(3)
+    chunks = [(rng.integers(0, 99, rows), rng.integers(0, 99, rows))
+              for _ in range(9)]
+    for a, b in chunks:
+        direct.append_run(a, b, tag=f"t_{direct.num_runs:05d}")
+    with WriteBehindWriter([behind], ledger=led, gauge=gauge) as w:
+        sink = w.sink(0)
+        for i, (a, b) in enumerate(chunks):
+            sink.append_run(a, b, tag=f"t_{i:05d}")
+    assert _store_digest(behind) == _store_digest(direct)
+    # FIFO single writer: tag order (= append order) is preserved
+    assert behind.manifest()["runs"] == direct.manifest()["runs"]
+
+
+def test_write_behind_error_rethrows_and_fails_stop(tmp_path):
+    class _Boom:
+        columns = ("v",)
+
+        def __init__(self):
+            self.appended = 0
+
+        def append_run(self, *cols, tag=None):
+            self.appended += 1
+            if self.appended == 2:
+                raise OSError("enospc")
+
+    sink = _Boom()
+    w = WriteBehindWriter([sink], ledger=IOLedger())
+    proxy = w.sink(0)
+    big = np.zeros(9000, np.int64)  # above the async floor: writer thread
+    proxy.append_run(big)
+    with pytest.raises(OSError, match="enospc"):
+        # the failure surfaces at a subsequent put/flush/close, never lost
+        for _ in range(8):
+            proxy.append_run(big)
+        w.flush()
+    w.abort()
+    # fail-stop: nothing was written past the failing chunk
+    assert sink.appended == 2
+
+
+def test_write_behind_context_aborts_on_exception(tmp_path):
+    led = IOLedger()
+    out = BlockStore(str(tmp_path), "o", led, columns=("v",))
+    with pytest.raises(RuntimeError, match="consumer died"):
+        with write_behind([out], led, MemoryGauge()) as sinks:
+            sinks[0].append_run(np.arange(4))
+            raise RuntimeError("consumer died")  # must not mask into an I/O error
+
+
+def test_write_behind_disabled_passthrough(tmp_path):
+    led = IOLedger()
+    out = BlockStore(str(tmp_path), "o", led, columns=("v",))
+    with write_behind([out], led, MemoryGauge(), enabled=False) as sinks:
+        assert sinks[0] is out  # serial path: the store itself, no proxy
+
+
+# ---------------------------------------------------------------------------
+# kernel primitives: bit-identity on vs off
+# ---------------------------------------------------------------------------
+
+
+def test_sort_merge_partition_overlap_bit_identical(tmp_path):
+    d = str(tmp_path)
+    src = _build(d, "src", nruns=11, rows=200)
+    led, gauge = IOLedger(), MemoryGauge()
+
+    ref_sorted = BlockStore(d, "s0", led, columns=("k", "p"), gauge=gauge)
+    ov_sorted = BlockStore(d, "s1", led, columns=("k", "p"), gauge=gauge)
+    sort_runs(src, ref_sorted, key=0)
+    sort_runs(src, ov_sorted, key=0, overlap=True)
+    assert _store_digest(ov_sorted) == _store_digest(ref_sorted)
+
+    # cascaded merge (max_fanin=3 forces two levels over 11 runs)
+    ref = _digest(merge_runs(ref_sorted, key=0, max_fanin=3))
+    ov = _digest(merge_runs(ref_sorted, key=0, max_fanin=3, overlap=True))
+    assert ov == ref
+
+    parts_ref = [BlockStore(d, f"pr{j}", led, columns=("k", "p"), gauge=gauge)
+                 for j in range(3)]
+    parts_ov = [BlockStore(d, f"po{j}", led, columns=("k", "p"), gauge=gauge)
+                for j in range(3)]
+    partition_runs(src, parts_ref, lambda k, p: k % 3, tag_prefix="x")
+    partition_runs(src, parts_ov, lambda k, p: k % 3, tag_prefix="x",
+                   overlap=True)
+    for a, b in zip(parts_ov, parts_ref):
+        assert _store_digest(a) == _store_digest(b)
+        assert [os.path.basename(p) for p in a.manifest()["runs"]] == \
+               [os.path.basename(p) for p in b.manifest()["runs"]]
+
+
+def test_overlap_peak_rows_at_most_doubles(tmp_path):
+    """The tentpole memory contract: overlap <= DOUBLES the resident chunk
+    bound, never more (one in-flight buffer per direction)."""
+    d = str(tmp_path)
+    src = _build(d, "src", nruns=9, rows=256)
+
+    def peak(overlap):
+        led, gauge = IOLedger(), MemoryGauge()
+        store = BlockStore.attach(d, "src", led, columns=("k", "p"),
+                                  gauge=gauge)
+        out = BlockStore(d, f"out{int(overlap)}", led, columns=("k", "p"),
+                         gauge=gauge)
+        with write_behind([out], led, gauge, enabled=overlap) as sinks:
+            for cols in merge_runs(store, key=0, max_fanin=3,
+                                   overlap=overlap):
+                sinks[0].append_run(*cols)
+        return gauge.peak_rows
+
+    assert peak(True) <= 2 * peak(False)
+
+
+def test_gauge_cursor_rows_derives_from_budget():
+    """Satellite: refill block size comes from the gauge budget / fan-in,
+    halved under overlap so prefetch doubling stays inside the budget."""
+    g = MemoryGauge(budget_rows=1024)
+    assert g.cursor_rows(4, 10 ** 9) == 1024 // 4
+    assert g.cursor_rows(4, 10 ** 9, overlap=True) == 1024 // 8
+    # small runs win over the budget cap
+    assert g.cursor_rows(4, 64) == 16
+    # no budget -> legacy max_run / fan split
+    assert MemoryGauge().cursor_rows(4, 1000) == 250
+    assert g.cursor_rows(4096, 10 ** 9) == 1  # floor at 1 row
+
+
+def test_deep_cascade_stays_inside_budget_with_overlap(tmp_path):
+    d = str(tmp_path)
+    _build(d, "deep", nruns=27, rows=64)
+    budget = 512
+    led = IOLedger()
+    gauge = MemoryGauge(budget_rows=budget)
+    store = BlockStore.attach(d, "deep", led, columns=("k", "p"), gauge=gauge)
+    ref = _digest(merge_runs(store, key=0, max_fanin=3))
+    gauge2 = MemoryGauge(budget_rows=budget)
+    store2 = BlockStore.attach(d, "deep", led, columns=("k", "p"),
+                               gauge=gauge2)
+    ov = _digest(merge_runs(store2, key=0, max_fanin=3, overlap=True))
+    assert ov == ref
+    # cursor buffers (fan * block, doubled for prefetch) never exceeded the
+    # budget; emitted merge blocks are charged separately and are bounded
+    # by the same budget per buffer.
+    assert gauge2.peak_rows <= 2 * budget
+
+
+def test_read_run_whole_run_load_is_gauge_tracked(tmp_path):
+    """Satellite: read_run loads the WHOLE run (mmap_mode=None) and must
+    report that allocation — block-sized consumers go through iter_blocks."""
+    led = IOLedger()
+    store = BlockStore(str(tmp_path), "r", led, columns=("v",))
+    store.append_run(np.arange(5000))
+    g_read = MemoryGauge()
+    s1 = BlockStore.attach(str(tmp_path), "r", led, columns=("v",),
+                           gauge=g_read)
+    s1.read_run(0)
+    assert g_read.peak_rows == 5000  # the whole-run load was tracked
+    g_blk = MemoryGauge()
+    s2 = BlockStore.attach(str(tmp_path), "r", led, columns=("v",),
+                           gauge=g_blk)
+    got = 0
+    for (v,) in s2.iter_blocks(512):
+        got += v.size
+    assert got == 5000
+    assert g_blk.peak_rows == 512  # block-sized path stays block-sized
+
+
+# ---------------------------------------------------------------------------
+# IOLedger stall counters: snapshot / delta / merge / pickle
+# ---------------------------------------------------------------------------
+
+
+def test_stall_counters_snapshot_delta_merge_roundtrip():
+    led = IOLedger()
+    led.read(4096)
+    led.hashes(10)
+    led.bucket(3, 512)
+    led.stall(read_wait_s=0.25, overlap_s=1.5)
+    snap = led.snapshot()
+    led.write(8192, sequential=False)
+    led.hashes(7)
+    led.bucket(3, 128)
+    led.bucket(5, 64)
+    led.stall(read_wait_s=0.125, write_wait_s=0.5, overlap_s=0.25)
+    delta = led.delta_since(snap)
+    assert delta["read_wait_s"] == pytest.approx(0.125)
+    assert delta["write_wait_s"] == pytest.approx(0.5)
+    assert delta["overlap_s"] == pytest.approx(0.25)
+    assert delta["bytes_written"] == 8192 and delta["rand_writes"] == 1
+    assert delta["hash_evals"] == 7
+    # dict-valued counters survive the snapshot/delta flattening
+    assert delta["bucket_bytes[3]"] == 128
+    assert delta["bucket_bytes[5]"] == 64
+    assert delta["bytes_read"] == 0
+
+    # merge() accumulates the stalls like any other counter
+    other = IOLedger()
+    other.merge(led.as_dict())
+    other.merge(delta)
+    assert other.read_wait_s == pytest.approx(0.375 + 0.125)
+    assert other.write_wait_s == pytest.approx(1.0)
+    assert other.overlap_s == pytest.approx(1.75 + 0.25)
+    assert other.bucket_bytes[3] == 640 + 128
+    assert other.hash_evals == 17 + 7
+
+
+def test_ledger_and_gauge_pickle_across_processes():
+    """Locks are runtime-only state: both must pickle (pool workers ship
+    them back to the parent) and rebuild a working lock on load."""
+    led = IOLedger()
+    led.stall(read_wait_s=0.5, overlap_s=0.25)
+    led2 = pickle.loads(pickle.dumps(led))
+    assert led2.read_wait_s == pytest.approx(0.5)
+    led2.stall(write_wait_s=0.125)  # lock was rebuilt, not lost
+    g = MemoryGauge(budget_rows=777)
+    g.track(10)
+    g2 = pickle.loads(pickle.dumps(g))
+    assert g2.budget_rows == 777 and g2.peak_rows == 10
+    g2.track(20)
+    assert g2.peak_rows == 20
+
+
+# ---------------------------------------------------------------------------
+# config plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_io_overlap_normalized_out_of_result_key(monkeypatch):
+    monkeypatch.delenv("REPRO_IO_OVERLAP", raising=False)
+    cfg_on = GraphConfig(scale=9, nb=4, chunk_edges=256,
+                         shuffle_variant="external")
+    cfg_off = cfg_on.with_(io_overlap=False)
+    p_on, p_off = plain_config(cfg_on), plain_config(cfg_off)
+    assert p_on.io_overlap is True and p_off.io_overlap is False
+    assert result_config_key(p_on) == result_config_key(p_off)
+
+
+def test_io_overlap_env_override(monkeypatch):
+    cfg = GraphConfig(scale=9, nb=4, shuffle_variant="external")
+    monkeypatch.setenv("REPRO_IO_OVERLAP", "0")
+    assert plain_config(cfg).io_overlap is False
+    monkeypatch.setenv("REPRO_IO_OVERLAP", "1")
+    assert plain_config(cfg.with_(io_overlap=False)).io_overlap is True
+    monkeypatch.delenv("REPRO_IO_OVERLAP")
+    assert plain_config(cfg).io_overlap is True
+
+
+# ---------------------------------------------------------------------------
+# deployment shapes: on vs off bit-identity
+# ---------------------------------------------------------------------------
+
+_CFG = GraphConfig(scale=9, nb=4, chunk_edges=256, edge_factor=4,
+                   shuffle_variant="external")
+
+
+def test_streaming_overlap_on_off_bit_identical(tmp_path):
+    pv_on, csr_on, led_on = StreamingGenerator(
+        _CFG, str(tmp_path / "on")).run()
+    pv_off, csr_off, led_off = StreamingGenerator(
+        _CFG.with_(io_overlap=False), str(tmp_path / "off")).run()
+    np.testing.assert_array_equal(np.asarray(pv_on), np.asarray(pv_off))
+    assert _csr_sha(csr_on) == _csr_sha(csr_off)
+    # timing-only: the BYTE accounting is identical too, only stalls differ
+    assert led_on.bytes_read == led_off.bytes_read
+    assert led_on.bytes_written == led_off.bytes_written
+    assert led_off.read_wait_s == 0.0 == led_off.write_wait_s
+
+
+def test_partitioned_overlap_on_off_bit_identical(tmp_path):
+    with PartitionedGenerator(_CFG, str(tmp_path / "on"),
+                              max_workers=0) as p_on:
+        csr_on, _ = p_on.run()
+        walks_on = np.asarray(p_on.walk_corpus(17, 5, seed=3)).copy()
+        sha_on = _csr_sha(csr_on)
+    with PartitionedGenerator(_CFG.with_(io_overlap=False),
+                              str(tmp_path / "off"), max_workers=0) as p_off:
+        csr_off, _ = p_off.run()
+        walks_off = np.asarray(p_off.walk_corpus(17, 5, seed=3)).copy()
+        sha_off = _csr_sha(csr_off)
+    assert sha_on == sha_off
+    np.testing.assert_array_equal(walks_on, walks_off)
+
+
+def test_mid_phase_kill_resume_with_overlap_on(tmp_path):
+    """A kernel dying mid-phase with overlap ON (in-flight write-behind
+    chunks lost) must rethrow at the phase, never checkpoint the phase, and
+    resume bit-identical to an overlap-OFF uninterrupted run."""
+    ref_dir = str(tmp_path / "ref")
+    with PartitionedGenerator(_CFG.with_(io_overlap=False), ref_dir,
+                              max_workers=0) as ref:
+        csr_ref, _ = ref.run()
+        sha_ref = _csr_sha(csr_ref)
+
+    d = str(tmp_path / "crash")
+    orig = _KERNELS["relabel_apply"]
+    calls = {"n": 0}
+
+    def crashing_apply(pcfg, workdir, i, pass_ix, *, ledger, gauge=None,
+                       transport=None):
+        calls["n"] += 1
+        if calls["n"] == 3:
+            raise RuntimeError("injected mid-phase kill")
+        return orig(pcfg, workdir, i, pass_ix, ledger=ledger, gauge=gauge,
+                    transport=transport)
+
+    _KERNELS["relabel_apply"] = crashing_apply
+    try:
+        with PartitionedGenerator(_CFG, d, max_workers=0,
+                                  checkpoint=True) as part:
+            with pytest.raises(RuntimeError, match="injected"):
+                part.run()
+    finally:
+        _KERNELS["relabel_apply"] = orig
+
+    with PartitionedGenerator(_CFG, d, max_workers=0,
+                              checkpoint=True) as part:
+        csr, _ = part.run()
+        statuses = {r["phase"]: r["status"]
+                    for r in part.orchestrator.report()}
+    assert statuses["shuffle"] == "resumed", statuses
+    assert statuses["generate"] == "resumed", statuses
+    assert _csr_sha(csr) == sha_ref
+
+
+@pytest.mark.slow
+def test_two_host_cluster_overlap_off_parity(tmp_path):
+    """2-host socket cluster with io_overlap FORCED OFF == the single-host
+    partitioned run with it on (default): cross-shape AND cross-flag parity
+    in one run — the existing cluster suite already pins cluster-on ==
+    single-host-on."""
+    from repro.core.cluster import ClusterGenerator, ClusterSpec, LocalExecBackend
+    import repro as _repro
+
+    src = os.path.dirname(os.path.dirname(os.path.abspath(_repro.__file__)))
+    with PartitionedGenerator(_CFG, str(tmp_path / "ref"),
+                              max_workers=0) as ref:
+        csr_ref, _ = ref.run()
+        walks_ref = np.asarray(ref.walk_corpus(17, 5, seed=3)).copy()
+        sha_ref = _csr_sha(csr_ref)
+
+    spec = ClusterSpec.local(2, str(tmp_path / "cl"), nb=_CFG.nb)
+    gen = ClusterGenerator(
+        _CFG.with_(transport="socket", io_overlap=False), spec,
+        str(tmp_path / "cl" / "ctrl"),
+        backend=LocalExecBackend(env={"PYTHONPATH": src,
+                                      "REPRO_IO_OVERLAP": "0"}),
+        checkpoint=True)
+    try:
+        gen.run()
+        walks = np.asarray(gen.walk_corpus(17, 5, seed=3)).copy()
+        assert _csr_sha(gen.load_csr()) == sha_ref
+        np.testing.assert_array_equal(walks, walks_ref)
+    finally:
+        gen.close()
