@@ -15,6 +15,12 @@ tolerance:
                 regression here is a real I/O-complexity change, so the
                 threshold applies at any magnitude above `--min-bytes`.
 
+Forward-compat: subtrees named in IGNORED_SUBTREES ("meta" — run metadata
+like git sha and hostname; "metrics" — the unified telemetry snapshot) are
+skipped entirely, and any other unknown key yields at most a warning, so
+BENCH json can grow new observability fields without breaking old
+baselines.
+
 A leaf regresses when  current > baseline * (1 + tol).  Leaves present only
 in the baseline (bench removed / renamed) or only in the current run (new
 bench) are warnings, not failures — the baseline is refreshed by copying
@@ -39,12 +45,22 @@ from typing import Dict, Iterator, Tuple
 
 WALL_KEYS = ("seconds", "wall_seconds")
 
+# Observability subtrees that ride along in BENCH json but are not perf
+# leaves: "meta" is per-run provenance (git sha, hostname, timestamp —
+# different on every machine), "metrics" is the cumulative telemetry
+# snapshot (trace.unified_snapshot), already covered by the deterministic
+# result-tree byte leaves where it matters.  Skipped wholesale so the
+# telemetry schema can evolve without churning baselines.
+IGNORED_SUBTREES = ("meta", "metrics")
+
 
 def _leaves(node, path: str = "") -> Iterator[Tuple[str, float]]:
     """Yield (dotted_path, value) for every numeric leaf of a JSON tree.
     List indices are path components so rows line up positionally."""
     if isinstance(node, dict):
         for k in sorted(node):
+            if k in IGNORED_SUBTREES:
+                continue
             yield from _leaves(node[k], f"{path}.{k}" if path else str(k))
     elif isinstance(node, list):
         for i, v in enumerate(node):

@@ -60,6 +60,8 @@ def main():
                     help="smaller scales (CI mode)")
     args = ap.parse_args()
 
+    from repro.core.trace import GLOBAL as METRICS, run_metadata
+
     from . import (bench_csr_variants, bench_external_shuffle,
                    bench_external_walks, bench_hash_vs_sort, bench_jobqueue,
                    bench_lm, bench_merge_fanin, bench_overlap,
@@ -119,12 +121,18 @@ def main():
     for name in chosen:
         print(f"\n######## {name} ########")
         t0 = time.time()
+        # Per-bench metrics isolation: the process-wide registry accumulates
+        # whatever drivers ran; clearing here scopes `combined()` to THIS
+        # bench's phases.  The snapshot (trace.unified_snapshot schema) rides
+        # in every BENCH json under "metrics"; diff.py ignores the subtree.
+        METRICS.clear()
         try:
             result = benches[name]()
             secs = time.time() - t0
             print(f"[{name} done in {secs:.1f}s]")
             entry = {"bench": name, "ok": True,
-                     "wall_seconds": round(secs, 3), "fast": args.fast}
+                     "wall_seconds": round(secs, 3), "fast": args.fast,
+                     "metrics": METRICS.combined()}
             try:
                 json.dumps(result, default=str)
                 entry["result"] = result
@@ -138,11 +146,13 @@ def main():
             secs = time.time() - t0
             _bench_json(name, {"bench": name, "ok": False,
                                "wall_seconds": round(secs, 3),
-                               "fast": args.fast})
+                               "fast": args.fast,
+                               "metrics": METRICS.combined()})
             summary.append({"bench": name, "ok": False,
                             "wall_seconds": round(secs, 3), "fast": args.fast})
             failed.append(name)
-    _bench_json("summary", {"benches": summary, "failed": failed})
+    _bench_json("summary", {"benches": summary, "failed": failed,
+                            "meta": run_metadata()})
     if failed:
         print(f"\nFAILED: {failed}")
         sys.exit(1)

@@ -64,6 +64,8 @@ from typing import Callable, Dict, Iterator, List, Optional, Sequence, Tuple, Un
 
 import numpy as np
 
+from .trace import STALL_MIN_S, get_tracer
+
 KeySpec = Union[int, Callable[..., np.ndarray]]
 
 
@@ -494,6 +496,8 @@ def sort_runs(store: BlockStore, out: BlockStore, key: KeySpec = 0,
     runs: Iterator[Tuple[np.ndarray, ...]] = store.iter_runs()
     if prefetch:
         runs = PrefetchReader(runs, ledger=store.ledger)
+    tracer = get_tracer()
+    t_wall, p0 = time.time(), time.perf_counter()
     try:
         with write_behind([out], store.ledger, store.gauge,
                           enabled=overlap) as sinks:
@@ -505,6 +509,10 @@ def sort_runs(store: BlockStore, out: BlockStore, key: KeySpec = 0,
     finally:
         if isinstance(runs, PrefetchReader):
             runs.close()
+        if tracer.enabled:
+            tracer.event(f"sort:{store.name}", "io", t_wall,
+                         time.perf_counter() - p0,
+                         args={"runs": store.num_runs})
     return out
 
 
@@ -567,6 +575,13 @@ class PrefetchReader:
         if self._ledger is not None:
             self._ledger.stall(read_wait_s=wait_s,
                                overlap_s=max(0.0, produce_s - wait_s))
+        if wait_s > STALL_MIN_S:
+            # A span only for stalls worth seeing on a timeline; sub-ms
+            # waits stay counter-only (the ledger above never misses them).
+            tracer = get_tracer()
+            if tracer.enabled:
+                tracer.event("read_stall", "stall", time.time() - wait_s,
+                             wait_s)
         if item is _DONE:
             self._fut = None
             if self._own:
@@ -691,6 +706,13 @@ class WriteBehindWriter:
         if self._ledger is not None:
             self._ledger.stall(write_wait_s=self._wait_s,
                                overlap_s=max(0.0, self._write_s - self._wait_s))
+        if self._wait_s > STALL_MIN_S:
+            tracer = get_tracer()
+            if tracer.enabled:
+                # One aggregate span per writer lifetime (per-put spans
+                # would swamp the buffer); anchored so it ENDS at close.
+                tracer.event("write_stall", "stall",
+                             time.time() - self._wait_s, self._wait_s)
         if self._err is not None:
             raise self._err
 
@@ -972,10 +994,20 @@ def merge_segments(
         lead.gauge, fan, max_run, lead.ncols * lead.dtype.itemsize,
         block_rows, overlap)
     lead.gauge.track(brows * fan * (2 if prefetch else 1))
-    with _merge_io(prefetch) as ex:
-        cursors = [_MergeCursor(s, runs, key, brows, prefetch=ex)
-                   for s, runs in segs]
-        yield from _merge_cursors(cursors, lead.ncols, flush_rows)
+    tracer = get_tracer()
+    t_wall, p0 = time.time(), time.perf_counter()
+    try:
+        with _merge_io(prefetch) as ex:
+            cursors = [_MergeCursor(s, runs, key, brows, prefetch=ex)
+                       for s, runs in segs]
+            yield from _merge_cursors(cursors, lead.ncols, flush_rows)
+    finally:
+        # Generator span: covers first next() to close — what the consumer
+        # actually spent inside this merge.  "io" is a leaf category (not
+        # under the nesting law): interleaved generators close out of LIFO.
+        if tracer.enabled:
+            tracer.event(f"merge_seg:{lead.name}", "io", t_wall,
+                         time.perf_counter() - p0, args={"segments": fan})
 
 
 CASCADE_MARKER = "__cas_l"  # substring naming cascade intermediate store dirs
@@ -1052,6 +1084,8 @@ def merge_runs(
         return [_MergeCursor(s, runs, key, brows, prefetch=ex if pf else None)
                 for s, runs in segs]
 
+    tracer = get_tracer()
+    t_wall, p0 = time.time(), time.perf_counter()
     try:
         level = 0
         while max_fanin >= 2 and len(segments) > max_fanin:
@@ -1083,6 +1117,10 @@ def merge_runs(
     finally:
         for s in scratch:
             s.destroy()
+        if tracer.enabled:
+            tracer.event(f"merge:{store.name}", "io", t_wall,
+                         time.perf_counter() - p0,
+                         args={"runs": nruns, "levels": level})
 
 
 def partition_runs(
@@ -1124,6 +1162,8 @@ def partition_runs(
     runs: Iterator[Tuple[np.ndarray, ...]] = store.iter_runs()
     if overlap:
         runs = PrefetchReader(runs, ledger=store.ledger)
+    tracer = get_tracer()
+    t_wall, p0 = time.time(), time.perf_counter()
     try:
         with write_behind(outs, store.ledger, store.gauge,
                           enabled=overlap) as sinks:
@@ -1154,6 +1194,9 @@ def partition_runs(
     finally:
         if isinstance(runs, PrefetchReader):
             runs.close()
+        if tracer.enabled:
+            tracer.event(f"partition:{store.name}", "io", t_wall,
+                         time.perf_counter() - p0, args={"parts": nparts})
     return outs
 
 

@@ -50,6 +50,7 @@ discipline the fine-grained checkpoint phases provide.
 from __future__ import annotations
 
 import dataclasses
+import glob
 import json
 import os
 import re
@@ -73,6 +74,12 @@ from .blockstore import (
     split_counter_key,
 )
 from .shardmap import ShardMap, ShardMapError, plan_rebalance
+from .trace import (
+    TRACE_DIR,
+    get_tracer,
+    maybe_install_tracer,
+    unified_snapshot,
+)
 from .phases import (
     PartitionedGenerator,
     PhaseOrchestrator,
@@ -80,6 +87,7 @@ from .phases import (
     WalkCfg,
     _MARK,
     _SKIP,
+    _resolve_trace,
     _run_kernel,
     csr_adjv_path,
     csr_offv_path,
@@ -464,7 +472,15 @@ def _pcfg_from_wire(d: Dict) -> PlainCfg:
     d = dict(d)
     if d.get("peer_addrs") is not None:
         d["peer_addrs"] = tuple(d["peer_addrs"])
-    return PlainCfg(**d)
+    pcfg = PlainCfg(**d)
+    # The wire pcfg bakes in trace as resolved at SUBMIT time; re-apply the
+    # env override so `REPRO_TRACE=1 ... drain` arms spans for jobs queued
+    # earlier without it.  Safe: result_config_key normalizes trace out, so
+    # checkpoint keys (and therefore resume) are unaffected.
+    resolved = _resolve_trace(pcfg)
+    if resolved != pcfg.trace:
+        pcfg = dataclasses.replace(pcfg, trace=resolved)
+    return pcfg
 
 
 def _jsonable(x):
@@ -634,6 +650,9 @@ class HostRunner:
         self._orch_ledger = IOLedger()
         self._pool: Optional[ProcessPoolExecutor] = None
         self._executed = 0
+        # Byte offset already shipped to the controller, per trace file
+        # (this host's own + its pool workers', across job subdirs).
+        self._trace_offsets: Dict[str, int] = {}
 
     # -- checkpoint state ----------------------------------------------------
     def _task_workdir(self, task: Dict) -> str:
@@ -718,7 +737,12 @@ class HostRunner:
                          "task_id": t["id"]}
             t0 = time.monotonic()
             try:
-                orch = self._orchestrator(_pcfg_from_wire(t["pcfg"]), t)
+                pcfg = _pcfg_from_wire(t["pcfg"])
+                # First traced task installs this host process's tracer
+                # (pool workers install their own in _run_kernel).
+                maybe_install_tracer(self._task_workdir(t),
+                                     enabled=pcfg.trace, host=self.host_id)
+                orch = self._orchestrator(pcfg, t)
                 if orch.completed(t["key"]):
                     out = orch.run_phase(t["key"], lambda: None,
                                          load=lambda m: m.get("out"))
@@ -754,6 +778,57 @@ class HostRunner:
             rep.update(server_ledger=sl.as_dict(), server_peak=sg.peak_rows,
                        server_stats=dataclasses.asdict(sstats))
             yield rep
+
+    # Lines per "trace" control op stay bounded so the JSON header never
+    # approaches the server's _MAX_HEADER_BYTES frame bound.
+    _TRACE_BATCH_BYTES = 256 << 10
+
+    def _ship_trace(self, sock) -> None:
+        """Ship newly-written trace lines to the controller (the "trace"
+        control op) — called after each executed lease batch (the barrier
+        cadence the issue asks for) and once at stop.  Reads every
+        per-process trace file under this host's workdir (its own + its
+        pool workers', including job subdirs) from the last-shipped byte
+        offset, forwarding only COMPLETE lines in bounded batches.  Best
+        effort by design: lines a dying host never ships are still on its
+        disk for a local merge."""
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return
+        tracer.flush()
+        paths = glob.glob(os.path.join(self.workdir, TRACE_DIR,
+                                       "trace_*.jsonl"))
+        paths += glob.glob(os.path.join(self.workdir, "*", TRACE_DIR,
+                                        "trace_*.jsonl"))
+        batch: List[str] = []
+        size = 0
+
+        def send() -> None:
+            nonlocal batch, size
+            if batch:
+                _ctrl_request(sock, {"op": "trace", "host_id": self.host_id,
+                                     "lines": batch})
+                batch, size = [], 0
+
+        for p in sorted(paths):
+            off = self._trace_offsets.get(p, 0)
+            try:
+                with open(p, "rb") as f:
+                    f.seek(off)
+                    data = f.read()
+            except OSError:
+                continue
+            end = data.rfind(b"\n")
+            if end < 0:
+                continue   # no complete new line yet
+            self._trace_offsets[p] = off + end + 1
+            for line in data[:end].decode("utf-8", "replace").splitlines():
+                if line:
+                    batch.append(line)
+                    size += len(line)
+                    if size >= self._TRACE_BATCH_BYTES:
+                        send()
+        send()
 
     def _heartbeat_loop(self, stop: threading.Event, period: float) -> None:
         """Liveness side-channel on its OWN connection: a kernel can sort for
@@ -818,8 +893,16 @@ class HostRunner:
                         # no server shutdown, no pool teardown, no report for
                         # the remaining tasks.
                         os._exit(17)
+                try:
+                    self._ship_trace(sock)
+                except (OSError, ClusterError):
+                    pass   # telemetry must never kill a healthy host
         finally:
             hb_stop.set()
+            try:
+                self._ship_trace(sock)
+            except (OSError, ClusterError):
+                pass
             try:
                 sock.close()
             except OSError:
@@ -856,10 +939,16 @@ class ClusterController:
     def __init__(self, spec: ClusterSpec, backend: Optional[ExecBackend] = None,
                  heartbeat_timeout: float = 60.0, max_restarts: int = 1,
                  task_retries: int = 3, advertise: Optional[str] = None,
-                 lease_size: int = 0):
+                 lease_size: int = 0, task_log_cap: int = 1024,
+                 trace_dir: Optional[str] = None):
         # `advertise` is the controller address HANDED TO workers when it
         # differs from the bind address (bind 0.0.0.0, advertise the routable
         # interface); a bare hostname gets the bound port appended.
+        # `task_log_cap` bounds the in-memory task log (a deque: a
+        # multi-week multi-job controller keeps the most recent N reports,
+        # not all of them); the full stream rotates into the trace subsystem
+        # as "ctrl" events when tracing is on.  `trace_dir` is where hosts'
+        # shipped trace lines land (`host{h}.jsonl`) — None drops them.
         self.spec = spec
         self.backend = backend
         self.heartbeat_timeout = heartbeat_timeout
@@ -885,10 +974,24 @@ class ClusterController:
         self.peers_version = 0
         self.restarts: Dict[int, int] = {h.host_id: 0 for h in spec.hosts}
         self._handles: Dict[int, object] = {}
-        self.task_log: List[Dict] = []   # (host, key, job, resumed) per report
+        # (host, key, job, resumed) per report — most recent task_log_cap
+        # entries only (satellite of the trace subsystem: the unbounded list
+        # leaked controller memory over long multi-job runs).
+        self.task_log: deque = deque(maxlen=max(1, int(task_log_cap)))
         self.busy_seconds: Dict[int, float] = {h.host_id: 0.0
                                                for h in spec.hosts}
         self.steals = 0
+        self.trace_dir = trace_dir
+        self._trace_write_lock = threading.Lock()
+        # Per-host unified telemetry, folded in from every task report
+        # (kernel + receiver side): what `status` serves and --watch renders.
+        self.host_ledgers: Dict[int, IOLedger] = {
+            h.host_id: IOLedger() for h in spec.hosts}
+        self.host_stats: Dict[int, TransportStats] = {
+            h.host_id: TransportStats() for h in spec.hosts}
+        self.host_last_key: Dict[int, str] = {}
+        self.host_tasks_done: Dict[int, int] = {h.host_id: 0
+                                                for h in spec.hosts}
         # Live routing directory, seeded with the historical contiguous
         # split — a cluster that never rebalances is bit-identical to the
         # static map.  Rewritten ONLY at phase barriers (apply_shard_moves)
@@ -1032,7 +1135,9 @@ class ClusterController:
                 self._reports[tid] = req
                 self.busy_seconds[h] += float(req.get("seconds", 0.0))
                 # Fold per-bucket byte counters (kernel side AND receiver
-                # side) into the rebalancer's skew signal.
+                # side) into the rebalancer's skew signal, and the whole
+                # counter dicts into the per-host telemetry the `status`
+                # RPC serves.
                 for ld in (req.get("ledger") or {},
                            req.get("server_ledger") or {}):
                     for ck, v in ld.items():
@@ -1040,11 +1145,43 @@ class ClusterController:
                         if cname == "bucket_bytes" and idx is not None:
                             self.bucket_loads[idx] = (
                                 self.bucket_loads.get(idx, 0) + int(v))
+                    self.host_ledgers[h].merge(ld)
+                fields = TransportStats.__dataclass_fields__
+                for sd in (req.get("stats") or {},
+                           req.get("server_stats") or {}):
+                    if sd:
+                        self.host_stats[h].add(TransportStats(
+                            **{k: v for k, v in sd.items() if k in fields}))
+                self.host_last_key[h] = task["key"]
+                self.host_tasks_done[h] += 1
                 self.task_log.append({
                     "host": h, "key": task["key"], "job": task.get("job", ""),
                     "ok": bool(req.get("ok")),
                     "resumed": bool(req.get("resumed"))})
                 self._cond.notify_all()
+            # The unbounded task history lives in the trace stream now, not
+            # in controller memory: one "ctrl" instant per report.
+            tracer = get_tracer()
+            if tracer.enabled:
+                tracer.instant(
+                    "task_report", cat="ctrl", host=h, key=task["key"],
+                    job=task.get("job", ""), ok=bool(req.get("ok")),
+                    resumed=bool(req.get("resumed")),
+                    seconds=float(req.get("seconds", 0.0)))
+            return {}
+        if op == "trace":
+            # Hosts ship their trace files in bounded line batches at
+            # barriers (HostRunner._ship_trace); the controller lands them
+            # in `<trace_dir>/host{h}.jsonl` for launch/cluster.py `trace`
+            # to merge.  No trace_dir configured -> the lines are dropped.
+            lines = req.get("lines") or []
+            if self.trace_dir and lines:
+                path = os.path.join(self.trace_dir, f"host{h}.jsonl")
+                with self._trace_write_lock:
+                    os.makedirs(self.trace_dir, exist_ok=True)
+                    with open(path, "a") as f:
+                        for line in lines:
+                            f.write(str(line).rstrip("\n") + "\n")
             return {}
         raise ClusterError(f"unknown control op {op!r}")
 
@@ -1191,6 +1328,9 @@ class ClusterController:
             self._inflight[hid] = {}
             self.restarts[hid] = 0
             self.busy_seconds[hid] = 0.0
+            self.host_ledgers[hid] = IOLedger()
+            self.host_stats[hid] = TransportStats()
+            self.host_tasks_done[hid] = 0
             self.peers_version += 1
             self._cond.notify_all()
         if launch and self.backend is not None:
@@ -1201,10 +1341,37 @@ class ClusterController:
     def _admin(self, req: Dict) -> Dict:
         cmd = req.get("cmd")
         if cmd == "status":
+            now = time.monotonic()
             with self._lock:
+                live = {}
+                for hs in self.spec.hosts:
+                    hid = hs.host_id
+                    seen = self._last_seen.get(hid)
+                    live[str(hid)] = {
+                        # The live fleet view `status --watch` renders: what
+                        # each host last worked on, how deep its queue is,
+                        # and its unified counters — same snapshot schema as
+                        # BENCH json (trace.unified_snapshot).
+                        "phase": self.host_last_key.get(hid, ""),
+                        "queue": len(self._queues[hid]),
+                        "inflight": len(self._inflight[hid]),
+                        "tasks_done": self.host_tasks_done.get(hid, 0),
+                        "busy_seconds": round(
+                            self.busy_seconds.get(hid, 0.0), 3),
+                        "restarts": self.restarts.get(hid, 0),
+                        "heartbeat_age_s": (None if seen is None
+                                            else round(now - seen, 3)),
+                        "registered": self._exchange_addrs.get(hid)
+                                      is not None,
+                        "metrics": unified_snapshot(
+                            ledger=self.host_ledgers[hid],
+                            stats=self.host_stats[hid]),
+                    }
                 return {"ok": True, "map": self.shard_map.to_json(),
                         "hosts": [dataclasses.asdict(h)
                                   for h in self.spec.hosts],
+                        "hosts_live": live,
+                        "steals": self.steals,
                         "bucket_loads": {str(k): v for k, v in
                                          sorted(self.bucket_loads.items())},
                         "rebalance_requested": self.rebalance_requested}
@@ -1359,6 +1526,8 @@ class ClusterController:
         job-scoped, so a scheduler dead-letters that job while the fleet
         keeps going.  (Retriable transport failures keep the separate
         task_retries budget.)"""
+        tracer = get_tracer()
+        t_wall, perf0 = time.time(), time.perf_counter()
         tids = []
         pcfg_wire = _pcfg_to_wire(pcfg)
         subdir = getattr(pcfg, "exchange_namespace", None)
@@ -1443,6 +1612,12 @@ class ClusterController:
             job_tids = self._job_tids.get(job)
             if job_tids is not None:
                 job_tids.difference_update(tids)
+        if tracer.enabled:
+            # One barrier span per dispatched phase: dispatch -> last report.
+            tracer.event(f"barrier:{kernel}", "ctrl", t_wall,
+                         time.perf_counter() - perf0,
+                         args={"tasks": len(tids), "job": job} if job
+                         else {"tasks": len(tids)})
         return out
 
     def cancel_job(self, job: str) -> None:
@@ -1584,6 +1759,10 @@ class ClusterGenerator(PartitionedGenerator):
         self.spec = spec
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
+        # The controller/driver process traces too (barrier + phase spans);
+        # "ctrl" as the host label keeps its lane distinct from host ids.
+        maybe_install_tracer(workdir, enabled=pcfg.trace, host="ctrl",
+                             job=job or None)
         self.ledger = IOLedger()
         self.gauge = MemoryGauge()
         self.exchange_stats = TransportStats()
@@ -1612,13 +1791,19 @@ class ClusterGenerator(PartitionedGenerator):
         if controller is None:
             controller = ClusterController(
                 spec, backend=backend, heartbeat_timeout=heartbeat_timeout,
-                max_restarts=max_restarts, advertise=advertise)
+                max_restarts=max_restarts, advertise=advertise,
+                trace_dir=(os.path.join(workdir, TRACE_DIR) if pcfg.trace
+                           else None))
             try:
                 controller.launch_hosts()
                 controller.wait_for_hosts(rendezvous_timeout)
             except BaseException:
                 controller.stop()
                 raise
+        elif pcfg.trace and controller.trace_dir is None:
+            # A shared (scheduler-owned) controller starts collecting host
+            # traces the moment any traced job runs through it.
+            controller.trace_dir = os.path.join(workdir, TRACE_DIR)
         self.controller = controller
         self.pcfg = dataclasses.replace(
             pcfg, peer_addrs=self.controller.peer_addrs(),

@@ -47,6 +47,36 @@ Phase algebra and I/O complexity (paper Alg. 2-11, §III-B):
   csr_scatter   O(b) RANDOM                             (Alg. 10-11 — the Fig. 2 blowup)
   csr_sorted    O(B / C_e) sequential                   (§III-B7 — the predicted fix)
 
+Measured via (core/trace.py — every cost term above is attributable on a
+real timeline, not only predicted; run with cfg.trace=True, merge with
+`python -m repro.launch.cluster trace`, load in Perfetto):
+
+  term          measured via
+  ------------  ---------------------------------------------------------
+  shuffle       "phase"-cat spans "shuffle" / per-round shuffle phases;
+                ledger seq_read/seq_write bytes in the span args.
+                "recompute": no spans at all — its cost is ledger.hash_evals.
+  generate      "kernel"-cat span "generate" (or the fused
+                "gen_relabel_recompute"); ledger rows/bytes written.
+  relabel       "kernel" spans "relabel_sort"/"relabel_join"; "io"-cat spans
+                "sort:<store>" / "merge:<store>" for each external sort pass.
+  redistribute  "kernel" span "redistribute"; "io" span "partition:<store>".
+  csr_scatter   "kernel" span "csr_scatter"; ledger rand_write counter —
+                the Fig. 2 blowup shows up as dur with few bytes/sec.
+  csr_sorted    "kernel" spans "csr_sort"/"csr_emit"; "io" spans
+                "sort:csr*" + "merge:csr*".
+  exchange E_x  "wire"-cat spans "send:<store>" / instants "recv:<store>";
+                TransportStats bytes_sent/bytes_recv in unified_snapshot.
+  migration     "wire" span "migrate:<relpath>"; TransportStats migrate_bytes.
+  overlap       "stall"-cat spans "read_stall"/"write_stall" (>= 1 ms only);
+                full totals in ledger read_wait_s/write_wait_s/overlap_s.
+  barriers      "ctrl"-cat spans "barrier:<kernel>" on the controller lane;
+                per-task "task_report" instants carry host + seconds.
+
+Phase wall times are the "phase"-cat spans — one per completed
+orchestrator phase, args = the nonzero ledger delta for that phase (the
+same rows orchestrator.report() prints).
+
 Network-exchange term (core/transport.py): every bucket exchange above
 (shuffle slice exchange, relabel scatter, redistribute, per-hop walk-frontier
 exchange) moves E_x exchanged bytes through the configured Transport:
@@ -172,6 +202,7 @@ from .phases import (
     result_config_key,
     validate_external_shape,
 )
+from .trace import maybe_install_tracer
 from .transport import FilesystemTransport
 from .types import GraphConfig
 
@@ -241,6 +272,7 @@ class StreamingGenerator:
         self.gauge = MemoryGauge(budget_rows=int(cfg.chunk_edges))
         ck = cfg.checkpoint_phases if checkpoint is None else checkpoint
         self._pcfg = plain_config(cfg)
+        maybe_install_tracer(workdir, enabled=self._pcfg.trace)
         if self._pcfg.transport != "fs":
             raise ValueError(
                 "StreamingGenerator is the single-process reference driver "

@@ -54,6 +54,7 @@ from .phases import (
     plain_config,
     validate_external_shape,
 )
+from .trace import TRACE_DIR
 
 QUEUE_FILE = "jobqueue.json"
 
@@ -190,10 +191,14 @@ class JobScheduler:
         self._state_lock = threading.Lock()
         self.state = load_state(root)
         self.makespan = 0.0
+        # trace_dir is armed unconditionally: hosts only SHIP trace lines
+        # when a traced job installed their tracer, so untraced queues never
+        # create the directory.
         self.controller = ClusterController(
             spec, backend=backend, heartbeat_timeout=heartbeat_timeout,
             max_restarts=max_restarts, advertise=advertise,
-            lease_size=lease_size)
+            lease_size=lease_size,
+            trace_dir=os.path.join(root, TRACE_DIR))
         try:
             self.controller.launch_hosts()
             self.controller.wait_for_hosts(rendezvous_timeout)

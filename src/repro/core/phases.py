@@ -47,6 +47,7 @@ from __future__ import annotations
 
 import contextlib
 import dataclasses
+import functools
 import json
 import os
 import time
@@ -75,6 +76,12 @@ from .corpus import (
     manifest_name as corpus_manifest_name,
     shard_name as corpus_shard_name,
     write_manifest,
+)
+from .trace import (
+    GLOBAL as GLOBAL_METRICS,
+    get_tracer,
+    maybe_install_tracer,
+    unified_snapshot,
 )
 from .transport import (
     ExchangeServer,
@@ -119,6 +126,11 @@ class PlainCfg:
     # out; REPRO_IO_OVERLAP=0/false/off forces it off regardless of the
     # GraphConfig (the CI serial shard).
     io_overlap: bool = True
+    # Emit timing spans (core/trace.py) from every instrumented layer into
+    # per-process trace files under `<workdir>/trace/`.  Timing-only —
+    # outputs are bit-identical on vs. off — so result_config_key
+    # normalizes it out; REPRO_TRACE=1/0 overrides the GraphConfig.
+    trace: bool = False
     # Exchange transport: "fs" (shared-filesystem {sender}_{seq} runs) or
     # "socket" (framed TCP to the ExchangeServer at peer_addrs[bucket]).
     transport: str = "fs"
@@ -187,6 +199,16 @@ def _resolve_io_overlap(cfg) -> bool:
     return bool(getattr(cfg, "io_overlap", True))
 
 
+def _resolve_trace(cfg) -> bool:
+    """cfg.trace, unless REPRO_TRACE is set — the override turns tracing on
+    for a whole CI job / ad-hoc run without threading a config change
+    through every fixture (mirror of _resolve_io_overlap)."""
+    env = os.environ.get("REPRO_TRACE")
+    if env is not None:
+        return env.strip().lower() not in ("0", "false", "off", "no", "")
+    return bool(getattr(cfg, "trace", False))
+
+
 def plain_config(cfg) -> PlainCfg:
     """Accepts GraphConfig (or anything duck-typed like it)."""
     shuffle_variant = str(getattr(cfg, "shuffle_variant", "external"))
@@ -202,6 +224,7 @@ def plain_config(cfg) -> PlainCfg:
         merge_block_rows=int(getattr(cfg, "merge_block_rows", 0)),
         merge_fanin=int(getattr(cfg, "merge_fanin", 64)),
         io_overlap=_resolve_io_overlap(cfg),
+        trace=_resolve_trace(cfg),
         # "filesystem" is accepted as an alias and canonicalized, so every
         # downstream comparison can test == "fs" alone.
         transport={"filesystem": "fs"}.get(
@@ -272,7 +295,7 @@ def result_config_key(pcfg: PlainCfg) -> PlainCfg:
     phase whose inputs the other mode's checkpoint GC already freed."""
     return dataclasses.replace(pcfg, transport="fs", peer_addrs=None,
                                exchange_namespace=None, shard_map_version=0,
-                               io_overlap=True)
+                               io_overlap=True, trace=False)
 
 
 def validate_external_shape(p: PlainCfg) -> PlainCfg:
@@ -1761,13 +1784,27 @@ class PhaseOrchestrator:
             return result
         snap = self.ledger.snapshot()
         wire_snap = self._wire_dict()
+        t_wall = time.time()
         t0 = time.perf_counter()
         result = fn()
+        seconds = time.perf_counter() - t0
         delta = self.ledger.delta_since(snap)
         delta.update({k: v - wire_snap[k]
                       for k, v in self._wire_dict().items()})
-        self.records.append(PhaseRecord(
-            name, "done", time.perf_counter() - t0, delta))
+        self.records.append(PhaseRecord(name, "done", seconds, delta))
+        # Phase spans are emitted on the DONE path only: a resumed phase did
+        # no work in this run, so it contributes no span — which is exactly
+        # what makes a kill+resume trace free of duplicate phase spans.
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.event(name, "phase", t_wall, seconds,
+                         args={k: v for k, v in delta.items() if v} or None)
+        # Every phase also refreshes the process-wide unified snapshot (the
+        # ledger/stats here are cumulative, so latest-wins is correct) —
+        # this is what benchmarks/run.py harvests into BENCH json.
+        GLOBAL_METRICS.update(
+            "orchestrator", unified_snapshot(ledger=self.ledger,
+                                             stats=self._stats))
         if self.checkpoint and save is not None:
             self._completed[name] = save(result)
             state = dict(self._completed)
@@ -1819,6 +1856,42 @@ class PhaseOrchestrator:
 # PartitionedGenerator: nb workers, one vertex range each
 # ---------------------------------------------------------------------------
 
+def _traced_kernel(name: str, fn):
+    """Span instrumentation for one registered kernel.  Wrapping at
+    _KERNELS registration covers every dispatch path with one change —
+    the inline driver (StreamingGenerator._run_kernels_inline), the
+    process pool, and the cluster HostRunner all resolve kernels through
+    this dict.  The span carries the kernel's bucket and its private
+    ledger's nonzero counter deltas; with tracing disabled the cost is one
+    attribute check.  The `traced_kernel` attribute is the CI lint's
+    checkable witness (trace.lint_kernel_coverage)."""
+
+    @functools.wraps(fn)
+    def wrapper(pcfg, workdir, *args, ledger=None, gauge=None,
+                transport=None):
+        tracer = get_tracer()
+        if not tracer.enabled:
+            return fn(pcfg, workdir, *args, ledger=ledger, gauge=gauge,
+                      transport=transport)
+        snap = ledger.snapshot() if ledger is not None else None
+        t_wall = time.time()
+        t0 = time.perf_counter()
+        out = fn(pcfg, workdir, *args, ledger=ledger, gauge=gauge,
+                 transport=transport)
+        span_args: Dict = {}
+        if args and isinstance(args[0], int):
+            span_args["bucket"] = args[0]
+        if snap is not None:
+            span_args.update({k: v for k, v in
+                              ledger.delta_since(snap).items() if v})
+        tracer.event(name, "kernel", t_wall, time.perf_counter() - t0,
+                     args=span_args or None)
+        return out
+
+    wrapper.traced_kernel = name
+    return wrapper
+
+
 _KERNELS = {
     "init_pv": init_pv_bucket,
     "shuffle_round": shuffle_bucket_round,
@@ -1844,6 +1917,7 @@ _KERNELS = {
     "walk_hist_scatter": walk_hist_scatter_bucket,
     "walk_hist_gather": walk_hist_gather_bucket,
 }
+_KERNELS = {name: _traced_kernel(name, fn) for name, fn in _KERNELS.items()}
 
 
 # Process-local transport reuse: pool workers persist across barriers, so a
@@ -1861,6 +1935,10 @@ def _run_kernel(task):
     sender-side exchange stats — transports hold sockets and cannot cross
     the process boundary themselves) back to the parent."""
     kernel, pcfg, workdir, args = task
+    # Pool workers are fresh (spawned) processes: the first traced task
+    # installs this process's tracer under the task's workdir.  Idempotent,
+    # strictly no-op (no directory created) when the job isn't tracing.
+    maybe_install_tracer(workdir, enabled=getattr(pcfg, "trace", False))
     ledger = IOLedger()
     # budget_rows lets merge cursors derive refill blocks from the chunk
     # budget (MemoryGauge.cursor_rows) so deep cascades stay under one
@@ -2065,6 +2143,7 @@ class PartitionedGenerator:
             cfg if isinstance(cfg, PlainCfg) else plain_config(cfg))
         self.workdir = workdir
         os.makedirs(workdir, exist_ok=True)
+        maybe_install_tracer(workdir, enabled=pcfg.trace)
         self.ledger = IOLedger()
         self.gauge = MemoryGauge(budget_rows=pcfg.chunk_edges)
         self._servers: List[ExchangeServer] = []

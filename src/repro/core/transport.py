@@ -60,6 +60,7 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from .trace import get_tracer
 from .blockstore import (
     BlockStore, IOLedger, MemoryGauge, auto_run_tag, clean_store,
     stack_columns)
@@ -367,7 +368,15 @@ class _SocketChannel:
         # zero-copy when contiguous, which np.stack output always is.
         payload = (memoryview(arr).cast("B") if arr.flags.c_contiguous
                    else arr.tobytes())
-        self._tr._rpc(self._addr, _KIND_DATA, meta, payload)
+        tracer = get_tracer()
+        if tracer.enabled:
+            # One "wire" span per frame: send + durable-receive ack — the
+            # synchronous exchange cost a phase actually pays per run.
+            with tracer.span(f"send:{self.name}", cat="wire",
+                             bytes=int(arr.nbytes)):
+                self._tr._rpc(self._addr, _KIND_DATA, meta, payload)
+        else:
+            self._tr._rpc(self._addr, _KIND_DATA, meta, payload)
         self._tr.stats.frames_sent += 1
         self._tr.stats.bytes_sent += arr.nbytes
         return self._auto_seq - 1
@@ -468,12 +477,14 @@ class SocketTransport(Transport):
         names = list(names)
         if not names:
             return
-        for addr in dict.fromkeys(self.peers):   # distinct, stable order
-            for lo in range(0, len(names), self._CLEAN_BATCH):
-                meta = {"stores": names[lo : lo + self._CLEAN_BATCH]}
-                if self.namespace is not None:
-                    meta["subdir"] = self.namespace
-                self._rpc(addr, _KIND_CLEAN, meta)
+        with get_tracer().span("clean_inboxes", cat="wire",
+                               stores=len(names)):
+            for addr in dict.fromkeys(self.peers):   # distinct, stable order
+                for lo in range(0, len(names), self._CLEAN_BATCH):
+                    meta = {"stores": names[lo : lo + self._CLEAN_BATCH]}
+                    if self.namespace is not None:
+                        meta["subdir"] = self.namespace
+                    self._rpc(addr, _KIND_CLEAN, meta)
 
     def send_file(self, addr: str, src_path: str, rel_path: str,
                   chunk_bytes: int = 4 << 20) -> int:
@@ -491,7 +502,8 @@ class SocketTransport(Transport):
         rel = _check_rel_path(rel_path)
         total = os.path.getsize(src_path)
         sent = 0
-        with open(src_path, "rb") as f:
+        with get_tracer().span(f"migrate:{rel}", cat="wire", bytes=total), \
+                open(src_path, "rb") as f:
             while True:
                 data = f.read(chunk_bytes)
                 if not data and sent < total:
@@ -751,6 +763,10 @@ class ExchangeServer:
                 self.ledger.bucket(b, arr.nbytes, rows)
             self.stats.frames_recv += 1
             self.stats.bytes_recv += arr.nbytes
+        tracer = get_tracer()
+        if tracer.enabled:
+            tracer.instant(f"recv:{name}", cat="wire", bytes=int(arr.nbytes),
+                           rows=rows)
 
     def _handle_migrate(self, meta: Dict, payload: bytes) -> None:
         rel = _check_rel_path(str(meta["path"]))

@@ -99,6 +99,16 @@ class GraphConfig:
     # read_wait_s/write_wait_s/overlap_s counters.  Env override:
     # REPRO_IO_OVERLAP=0 forces it off (CI serial shard).
     io_overlap: bool = True
+    # Emit structured timing spans (core/trace.py) from every instrumented
+    # layer — phase boundaries, kernel invocations, blockstore
+    # sort/merge/partition, transport sends, I/O stall windows — into
+    # per-process append-only `<workdir>/trace/trace_{pid}.jsonl` files,
+    # mergeable into one Chrome/Perfetto timeline (`repro.launch.cluster
+    # trace`).  Timing-only: outputs are bit-identical on vs. off, so the
+    # flag is normalized out of result_config_key; emission buffers in
+    # memory and flushes on a background thread (never blocks the traced
+    # code).  Env override: REPRO_TRACE=1 forces it on, =0 off.
+    trace: bool = False
     # Dispatch the partitioned CSR sort's cascade merge LEVELS through the
     # worker pool / cluster as (bucket, group) tasks instead of cascading
     # inline within each bucket's kernel (phases._run_csr_sorted_pooled).

@@ -139,22 +139,61 @@ Training then streams straight from the sharded corpus manifest:
    `overlap_s` (I/O seconds that ran hidden behind compute).
    benchmarks/bench_overlap.py gates the wall-time win.
 
+7. Tracing + live telemetry (core/trace.py).  Every layer — orchestrator
+   phases, the ~23 bucket kernels, external sort/merge/partition passes,
+   prefetch/write-behind stalls, exchange frames, migrations, controller
+   barriers — emits structured spans when a run is traced.  Tracing is
+   timing-only: trace=False runs are bit-identical AND checkpoint-
+   compatible with traced ones (result_config_key normalizes the flag
+   out), and the tracer is a no-op stub unless armed:
+
+       PYTHONPATH=src python -m repro.launch.cluster run \
+           --hosts 2 --workdir /tmp/cluster --scale 12 --nb 4 --trace
+
+   Each process appends to its own <workdir>/trace/trace_<pid>.jsonl;
+   hosts ship completed lines to the controller piggybacked on the task
+   loop, landing in <ctrl>/trace/host<h>.jsonl.  Merge every lane into
+   one Chrome/Perfetto trace-event file (open it at https://ui.perfetto.dev
+   or chrome://tracing) and print the per-phase wall-time table:
+
+       PYTHONPATH=src python -m repro.launch.cluster trace \
+           --workdir /tmp/cluster
+
+   (`--out` overrides the default <ctrl>/trace_merged.json; the merge
+   also runs the timeline validator — negative durations or span-nesting
+   violations print as warnings, not errors.)  `REPRO_TRACE=1` force-arms
+   tracing for any run without touching configs, exactly like
+   REPRO_IO_OVERLAP.
+
+   While a run is live, watch the fleet instead of polling JSON: the
+   `status` admin RPC now carries a per-host live view — current phase
+   key, queue depth, in-flight tasks, busy seconds, heartbeat age, and
+   the unified metrics snapshot (io / stalls / wire / memory, the same
+   schema BENCH_*.json embeds):
+
+       PYTHONPATH=src python -m repro.launch.cluster status \
+           --workdir /tmp/cluster --watch            # redraws every 2 s
+
 Subcommands: `host` (the worker daemon an exec backend or an operator
 starts), `run` (controller + hosts end to end), `spec` (emit a ClusterSpec
 JSON for external orchestration), `submit`/`queue`/`drain` (the job
 queue), `status`/`rebalance`/`admit` (admin RPCs against a live
-controller).
+controller; `status --watch` is the live fleet view), `trace` (merge a
+run's span files into one Perfetto-loadable timeline).
 """
 
 from __future__ import annotations
 
 import argparse
+import glob
 import json
 import os
 import socket
 import sys
+import time
 
 from ..core.cluster import (
+    ClusterError,
     ClusterGenerator,
     ClusterSpec,
     CommandTemplateBackend,
@@ -164,6 +203,12 @@ from ..core.cluster import (
     _ctrl_request,
 )
 from ..core.jobqueue import JobScheduler, load_state, submit_job
+from ..core.trace import (
+    merge_traces,
+    phase_durations,
+    validate_timeline,
+    write_perfetto,
+)
 from ..core.types import GraphConfig
 
 
@@ -205,7 +250,8 @@ def cmd_run(args) -> int:
                       chunk_edges=args.chunk_edges, seed=args.seed,
                       shuffle_variant="external", transport="socket",
                       merge_fanin=args.merge_fanin,
-                      pooled_cascade=args.pooled_cascade)
+                      pooled_cascade=args.pooled_cascade,
+                      trace=args.trace)
     backend = (CommandTemplateBackend(args.template) if args.template
                else LocalExecBackend(workers=args.workers))
     ctrl_dir = os.path.join(os.path.abspath(args.workdir), "ctrl")
@@ -228,9 +274,13 @@ def cmd_run(args) -> int:
                   f"({walks.num_walkers} x {walks.length + 1})")
             summary["corpus_manifest"] = walks.manifest_path
         print(json.dumps(summary, indent=1))
-        return 0
     finally:
         gen.close()
+    if args.trace:
+        # Merge AFTER close: closing stops the hosts, whose shutdown path
+        # ships any trace lines still sitting in their local files.
+        _merge_run_trace(os.path.abspath(args.workdir), "")
+    return 0
 
 
 def _write_ctrl_addr(ctrl_dir: str, addr: str) -> None:
@@ -261,10 +311,95 @@ def _admin_request(addr: str, req: dict) -> dict:
         return _ctrl_request(sock, {"op": "admin", **req})
 
 
-def cmd_status(args) -> int:
-    print(json.dumps(_admin_request(_ctrl_addr(args), {"cmd": "status"}),
-                     indent=1, sort_keys=True))
+def _trace_dirs(root: str):
+    """Every place a run's span files can live under one launcher root:
+    the controller's own lane + shipped host lanes (ctrl/trace), per-job
+    controller workdirs (ctrl/<jobNNNN>/trace), and the hosts' LOCAL trace
+    dirs — including namespace subdirs — which cover lines a host never
+    got to ship (same-box and shared-fs deployments see them directly)."""
+    pats = ("ctrl/trace", "ctrl/*/trace", "host*/trace", "host*/*/trace")
+    dirs = []
+    for pat in pats:
+        dirs.extend(sorted(glob.glob(os.path.join(root, pat))))
+    return [d for d in dirs if os.path.isdir(d)]
+
+
+def _merge_run_trace(root: str, out: str) -> int:
+    dirs = _trace_dirs(root)
+    events = merge_traces(dirs)
+    if not events:
+        print(f"no trace events under {root} — was the run started with "
+              "--trace (or REPRO_TRACE=1)?", file=sys.stderr)
+        return 1
+    warns = validate_timeline(events)
+    for w in warns[:20]:
+        print(f"[trace-warn] {w}", file=sys.stderr)
+    if len(warns) > 20:
+        print(f"[trace-warn] ... {len(warns) - 20} more", file=sys.stderr)
+    path = os.path.abspath(out) if out else os.path.join(
+        root, "ctrl", "trace_merged.json")
+    write_perfetto(events, path)
+    lanes = {(e.get("host"), e.get("pid")) for e in events}
+    print(f"[trace] {len(events)} events across {len(lanes)} process "
+          f"lane(s) -> {path}")
+    durs = phase_durations(events)
+    if durs:
+        width = max(len(n) for n in durs)
+        for name in sorted(durs, key=durs.get, reverse=True):
+            print(f"  {name:<{width}}  {durs[name]:9.3f}s")
+        print(f"  {'[sum of phases]':<{width}}  {sum(durs.values()):9.3f}s")
     return 0
+
+
+def cmd_trace(args) -> int:
+    return _merge_run_trace(os.path.abspath(args.workdir), args.out)
+
+
+def _fmt_status_table(st: dict) -> str:
+    """Compact per-host fleet table from the status RPC's hosts_live view."""
+    rows = [f"{'host':>4}  {'phase':<34} {'queue':>5} {'infl':>4} "
+            f"{'done':>5} {'busy_s':>8} {'hb_age':>6} {'MB_rd':>8} "
+            f"{'MB_wr':>8} {'MB_wire':>8} {'stall_s':>7}"]
+    for hid in sorted(st.get("hosts_live", {}), key=int):
+        h = st["hosts_live"][hid]
+        m = h.get("metrics", {})
+        io, stalls, wire = (m.get("io", {}), m.get("stalls", {}),
+                            m.get("wire", {}))
+        age = h.get("heartbeat_age_s")
+        wire_mb = (wire.get("bytes_sent", 0) + wire.get("bytes_recv", 0)) / 1e6
+        stall = stalls.get("read_wait_s", 0.0) + stalls.get("write_wait_s", 0.0)
+        rows.append(
+            f"{hid:>4}  {(h.get('phase') or '-')[:34]:<34} "
+            f"{h.get('queue', 0):>5} {h.get('inflight', 0):>4} "
+            f"{h.get('tasks_done', 0):>5} {h.get('busy_seconds', 0.0):>8.1f} "
+            f"{('-' if age is None else f'{age:.0f}'):>6} "
+            f"{io.get('bytes_read', 0) / 1e6:>8.1f} "
+            f"{io.get('bytes_written', 0) / 1e6:>8.1f} "
+            f"{wire_mb:>8.1f} {stall:>7.2f}")
+    rows.append(f"steals={st.get('steals', 0)} "
+                f"rebalance_armed={st.get('rebalance_requested', False)} "
+                f"map_v{st.get('map', {}).get('version', 0)}")
+    return "\n".join(rows)
+
+
+def cmd_status(args) -> int:
+    addr = _ctrl_addr(args)
+    if not args.watch:
+        print(json.dumps(_admin_request(addr, {"cmd": "status"}),
+                         indent=1, sort_keys=True))
+        return 0
+    try:
+        while True:
+            st = _admin_request(addr, {"cmd": "status"})
+            # ANSI clear + home keeps the table in place like `watch(1)`.
+            sys.stdout.write("\x1b[2J\x1b[H" + _fmt_status_table(st) + "\n")
+            sys.stdout.flush()
+            time.sleep(max(0.2, args.interval))
+    except KeyboardInterrupt:
+        return 0
+    except (OSError, ClusterError):
+        print("controller gone; exiting watch", file=sys.stderr)
+        return 0
 
 
 def cmd_rebalance(args) -> int:
@@ -409,6 +544,11 @@ def main(argv=None) -> int:
     r.add_argument("--rebalance", action="store_true",
                    help="rebalance hot bucket shards off straggler hosts "
                         "at every phase barrier (skew-aware shard map)")
+    r.add_argument("--trace", action="store_true",
+                   help="emit spans on every host + the controller and "
+                        "merge them into <ctrl>/trace_merged.json "
+                        "(Perfetto trace-event format) when the run ends; "
+                        "timing-only, outputs stay bit-identical")
     r.set_defaults(fn=cmd_run)
 
     admin = argparse.ArgumentParser(add_help=False)
@@ -418,8 +558,23 @@ def main(argv=None) -> int:
                        help="controller host:port (overrides --workdir)")
 
     st = sub.add_parser("status", parents=[admin],
-                        help="live shard map, bucket loads, host roster")
+                        help="live shard map, bucket loads, host roster, "
+                             "per-host telemetry (--watch for a live view)")
+    st.add_argument("--watch", action="store_true",
+                    help="redraw a compact per-host fleet table until ^C")
+    st.add_argument("--interval", type=float, default=2.0,
+                    help="seconds between --watch polls")
     st.set_defaults(fn=cmd_status)
+
+    tr = sub.add_parser("trace",
+                        help="merge a traced run's span files into one "
+                             "Perfetto-loadable timeline + phase table")
+    tr.add_argument("--workdir", required=True,
+                    help="the run root passed to `run`/`drain`")
+    tr.add_argument("--out", default="",
+                    help="output path (default <workdir>/ctrl/"
+                         "trace_merged.json)")
+    tr.set_defaults(fn=cmd_trace)
 
     rb = sub.add_parser("rebalance", parents=[admin],
                         help="arm a shard rebalance at the next phase "

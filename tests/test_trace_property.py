@@ -1,0 +1,169 @@
+"""Hypothesis property tests for the trace subsystem's timeline laws:
+generated well-nested span trees always validate clean, injected
+violations (negative durations, child overflowing its parent) are always
+caught, merge_traces is a pure function of file CONTENTS (deterministic
+under any partitioning of events into files and any file naming), the
+Perfetto export preserves event counts and never emits negative rebased
+timestamps, and MetricsRegistry.combined is order-insensitive.
+
+Module-level importorskip, same policy as tests/test_cluster_property.py:
+the non-hypothesis twins of the critical cases live in tests/test_trace.py
+so tier-1 keeps coverage even without hypothesis installed.
+"""
+
+import json
+
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.trace import (  # noqa: E402
+    MetricsRegistry,
+    merge_traces,
+    to_perfetto,
+    validate_timeline,
+)
+
+_SETTINGS = dict(max_examples=60, deadline=None)
+
+
+def _span(name, cat, ts, dur, lane=(None, 1, 1)):
+    host, pid, tid = lane
+    rec = {"name": name, "cat": cat, "ph": "X", "ts": float(ts),
+           "dur": float(dur), "pid": pid, "tid": tid}
+    if host is not None:
+        rec["host"] = host
+    return rec
+
+
+@st.composite
+def nested_timelines(draw):
+    """A well-formed lane: top-level phase spans laid end to end, each
+    holding strictly nested kernel children (recursively), plus leaf-cat
+    events sprinkled anywhere (exempt from the nesting law)."""
+    events = []
+
+    def children(t0, t1, depth, prefix):
+        n = draw(st.integers(0, 3 if depth else 0))
+        edges = sorted(draw(st.lists(
+            st.floats(0.0, 1.0, allow_nan=False), min_size=2 * n,
+            max_size=2 * n)))
+        for i in range(n):
+            lo = t0 + (t1 - t0) * edges[2 * i]
+            hi = t0 + (t1 - t0) * edges[2 * i + 1]
+            if hi <= lo:
+                continue
+            events.append(_span(f"{prefix}k{i}", "kernel", lo, hi - lo))
+            children(lo, hi, depth - 1, f"{prefix}k{i}.")
+
+    t = 0.0
+    for p in range(draw(st.integers(0, 4))):
+        dur = draw(st.floats(0.5, 10.0, allow_nan=False))
+        events.append(_span(f"phase{p}", "phase", t, dur))
+        children(t, t + dur, depth=2, prefix=f"p{p}.")
+        t += dur + draw(st.floats(0.0, 1.0, allow_nan=False))
+    for i in range(draw(st.integers(0, 4))):
+        events.append(_span(f"io{i}", "io",
+                            draw(st.floats(0.0, t + 1.0, allow_nan=False)),
+                            draw(st.floats(0.0, 20.0, allow_nan=False))))
+    return events
+
+
+@given(events=nested_timelines())
+@settings(**_SETTINGS)
+def test_well_nested_timelines_validate_clean(events):
+    assert validate_timeline(events) == []
+
+
+@given(events=nested_timelines(), ix=st.integers(0, 2**32),
+       neg=st.floats(-100.0, -0.001, allow_nan=False))
+@settings(**_SETTINGS)
+def test_injected_negative_duration_always_caught(events, ix, neg):
+    events = list(events) + [_span("extra", "io", 0.0, 1.0)]
+    events[ix % len(events)]["dur"] = neg
+    problems = validate_timeline(events)
+    assert any("negative duration" in p for p in problems)
+
+
+@given(events=nested_timelines(), overflow=st.floats(0.1, 50.0,
+                                                     allow_nan=False))
+@settings(**_SETTINGS)
+def test_child_overflowing_parent_always_caught(events, overflow):
+    phases = [e for e in events if e["cat"] == "phase"]
+    if not phases:
+        return
+    p = phases[0]
+    bad = _span("bad_kernel", "kernel", p["ts"] + p["dur"] / 2,
+                p["dur"] / 2 + overflow)
+    problems = validate_timeline(events + [bad])
+    assert any("overflows its parent" in p_ for p_ in problems)
+
+
+@given(events=nested_timelines(), cuts=st.lists(st.integers(0, 2**32),
+                                                max_size=3),
+       seed=st.randoms(use_true_random=False))
+@settings(**_SETTINGS)
+def test_merge_is_invariant_under_file_partitioning(tmp_path_factory,
+                                                    events, cuts, seed):
+    """However the same events are split across per-process files — and
+    whatever those files are named — the merged timeline is identical."""
+    shuffled = list(events)
+    seed.shuffle(shuffled)
+    bounds = sorted({c % (len(events) + 1) for c in cuts})
+    parts, prev = [], 0
+    for b in bounds + [len(events)]:
+        parts.append(shuffled[prev:b])
+        prev = b
+    d1 = tmp_path_factory.mktemp("one")
+    d2 = tmp_path_factory.mktemp("parts")
+    with open(d1 / "trace_1.jsonl", "w") as f:
+        for e in events:
+            f.write(json.dumps(e) + "\n")
+    for i, part in enumerate(parts):
+        with open(d2 / f"trace_{i + 100}.jsonl", "w") as f:
+            for e in part:
+                f.write(json.dumps(e) + "\n")
+    merged_one = merge_traces([str(d1)])
+    merged_parts = merge_traces([str(d2)])
+    assert merged_parts == merged_one
+    # and the merge is genuinely sorted by ts
+    ts = [e["ts"] for e in merged_one]
+    assert ts == sorted(ts)
+
+
+@given(events=nested_timelines())
+@settings(**_SETTINGS)
+def test_perfetto_export_preserves_events_and_rebases(events):
+    doc = to_perfetto(events)
+    evs = [e for e in doc["traceEvents"] if e["ph"] != "M"]
+    assert len(evs) == len(events)
+    assert all(e["ts"] >= 0 for e in evs)
+    assert all(e["dur"] >= 0 for e in evs if e["ph"] == "X")
+    if evs:
+        assert min(e["ts"] for e in evs) == 0
+
+
+@given(snaps=st.lists(
+    st.tuples(st.sampled_from(["a", "b", "c", "d"]),
+              st.fixed_dictionaries({
+                  "schema": st.just(1),
+                  "io": st.dictionaries(
+                      st.sampled_from(["bytes_read", "bytes_written"]),
+                      st.integers(0, 1 << 40)),
+                  "memory": st.fixed_dictionaries(
+                      {"peak_rows": st.integers(0, 1 << 20),
+                       "budget_rows": st.integers(0, 1 << 20)}),
+              })),
+    max_size=8))
+@settings(**_SETTINGS)
+def test_registry_combined_is_order_insensitive(snaps):
+    fwd, rev = MetricsRegistry(), MetricsRegistry()
+    for name, snap in snaps:
+        fwd.update(name, snap)
+    for name, snap in reversed(snaps):
+        rev.update(name, snap)
+    if [n for n, _ in snaps] == [n for n, _ in dict(snaps).items()]:
+        # no duplicate names: order can't matter at all
+        assert fwd.combined() == rev.combined()
+    assert fwd.combined()["schema"] == 1
